@@ -1,0 +1,97 @@
+//! Extending the Parallelism Library (paper Figure 1B): register a custom
+//! user technique — Megatron-style tensor parallelism — next to the four
+//! built-ins and watch the Solver adopt it where it wins.
+//!
+//! This is the paper's headline API affordance: techniques are black boxes
+//! behind `search`/`execute`, reusable across sessions and users.
+//!
+//! Run: `cargo run --release --example custom_parallelism`
+
+use saturn::cluster::ClusterSpec;
+use saturn::models::ModelSpec;
+use saturn::parallelism::{default_library, Library, Parallelism, StepEstimate};
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::trials::profile_analytic;
+use saturn::workload::wikitext_workload;
+
+/// Megatron-LM tensor parallelism (Shoeybi et al. 2019), simplified:
+/// every matmul shards across g GPUs; two all-reduces per layer per pass.
+struct TensorParallel {
+    mfu: f64,
+}
+
+impl Parallelism for TensorParallel {
+    fn name(&self) -> &str {
+        "megatron-tp"
+    }
+
+    fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+              batch: u32) -> Option<StepEstimate> {
+        if gpus == 0 || gpus > cluster.node.gpus_per_node {
+            return None; // TP stays inside the NVLink domain
+        }
+        if model.hidden % gpus as u32 != 0 {
+            return None;
+        }
+        let mem = model.state_bytes() / gpus as f64
+            + model.act_bytes_per_sample * batch as f64; // acts replicated
+        if mem > cluster.node.gpu.usable_bytes() {
+            return None;
+        }
+        let compute = model.flops_per_step(batch)
+            / (gpus as f64 * cluster.node.gpu.peak_flops * self.mfu);
+        // 4 all-reduces/layer (fwd+bwd) over activations
+        let act_bytes = model.act_bytes_per_sample * batch as f64
+            / model.layers as f64;
+        let comm = if gpus == 1 {
+            0.0
+        } else {
+            4.0 * model.layers as f64 * 2.0 * (gpus as f64 - 1.0)
+                / gpus as f64 * act_bytes / cluster.node.intra_bw
+        };
+        let step = compute + 0.5 * comm;
+        Some(StepEstimate { step_time_s: step, mem_per_gpu: mem,
+                            mfu: self.mfu * compute / step })
+    }
+}
+
+fn plan_with(library: &Library) -> (f64, Vec<(String, u32)>) {
+    let jobs = wikitext_workload();
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_analytic(&jobs, library, &cluster);
+    let remaining: Vec<(usize, u64)> =
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
+                                SolverMode::Joint);
+    let picks = plan
+        .choices
+        .iter()
+        .map(|p| (library.get(p.tech).name().to_string(), p.gpus))
+        .collect();
+    (plan.predicted_makespan_s, picks)
+}
+
+fn main() {
+    saturn::util::logging::init();
+
+    let baseline = default_library();
+    let (m0, _) = plan_with(&baseline);
+    println!("built-in library {:?}", baseline.names());
+    println!("  predicted makespan: {:.2} h", m0 / 3600.0);
+
+    // registerParallelism(technique) — two functions and you're in.
+    let mut extended = default_library();
+    extended.register(Box::new(TensorParallel { mfu: 0.42 }));
+    let (m1, picks) = plan_with(&extended);
+    println!("\nextended library {:?}", extended.names());
+    println!("  predicted makespan: {:.2} h", m1 / 3600.0);
+
+    let tp_uses = picks.iter().filter(|(n, _)| n == "megatron-tp").count();
+    println!("  jobs assigned to megatron-tp: {tp_uses}/12");
+    println!("\nmakespan delta from one registered technique: {:+.1}%",
+             100.0 * (m1 - m0) / m0);
+    if tp_uses > 0 {
+        println!("the solver adopted the user technique where it wins — no \
+                  scheduler changes required.");
+    }
+}

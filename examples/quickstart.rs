@@ -1,0 +1,62 @@
+//! Quickstart: walk Saturn's Figure 1A dataflow end to end on a simulated
+//! single p4d node.
+//!
+//!   workload (Table 1 grid) -> Parallelism Library -> Trial Runner
+//!   -> joint Solver -> execution engine -> makespan report
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::saturn::SaturnPolicy;
+use saturn::sim::engine::{simulate, SimConfig};
+use saturn::trials::profile_analytic;
+use saturn::workload::wikitext_workload;
+
+fn main() {
+    saturn::util::logging::init();
+
+    // 1. The multi-job: a model-selection grid (paper Table 1, WikiText).
+    let jobs = wikitext_workload();
+    println!("multi-job: {} fine-tuning jobs", jobs.len());
+    for j in jobs.iter().take(3) {
+        println!("  {} ({:.1}B params, {} steps)", j.name,
+                 j.model.params / 1e9, j.total_steps());
+    }
+    println!("  ...");
+
+    // 2. The Parallelism Library (Figure 1B): four registered techniques.
+    let library = default_library();
+    println!("\nparallelism library: {:?}", library.names());
+
+    // 3. The Trial Runner profiles every (job, technique, GPU count).
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_analytic(&jobs, &library, &cluster);
+    println!("trial runner: {} feasible profiles (simulated probe cost: {:.0}s)",
+             profiles.len(), profiles.profiling_cost_s);
+
+    // 4. The Solver: joint MILP over parallelism x allocation x schedule.
+    let remaining: Vec<(usize, u64)> =
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    let (plan, stats) = solve_joint(&remaining, &profiles, &cluster,
+                                    SolverMode::Joint);
+    println!("\njoint plan ({} B&B nodes in {:.0} ms):", stats.milp_nodes,
+             stats.wall_s * 1e3);
+    for p in &plan.choices {
+        println!("  {:<24} -> {:<8} x{} GPUs ({:.1} h)",
+                 jobs[p.job_id].name, library.get(p.tech).name(), p.gpus,
+                 p.runtime_s / 3600.0);
+    }
+
+    // 5. Execute under the engine (with introspection) and report.
+    let mut policy = SaturnPolicy::paper_default();
+    let result = simulate(&jobs, &profiles, &cluster, &mut policy,
+                          &SimConfig::default());
+    println!("\nmakespan: {:.2} h (predicted {:.2} h, lower bound {:.2} h)",
+             result.makespan_s / 3600.0, plan.predicted_makespan_s / 3600.0,
+             plan.lower_bound_s / 3600.0);
+    println!("gpu utilization: {:.0}% | launches: {} | preemptions: {}",
+             result.gpu_utilization * 100.0, result.launches,
+             result.preemptions);
+}

@@ -1,0 +1,138 @@
+"""AOT lowering: JAX train/eval/init functions -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime/``) loads the text with ``HloModuleProto::from_text_file``
+compiles on the PJRT CPU client, and executes. Python never runs again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs:
+  artifacts/<name>.hlo.txt   one per (kind x model x batch)
+  artifacts/manifest.json    machine-readable index consumed by Rust
+
+Set ``SATURN_AOT_FULL=1`` to also emit the `base` (~29M param) artifacts.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _tensor_spec(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def lower_artifacts(cfg: M.ModelConfig, batch_sizes, out_dir):
+    """Lower init/train/eval for one model config; return manifest entries."""
+    P = M.padded_param_count(cfg)
+    entries = []
+
+    def dump(name, lowered, inputs, outputs, kind, bs=None):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name, "file": fname, "kind": kind, "model": cfg.name,
+            "batch": bs, "seq": cfg.seq, "vocab": cfg.vocab,
+            "d_model": cfg.d_model, "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+            "param_count": M.param_count(cfg), "padded_params": P,
+            "flops_per_step": M.flops_per_step(cfg, bs) if bs else 0.0,
+            "inputs": inputs, "outputs": outputs,
+        })
+        print(f"  wrote {fname} ({len(text)/1e6:.1f} MB)")
+
+    flat_spec = jax.ShapeDtypeStruct((P,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    init = jax.jit(lambda seed: M.init_params(cfg, seed))
+    dump(f"init_{cfg.name}",
+         init.lower(jax.ShapeDtypeStruct((), jnp.int32)),
+         [_tensor_spec("seed", "i32", ())],
+         [_tensor_spec("flat", "f32", (P,))], "init")
+
+    for bs in batch_sizes:
+        tok_spec = jax.ShapeDtypeStruct((bs, cfg.seq), jnp.int32)
+        train = jax.jit(M.make_train_step(cfg),
+                        donate_argnums=(0, 1, 2))  # reuse param/opt buffers
+        dump(f"train_{cfg.name}_bs{bs}",
+             train.lower(flat_spec, flat_spec, flat_spec, scalar, scalar,
+                         tok_spec),
+             [_tensor_spec("flat", "f32", (P,)),
+              _tensor_spec("m", "f32", (P,)),
+              _tensor_spec("v", "f32", (P,)),
+              _tensor_spec("step", "f32", ()),
+              _tensor_spec("lr", "f32", ()),
+              _tensor_spec("tokens", "i32", (bs, cfg.seq))],
+             [_tensor_spec("flat", "f32", (P,)),
+              _tensor_spec("m", "f32", (P,)),
+              _tensor_spec("v", "f32", (P,)),
+              _tensor_spec("loss", "f32", ())], "train", bs)
+
+    bs = batch_sizes[0]
+    tok_spec = jax.ShapeDtypeStruct((bs, cfg.seq), jnp.int32)
+    evalf = jax.jit(M.make_eval_step(cfg))
+    dump(f"eval_{cfg.name}_bs{bs}",
+         evalf.lower(flat_spec, tok_spec),
+         [_tensor_spec("flat", "f32", (P,)),
+          _tensor_spec("tokens", "i32", (bs, cfg.seq))],
+         [_tensor_spec("loss", "f32", ())], "eval", bs)
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated config names (default: tiny,small"
+                         " [+base with SATURN_AOT_FULL=1])")
+    args = ap.parse_args()
+
+    plan = {"tiny": [8], "small": [8, 16]}
+    if os.environ.get("SATURN_AOT_FULL") == "1":
+        plan["base"] = [8]
+    if args.models:
+        names = args.models.split(",")
+        plan = {n: plan.get(n, [8]) for n in names}
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for name, batches in plan.items():
+        cfg = M.CONFIGS[name]
+        print(f"lowering {name}: P={M.padded_param_count(cfg)} "
+              f"({M.param_count(cfg)} real params)")
+        entries += lower_artifacts(cfg, batches, args.out)
+
+    manifest = {
+        "version": 1,
+        "pad_multiple": M.PAD_MULTIPLE,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

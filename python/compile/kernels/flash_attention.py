@@ -1,0 +1,345 @@
+"""L1 Pallas kernel: causal flash attention (forward + backward).
+
+This is the compute hot-spot of Saturn's transformer workloads. The paper's
+evaluation models (GPT-2 / GPT-J / ViT) are attention-dominated; on the
+authors' A100 testbed the hot path is a CUDA fused-attention kernel. Per the
+hardware-adaptation rule we re-think it for the TPU execution model instead
+of porting warp-level code:
+
+  * HBM <-> VMEM staging is expressed with ``BlockSpec`` + a 4-D grid
+    ``(batch, head, q_block, k_block)`` instead of CUDA threadblocks.
+  * The score matrix ``S = QK^T`` is never materialized in HBM: each
+    ``(block_q, block_k)`` tile lives in VMEM scratch, and the online
+    softmax carry (m, l, acc) persists across the sequential ``k_block``
+    grid axis -- the Pallas-TPU idiom for a reduction loop.
+  * Tiles default to MXU-friendly multiples (128 lanes); for the short
+    sequences used in CPU-interpret tests any divisor of ``seq`` works.
+
+``interpret=True`` is mandatory in this repo: real TPU lowering emits a
+Mosaic custom-call which the CPU PJRT plugin (and the rust ``xla`` crate)
+cannot execute. Interpret mode lowers to plain HLO, so the kernel rides
+along inside the AOT ``train_step`` artifact executed from Rust.
+
+Correctness oracle: ``ref.attention_ref`` (pure jnp) -- see
+``python/tests/test_kernels.py``.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _pick_block(seq_len: int, preferred: int) -> int:
+    """Largest divisor of ``seq_len`` that is <= preferred (tiles must tile)."""
+    b = min(preferred, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, sm_scale, block_q, block_k, causal):
+    i = pl.program_id(2)  # q block index
+    j = pl.program_id(3)  # k block index (sequential reduction axis)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal: block (i, j) contributes iff some q row >= some k col, i.e.
+    # j*block_k <= i*block_q + block_q - 1.
+    live = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        # Guard fully-masked rows (cannot happen for causal self-attn, but
+        # keeps the kernel total for padded inputs).
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(safe_l)).astype(lse_ref.dtype)
+
+
+def _flash_fwd(q, k, v, *, sm_scale, block_q, block_k, causal):
+    batch, heads, seq, dim = q.shape
+    bq = _pick_block(seq, block_q)
+    bk = _pick_block(seq, block_k)
+    nq, nk = seq // bq, seq // bk
+    grid = (batch, heads, nq, nk)
+
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, sm_scale=sm_scale, block_q=bq,
+                          block_k=bk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dim), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dim), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, dim), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dim), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((batch, heads, seq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dim), jnp.float32),  # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum l
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels: dK/dV sweep (grid over k blocks) and dQ sweep.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc,
+                    *, sm_scale, block_q, block_k, causal):
+    j = pl.program_id(2)  # k block (outer)
+    i = pl.program_id(3)  # q block (sequential reduction axis)
+    nq = pl.num_programs(3)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    live = (i * block_q + block_q - 1 >= j * block_k) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)      # (bq,)
+        delta = delta_ref[0, 0].astype(jnp.float32)  # (bq,)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # (bq, bk)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_acc, *, sm_scale, block_q, block_k, causal):
+    i = pl.program_id(2)  # q block (outer)
+    j = pl.program_id(3)  # k block (sequential reduction axis)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    live = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)
+        delta = delta_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd(res, do, *, sm_scale, block_q, block_k, causal):
+    q, k, v, out, lse = res
+    batch, heads, seq, dim = q.shape
+    bq = _pick_block(seq, block_q)
+    bk = _pick_block(seq, block_k)
+    nq, nk = seq // bq, seq // bk
+
+    # delta_i = rowsum(dO * O): O(S*d) elementwise, cheap -> plain jnp so it
+    # fuses into the surrounding HLO.
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    q_spec = pl.BlockSpec((1, 1, bq, dim), lambda b, h, j, i: (b, h, i, 0))
+    k_spec = pl.BlockSpec((1, 1, bk, dim), lambda b, h, j, i: (b, h, j, 0))
+    row_spec = pl.BlockSpec((1, 1, bq), lambda b, h, j, i: (b, h, i))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, sm_scale=sm_scale, block_q=bq,
+                          block_k=bk, causal=causal),
+        grid=(batch, heads, nk, nq),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, row_spec, row_spec],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, dim), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, dim), lambda b, h, j, i: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, dim), jnp.float32),
+            pltpu.VMEM((bk, dim), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    q_spec2 = pl.BlockSpec((1, 1, bq, dim), lambda b, h, i, j: (b, h, i, 0))
+    k_spec2 = pl.BlockSpec((1, 1, bk, dim), lambda b, h, i, j: (b, h, j, 0))
+    row_spec2 = pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i))
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, sm_scale=sm_scale, block_q=bq,
+                          block_k=bk, causal=causal),
+        grid=(batch, heads, nq, nk),
+        in_specs=[q_spec2, k_spec2, k_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=pl.BlockSpec((1, 1, bq, dim), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dim), jnp.float32)],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API: differentiable flash attention.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, sm_scale=None, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K, causal=True):
+    """Causal multi-head flash attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+      sm_scale: softmax scale; defaults to ``1/sqrt(head_dim)``.
+      block_q, block_k: preferred VMEM tile sizes (clamped to divisors of
+        ``seq``).
+      causal: apply a causal mask.
+
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    out, _ = _flash_fwd(q, k, v, sm_scale=sm_scale, block_q=block_q,
+                        block_k=block_k, causal=causal)
+    return out
+
+
+def _vjp_fwd(q, k, v, sm_scale, block_q, block_k, causal):
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    out, lse = _flash_fwd(q, k, v, sm_scale=sm_scale, block_q=block_q,
+                          block_k=block_k, causal=causal)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(sm_scale, block_q, block_k, causal, res, do):
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(res[0].shape[-1])
+    return _flash_bwd(res, do, sm_scale=sm_scale, block_q=block_q,
+                      block_k=block_k, causal=causal)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def flash_attention_with_lse(q, k, v, sm_scale=None,
+                             block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                             causal=True):
+    """Non-differentiable variant that also returns the logsumexp rows."""
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    return _flash_fwd(q, k, v, sm_scale=sm_scale, block_q=block_q,
+                      block_k=block_k, causal=causal)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int) -> int:
+    """Estimated per-core VMEM bytes for the forward kernel (f32).
+
+    Used by DESIGN.md / the L1 perf pass: q tile + k tile + v tile + acc
+    scratch + (m, l) carries + o tile. The S=QK^T tile is a register-level
+    temporary of the same order as acc; we count it once.
+    """
+    f32 = 4
+    tiles = (block_q * head_dim      # q
+             + 2 * block_k * head_dim  # k, v
+             + 2 * block_q * head_dim  # acc scratch + o tile
+             + block_q * block_k       # s/p tile
+             + 2 * block_q)            # m, l
+    return tiles * f32

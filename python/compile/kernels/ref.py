@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal of the build path: pytest asserts the
+Pallas kernels match these references across shape/dtype sweeps (see
+``python/tests/test_kernels.py``), and the L2 model has a ``use_kernels=False``
+mode wired to these for end-to-end cross-checks.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, sm_scale=None, causal=True):
+    """Naive softmax attention; materializes the full score matrix."""
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        seq_q, seq_k = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def adamw_ref(params, grads, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+              eps=1e-8, weight_decay=0.01):
+    """Reference decoupled AdamW step (1-based ``step``)."""
+    p32, g32 = params.astype(jnp.float32), grads.astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g32
+    v_new = beta2 * v + (1.0 - beta2) * g32 * g32
+    alpha = lr * jnp.sqrt(1.0 - beta2 ** step) / (1.0 - beta1 ** step)
+    update = alpha * m_new / (jnp.sqrt(v_new) + eps) + lr * weight_decay * p32
+    return (p32 - update).astype(params.dtype), m_new, v_new

@@ -1,0 +1,216 @@
+"""L2: GPT-mini transformer LM in pure JAX, calling the L1 Pallas kernels.
+
+This is the *real* training workload that Saturn's Trial Runner profiles and
+the Rust runtime executes. The paper's evaluation models (GPT-2 1.5B, GPT-J
+6B, ViT-G, ResNet-200) are represented at paper scale by analytic specs in
+``rust/src/models/``; this module provides the runnable counterparts at
+CPU-tractable sizes so the whole stack (profile -> solve -> schedule ->
+train) executes for real in ``examples/e2e_train.rs``.
+
+Design notes for the Rust boundary:
+
+  * **Flat parameter vector.** All parameters live in one f32 vector
+    (padded to a block multiple). Rust never needs to know the pytree:
+    ``train_step`` has a fixed 6-tensor signature and the optimizer state is
+    two more flat vectors. Unflattening uses static ``lax.slice`` so it
+    compiles to views inside the fused step.
+  * **Runtime learning rate.** ``lr`` and ``step`` are runtime scalars, so
+    ONE compiled artifact serves the entire HPO grid (every LR in Table 1).
+    Batch size and sequence length are shape-static, hence per-(model,bs)
+    artifacts.
+  * Everything lowers through ``aot.py`` to HLO *text* (never proto) --
+    see /opt/xla-example/README.md for the 64-bit-id gotcha.
+
+Signatures (all tensors f32 unless noted):
+
+  train_step(flat[P], m[P], v[P], step[], lr[], tokens i32[B,S])
+      -> (flat'[P], m'[P], v'[P], loss[])
+  eval_step(flat[P], tokens i32[B,S]) -> loss[]
+  init_params(seed) -> flat[P]
+"""
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_adamw import adamw_sched, adamw_update
+from compile.kernels.layernorm import layernorm
+from compile.kernels import ref
+
+PAD_MULTIPLE = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters of a GPT-mini variant."""
+    name: str
+    vocab: int = 512
+    seq: int = 64
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    use_kernels: bool = True  # False -> pure-jnp reference path (testing)
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+# CPU-tractable variants. `base` (~29M params) is the "100M-class" stand-in
+# for the paper's fine-tuning workloads; `tiny`/`small` keep tests and the
+# default e2e example fast on a 2-core CPU testbed.
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", seq=64, d_model=128, n_head=4, n_layer=2),
+    "small": ModelConfig("small", seq=128, d_model=256, n_head=8, n_layer=4),
+    "base": ModelConfig("base", seq=128, d_model=512, n_head=8, n_layer=8),
+}
+
+
+def param_layout(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Fixed (name, shape) order defining the flat vector layout."""
+    d, ff = cfg.d_model, cfg.d_ff
+    layout = [("wte", (cfg.vocab, d)), ("wpe", (cfg.seq, d))]
+    for l in range(cfg.n_layer):
+        layout += [
+            (f"h{l}.ln1_g", (d,)), (f"h{l}.ln1_b", (d,)),
+            (f"h{l}.wqkv", (d, 3 * d)), (f"h{l}.wo", (d, d)),
+            (f"h{l}.ln2_g", (d,)), (f"h{l}.ln2_b", (d,)),
+            (f"h{l}.w1", (d, ff)), (f"h{l}.b1", (ff,)),
+            (f"h{l}.w2", (ff, d)), (f"h{l}.b2", (d,)),
+        ]
+    layout += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return layout
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(math.prod(s)) for _, s in param_layout(cfg))
+
+
+def padded_param_count(cfg: ModelConfig) -> int:
+    n = param_count(cfg)
+    return ((n + PAD_MULTIPLE - 1) // PAD_MULTIPLE) * PAD_MULTIPLE
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    """Static-slice the flat vector into named parameter views."""
+    params = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        n = int(math.prod(shape))
+        params[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, seed) -> jax.Array:
+    """GPT-2-style init into the flat (padded) vector. jit-compatible."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_layout(cfg):
+        key, sub = jax.random.split(key)
+        n = int(math.prod(shape))
+        base = name.split(".")[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            chunks.append(jnp.ones((n,), jnp.float32))
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        else:
+            scale = 0.02
+            if base in ("wo", "w2"):  # residual-branch scaling
+                scale = 0.02 / math.sqrt(2 * cfg.n_layer)
+            chunks.append(scale * jax.random.normal(sub, (n,), jnp.float32))
+    flat = jnp.concatenate(chunks)
+    pad = padded_param_count(cfg) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+
+
+def _ln(cfg, x, g, b):
+    if cfg.use_kernels:
+        return layernorm(x, g, b)
+    return ref.layernorm_ref(x, g, b)
+
+
+def _attn(cfg, x, p, l):
+    bsz, seq, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+    qkv = x @ p[f"h{l}.wqkv"]  # (B,S,3d)
+    qkv = qkv.reshape(bsz, seq, 3, h, hd).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]  # (B,H,S,hd)
+    if cfg.use_kernels:
+        o = flash_attention(q, k, v)
+    else:
+        o = ref.attention_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+    return o @ p[f"h{l}.wo"]
+
+
+def _mlp(cfg, x, p, l):
+    hdn = jax.nn.gelu(x @ p[f"h{l}.w1"] + p[f"h{l}.b1"])
+    return hdn @ p[f"h{l}.w2"] + p[f"h{l}.b2"]
+
+
+def forward(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Token ids ``(B,S)`` -> logits ``(B,S,V)`` (embedding tied)."""
+    p = unflatten(cfg, flat)
+    x = p["wte"][tokens] + p["wpe"][None, :, :]
+    for l in range(cfg.n_layer):
+        x = x + _attn(cfg, _ln(cfg, x, p[f"h{l}.ln1_g"], p[f"h{l}.ln1_b"]), p, l)
+        x = x + _mlp(cfg, _ln(cfg, x, p[f"h{l}.ln2_g"], p[f"h{l}.ln2_b"]), p, l)
+    x = _ln(cfg, x, p["lnf_g"], p["lnf_b"])
+    return x @ p["wte"].T
+
+
+def loss_fn(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy over ``(B, S-1)`` positions."""
+    logits = forward(cfg, flat, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat, m, v, step, lr, tokens,
+               *, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01):
+    """One fused fwd+bwd+AdamW step. ``step`` is the 1-based step (f32)."""
+    loss, grads = jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens))(flat)
+    sched = adamw_sched(lr, step, beta1=beta1, beta2=beta2,
+                        weight_decay=weight_decay)
+    if cfg.use_kernels:
+        new_flat, new_m, new_v = adamw_update(
+            flat, grads, m, v, sched, beta1=beta1, beta2=beta2, eps=eps)
+    else:
+        new_flat, new_m, new_v = ref.adamw_ref(
+            flat, grads, m, v, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+            weight_decay=weight_decay)
+    return new_flat, new_m, new_v, loss
+
+
+def eval_step(cfg: ModelConfig, flat, tokens):
+    return loss_fn(cfg, flat, tokens)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Bind the config; returns ``f(flat, m, v, step, lr, tokens)``."""
+    return functools.partial(train_step, cfg)
+
+
+def make_eval_step(cfg: ModelConfig):
+    return functools.partial(eval_step, cfg)
+
+
+def flops_per_step(cfg: ModelConfig, batch: int) -> float:
+    """Approximate training FLOPs (fwd+bwd ~= 3x fwd, 2 FLOPs/MAC)."""
+    tokens = batch * cfg.seq
+    dense = 2 * param_count(cfg) * tokens       # fwd matmuls
+    attn = 2 * 2 * cfg.n_layer * tokens * cfg.seq * cfg.d_model  # QK^T + PV
+    return 3.0 * (dense + attn)

@@ -1,0 +1,218 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes per the build contract; every assertion is
+an ``assert_allclose`` against the reference implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import (
+    flash_attention, flash_attention_with_lse, vmem_footprint_bytes)
+from compile.kernels.fused_adamw import adamw_sched, adamw_update
+from compile.kernels.layernorm import layernorm
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _qkv(seed, b, h, s, d, dtype=jnp.float32):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return [jax.random.normal(k, (b, h, s, d), dtype) for k in keys]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttentionForward:
+    @settings(**SETTINGS)
+    @given(b=st.integers(1, 3), h=st.sampled_from([1, 2, 4]),
+           s=st.sampled_from([16, 64, 96, 128]),
+           d=st.sampled_from([8, 16, 32, 64]),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref_causal(self, b, h, s, d, seed):
+        q, k, v = _qkv(seed, b, h, s, d)
+        out = flash_attention(q, k, v)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(s=st.sampled_from([32, 64, 128]), seed=st.integers(0, 2**16))
+    def test_matches_ref_noncausal(self, s, seed):
+        q, k, v = _qkv(seed, 2, 2, s, 16)
+        out = flash_attention(q, k, v, None, 64, 64, False)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (128, 128)])
+    def test_block_size_invariance(self, bq, bk):
+        q, k, v = _qkv(3, 2, 2, 128, 32)
+        out = flash_attention(q, k, v, None, bq, bk, True)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_non_divisible_block_clamps(self):
+        # seq=96 does not divide the default 64-block; _pick_block clamps.
+        q, k, v = _qkv(4, 1, 2, 96, 16)
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_custom_scale(self):
+        q, k, v = _qkv(5, 1, 1, 64, 16)
+        out = flash_attention(q, k, v, 0.5)
+        want = ref.attention_ref(q, k, v, sm_scale=0.5)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_lse_matches_ref(self):
+        q, k, v = _qkv(6, 1, 2, 64, 16)
+        _, lse = flash_attention_with_lse(q, k, v)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(16)
+        mask = jnp.tril(jnp.ones((64, 64), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+        want = jax.scipy.special.logsumexp(s, axis=-1)
+        np.testing.assert_allclose(lse, want, atol=2e-5, rtol=2e-5)
+
+    def test_under_jit_and_vmap_compat(self):
+        q, k, v = _qkv(7, 2, 2, 64, 16)
+        out = jax.jit(flash_attention)(q, k, v)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttentionBackward:
+    @settings(**SETTINGS)
+    @given(s=st.sampled_from([32, 64, 128]), d=st.sampled_from([8, 32]),
+           seed=st.integers(0, 2**16))
+    def test_grads_match_ref(self, s, d, seed):
+        q, k, v = _qkv(seed, 2, 2, s, d)
+
+        def f(att):
+            def loss(q, k, v):
+                return jnp.sum(jnp.tanh(att(q, k, v)))
+            return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+        got = f(flash_attention)
+        want = f(ref.attention_ref)
+        for g, w, n in zip(got, want, "qkv"):
+            np.testing.assert_allclose(g, w, atol=5e-5, rtol=5e-5,
+                                       err_msg=f"d{n}")
+
+    def test_grads_noncausal(self):
+        q, k, v = _qkv(11, 1, 2, 64, 16)
+        f = lambda q, k, v: jnp.sum(
+            flash_attention(q, k, v, None, 64, 64, False) ** 2)
+        fr = lambda q, k, v: jnp.sum(
+            ref.attention_ref(q, k, v, causal=False) ** 2)
+        got = jax.grad(f, (0, 1, 2))(q, k, v)
+        want = jax.grad(fr, (0, 1, 2))(q, k, v)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, atol=5e-5, rtol=5e-5)
+
+    def test_grad_through_jit(self):
+        q, k, v = _qkv(12, 1, 1, 32, 8)
+        g = jax.jit(jax.grad(lambda q: jnp.sum(flash_attention(q, k, v))))(q)
+        gr = jax.grad(lambda q: jnp.sum(ref.attention_ref(q, k, v)))(q)
+        np.testing.assert_allclose(g, gr, atol=5e-5, rtol=5e-5)
+
+
+def test_vmem_footprint_model():
+    # DESIGN.md L1 target: default tile fits comfortably in 16 MiB VMEM.
+    assert vmem_footprint_bytes(128, 128, 64) < 2 * 1024 * 1024
+    assert vmem_footprint_bytes(128, 128, 128) < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+class TestLayerNorm:
+    @settings(**SETTINGS)
+    @given(rows=st.sampled_from([1, 7, 64, 200]),
+           d=st.sampled_from([16, 128, 256]),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, rows, d, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (rows, d)) * 3 + 1
+        g = jax.random.normal(ks[1], (d,)) * 0.2 + 1
+        b = jax.random.normal(ks[2], (d,)) * 0.2
+        np.testing.assert_allclose(layernorm(x, g, b),
+                                   ref.layernorm_ref(x, g, b),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_3d_input(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (4, 32, 64))
+        g = jnp.ones(64)
+        b = jnp.zeros(64)
+        np.testing.assert_allclose(layernorm(x, g, b),
+                                   ref.layernorm_ref(x, g, b),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_grads_match_ref(self):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        x = jax.random.normal(ks[0], (16, 32))
+        g = jax.random.normal(ks[1], (32,)) * 0.1 + 1
+        b = jax.random.normal(ks[2], (32,)) * 0.1
+        f = lambda x, g, b: jnp.sum(jnp.sin(layernorm(x, g, b)))
+        fr = lambda x, g, b: jnp.sum(jnp.sin(ref.layernorm_ref(x, g, b)))
+        got = jax.grad(f, (0, 1, 2))(x, g, b)
+        want = jax.grad(fr, (0, 1, 2))(x, g, b)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(gg, ww, atol=1e-4, rtol=1e-4)
+
+    def test_normalization_invariants(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 128)) * 10 + 5
+        y = layernorm(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(jnp.std(y, -1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+
+
+class TestFusedAdamW:
+    @settings(**SETTINGS)
+    @given(n=st.sampled_from([3, 100, 4096, 70000]),
+           lr=st.sampled_from([1e-5, 1e-4, 1e-3]),
+           step=st.integers(1, 500), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, lr, step, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        p = jax.random.normal(ks[0], (n,))
+        g = jax.random.normal(ks[1], (n,))
+        m = jax.random.normal(ks[2], (n,)) * 0.1
+        v = jnp.abs(jax.random.normal(ks[3], (n,))) * 0.01
+        sched = adamw_sched(lr, jnp.float32(step))
+        got = adamw_update(p, g, m, v, sched)
+        want = ref.adamw_ref(p, g, m, v, lr, float(step))
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+    def test_zero_grad_pure_decay(self):
+        n = 128
+        p = jnp.ones(n)
+        z = jnp.zeros(n)
+        sched = adamw_sched(1e-2, jnp.float32(1), weight_decay=0.5)
+        p2, m2, v2 = adamw_update(p, z, z, z, sched)
+        np.testing.assert_allclose(p2, p * (1 - 1e-2 * 0.5), rtol=1e-6)
+        np.testing.assert_allclose(m2, 0.0)
+        np.testing.assert_allclose(v2, 0.0)
+
+    def test_multi_step_sequence_matches_ref(self):
+        n = 1000
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        p = pr = jax.random.normal(ks[0], (n,))
+        m = v = mr = vr = jnp.zeros(n)
+        for t in range(1, 6):
+            g = jax.random.normal(jax.random.fold_in(ks[1], t), (n,))
+            p, m, v = adamw_update(p, g, m, v, adamw_sched(1e-3, jnp.float32(t)))
+            pr, mr, vr = ref.adamw_ref(pr, g, mr, vr, 1e-3, float(t))
+        np.testing.assert_allclose(p, pr, atol=1e-5, rtol=1e-5)

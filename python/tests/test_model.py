@@ -1,0 +1,141 @@
+"""L2 model correctness: shapes, kernel-vs-ref path equivalence, training."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.CONFIGS["tiny"]
+TINY_REF = dataclasses.replace(TINY, use_kernels=False)
+
+
+def _tokens(seed, b, cfg=TINY):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.seq), 0,
+                              cfg.vocab)
+
+
+class TestLayout:
+    def test_param_count_formula(self):
+        # hand-computed for tiny: embeddings + per-layer blocks + final ln
+        d, v, s, L = TINY.d_model, TINY.vocab, TINY.seq, TINY.n_layer
+        per_layer = 2 * d + 3 * d * d + d * d + 2 * d + 4 * d * d + 4 * d \
+            + 4 * d * d + d
+        want = v * d + s * d + L * per_layer + 2 * d
+        assert M.param_count(TINY) == want
+
+    def test_padding_multiple(self):
+        for cfg in M.CONFIGS.values():
+            assert M.padded_param_count(cfg) % M.PAD_MULTIPLE == 0
+            assert M.padded_param_count(cfg) >= M.param_count(cfg)
+
+    def test_unflatten_shapes_and_coverage(self):
+        flat = M.init_params(TINY, 0)
+        p = M.unflatten(TINY, flat)
+        layout = dict(M.param_layout(TINY))
+        assert set(p) == set(layout)
+        total = 0
+        for name, arr in p.items():
+            assert arr.shape == layout[name]
+            total += arr.size
+        assert total == M.param_count(TINY)
+
+    def test_init_deterministic_and_layerwise(self):
+        f1 = M.init_params(TINY, 42)
+        f2 = M.init_params(TINY, 42)
+        np.testing.assert_array_equal(f1, f2)
+        p = M.unflatten(TINY, f1)
+        np.testing.assert_allclose(p["h0.ln1_g"], 1.0)
+        np.testing.assert_allclose(p["h0.b1"], 0.0)
+        assert 0.01 < float(jnp.std(p["wte"])) < 0.03
+        # padded tail is zero
+        np.testing.assert_allclose(f1[M.param_count(TINY):], 0.0)
+
+
+class TestForward:
+    def test_logits_shape(self):
+        flat = M.init_params(TINY, 0)
+        logits = M.forward(TINY, flat, _tokens(0, 3))
+        assert logits.shape == (3, TINY.seq, TINY.vocab)
+
+    def test_kernel_and_ref_paths_agree(self):
+        flat = M.init_params(TINY, 1)
+        toks = _tokens(1, 2)
+        a = M.forward(TINY, flat, toks)
+        b = M.forward(TINY_REF, flat, toks)
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+    def test_causality(self):
+        # changing a future token must not affect earlier logits
+        flat = M.init_params(TINY, 2)
+        toks = _tokens(2, 1)
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % TINY.vocab)
+        a = M.forward(TINY, flat, toks)
+        b = M.forward(TINY, flat, toks2)
+        np.testing.assert_allclose(a[0, :-1], b[0, :-1], atol=1e-5)
+
+    def test_initial_loss_near_uniform(self):
+        flat = M.init_params(TINY, 3)
+        loss = M.loss_fn(TINY, flat, _tokens(3, 4))
+        assert abs(float(loss) - np.log(TINY.vocab)) < 0.3
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        flat = M.init_params(TINY, 4)
+        P = M.padded_param_count(TINY)
+        m = v = jnp.zeros(P)
+        toks = _tokens(4, 4)
+        step = jax.jit(M.make_train_step(TINY))
+        first = None
+        for t in range(1, 6):
+            flat, m, v, loss = step(flat, m, v, jnp.float32(t),
+                                    jnp.float32(1e-3), toks)
+            first = first or float(loss)
+        assert float(loss) < first
+
+    def test_grad_matches_ref_path(self):
+        flat = M.init_params(TINY, 5)
+        toks = _tokens(5, 2)
+        g1 = jax.grad(lambda f: M.loss_fn(TINY, f, toks))(flat)
+        g2 = jax.grad(lambda f: M.loss_fn(TINY_REF, f, toks))(flat)
+        np.testing.assert_allclose(g1, g2, atol=2e-4, rtol=2e-3)
+
+    def test_padded_region_untouched(self):
+        flat = M.init_params(TINY, 6)
+        P = M.padded_param_count(TINY)
+        m = v = jnp.zeros(P)
+        step = jax.jit(M.make_train_step(TINY))
+        flat, m, v, _ = step(flat, m, v, jnp.float32(1), jnp.float32(1e-3),
+                             _tokens(6, 2))
+        np.testing.assert_allclose(flat[M.param_count(TINY):], 0.0)
+
+    def test_lr_is_runtime_knob(self):
+        # same artifact semantics: different lr -> different params, same fn
+        flat0 = M.init_params(TINY, 7)
+        P = M.padded_param_count(TINY)
+        z = jnp.zeros(P)
+        toks = _tokens(7, 2)
+        step = jax.jit(M.make_train_step(TINY))
+        a, *_ = step(flat0, z, z, jnp.float32(1), jnp.float32(1e-3), toks)
+        b, *_ = step(flat0, z, z, jnp.float32(1), jnp.float32(1e-5), toks)
+        assert float(jnp.max(jnp.abs(a - b))) > 0
+        delta_a = float(jnp.mean(jnp.abs(a - flat0)))
+        delta_b = float(jnp.mean(jnp.abs(b - flat0)))
+        assert delta_a > delta_b  # larger lr moves further
+
+    def test_eval_step_matches_loss(self):
+        flat = M.init_params(TINY, 8)
+        toks = _tokens(8, 2)
+        np.testing.assert_allclose(M.eval_step(TINY, flat, toks),
+                                   M.loss_fn(TINY, flat, toks))
+
+
+def test_flops_model_sane():
+    # small should cost more than tiny per step; both positive
+    f_tiny = M.flops_per_step(M.CONFIGS["tiny"], 8)
+    f_small = M.flops_per_step(M.CONFIGS["small"], 8)
+    assert 0 < f_tiny < f_small

@@ -1,0 +1,74 @@
+//! Bench E11/E12: the PJRT hot path — real train-step latency/throughput
+//! per AOT artifact, plus runtime dispatch overhead (host<->device literal
+//! traffic vs pure execution). Feeds EXPERIMENTS.md §Perf (L3 runtime).
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use std::sync::Arc;
+
+use saturn::bench::{print_header, print_stats, Bencher};
+use saturn::data::TokenStream;
+use saturn::runtime::{Engine, Manifest, Trainer};
+
+fn main() {
+    let engine = Arc::new(Engine::cpu().expect("PJRT CPU client"));
+    let manifest = Manifest::load_default().expect("run `make artifacts`");
+    let bencher = Bencher::from_env();
+    println!("platform: {}", engine.platform());
+
+    print_header("train-step latency (real PJRT execution)");
+    for a in manifest.artifacts.clone() {
+        if a.kind != "train" {
+            continue;
+        }
+        let batch = a.batch.unwrap();
+        let mut t = Trainer::new(engine.clone(), &manifest, &a.model, batch, 0)
+            .expect("trainer");
+        let mut stream = TokenStream::new(7, a.vocab);
+        let b = batch as usize;
+        let s = a.seq as usize;
+        // warmup / compile
+        let toks = stream.batch(b, s);
+        t.step_tokens(1e-3, &toks).unwrap();
+        let stats = bencher.run_fn(&a.name, || {
+            let toks = stream.batch(b, s);
+            t.step_tokens(1e-3, &toks).unwrap();
+        });
+        print_stats(&stats);
+        let tokens = (b * s) as f64;
+        println!(
+            "{:<44} {:>10.0} tok/s {:>12.2} MFLOP/s/step-flops",
+            format!("  throughput/{}", a.name),
+            stats.throughput(tokens),
+            a.flops_per_step / stats.mean_s / 1e6
+        );
+    }
+
+    print_header("eval-step latency");
+    for a in manifest.artifacts.clone() {
+        if a.kind != "eval" {
+            continue;
+        }
+        let exe = engine.load_artifact(&a).unwrap();
+        let p = a.padded_params;
+        let flat = xla::Literal::vec1(&vec![0.01f32; p]);
+        let b = a.batch.unwrap() as usize;
+        let toks = xla::Literal::vec1(&vec![1i32; b * a.seq as usize])
+            .reshape(&[b as i64, a.seq as i64])
+            .unwrap();
+        let stats = bencher.run_fn(&a.name, || {
+            let out = engine.run(&exe, &[flat.clone(), toks.clone()]).unwrap();
+            std::hint::black_box(out.len());
+        });
+        print_stats(&stats);
+    }
+
+    print_header("dispatch overhead: init artifact (tiny state transfer)");
+    let init = manifest.init("tiny").unwrap();
+    let exe = engine.load_artifact(init).unwrap();
+    let stats = bencher.run_fn("init_tiny (execute+fetch)", || {
+        let out = engine.run(&exe, &[xla::Literal::scalar(0i32)]).unwrap();
+        std::hint::black_box(out.len());
+    });
+    print_stats(&stats);
+}

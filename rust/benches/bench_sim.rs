@@ -1,0 +1,65 @@
+//! Simulator + solver micro-benchmarks (L3 perf targets in DESIGN.md §8):
+//! full-workload simulation wall time per policy, and LP/MILP solve rates.
+//!
+//! Run: `cargo bench --bench bench_sim`
+
+use saturn::bench::{print_header, print_stats, Bencher};
+use saturn::cluster::ClusterSpec;
+use saturn::exp;
+use saturn::parallelism::default_library;
+use saturn::solver::lp::{Cmp, Lp};
+use saturn::trials::profile_analytic;
+use saturn::util::rng::Rng;
+use saturn::workload::wikitext_workload;
+
+fn main() {
+    let bencher = Bencher::from_env();
+
+    print_header("full Table-2 cell simulation (12 jobs, 1 node)");
+    let jobs = wikitext_workload();
+    let cluster = ClusterSpec::p4d(1);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, &cluster);
+    for sys in exp::SYSTEMS {
+        let stats = bencher.run_fn(sys, || {
+            let c = exp::run_cell_with(&jobs, &profiles, &cluster, sys, 0);
+            std::hint::black_box(c.makespan_h);
+        });
+        print_stats(&stats);
+    }
+
+    print_header("trial-runner profiling (4 techs x 4 gpu opts x 12 jobs)");
+    let stats = bencher.run_fn("profile_analytic/wikitext", || {
+        let t = profile_analytic(&jobs, &lib, &cluster);
+        std::hint::black_box(t.len());
+    });
+    print_stats(&stats);
+
+    print_header("LP simplex solve rate (random dense feasible LPs)");
+    let mut rng = Rng::new(11);
+    let problems: Vec<Lp> = (0..50)
+        .map(|_| {
+            let n = 12;
+            let m = 10;
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_obj(j, rng.f64() * 2.0 - 1.0);
+                lp.bound_le(j, 5.0 + rng.f64() * 5.0);
+            }
+            for _ in 0..m {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.f64())).collect();
+                lp.add(coeffs, Cmp::Le, 10.0 + rng.f64() * 20.0);
+            }
+            lp
+        })
+        .collect();
+    let stats = bencher.run_fn("simplex x50 (12 vars, 22 rows)", || {
+        for lp in &problems {
+            std::hint::black_box(saturn::solver::lp::solve(lp));
+        }
+    });
+    print_stats(&stats);
+    println!("{:<44} {:>10.0} solves/s", "  rate",
+             50.0 / stats.mean_s);
+}

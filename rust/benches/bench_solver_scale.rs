@@ -1,0 +1,56 @@
+//! Bench E9: solver scalability — MILP (Joint) vs greedy Heuristic as the
+//! multi-job grows. Supports the paper's premise that solving is cheap
+//! enough to re-run under introspection.
+//!
+//! Run: `cargo bench --bench bench_solver_scale`
+
+use saturn::bench::{print_header, Bencher};
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::trials::profile_analytic;
+use saturn::workload::toy_workload;
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let cluster = ClusterSpec::p4d(2);
+    let lib = default_library();
+
+    print_header("joint MILP vs greedy heuristic (solve wall time)");
+    for n in [4usize, 8, 12, 24, 48] {
+        let jobs = toy_workload(n);
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let remaining: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+
+        let mut quality = (0.0, 0.0);
+        let s = bencher.run_fn(&format!("joint/jobs={n}"), || {
+            let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
+                                        SolverMode::Joint);
+            quality.0 = plan.predicted_makespan_s;
+        });
+        saturn::bench::print_stats(&s);
+        let s = bencher.run_fn(&format!("greedy/jobs={n}"), || {
+            let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
+                                        SolverMode::Heuristic);
+            quality.1 = plan.predicted_makespan_s;
+        });
+        saturn::bench::print_stats(&s);
+        println!("{:<44} joint {:.0}s vs greedy {:.0}s ({:+.1}%)",
+                 format!("  plan quality/jobs={n}"), quality.0, quality.1,
+                 100.0 * (quality.1 - quality.0) / quality.0.max(1e-9));
+    }
+
+    print_header("exact time-indexed MILP (small instances only)");
+    for n in [3usize, 4] {
+        let jobs = toy_workload(n);
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let remaining: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let s = bencher.run_fn(&format!("exact-slots/jobs={n}"), || {
+            let _ = solve_joint(&remaining, &profiles, &cluster,
+                                SolverMode::ExactSlots { slots: 6 });
+        });
+        saturn::bench::print_stats(&s);
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench E7: Trial-Runner profiling overhead vs job runtimes — the paper's
+//! "profiling time tends to be negligible" claim (§2).
+//!
+//! Run: `cargo bench --bench bench_trials`
+
+use saturn::bench::{print_header, Bencher};
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::trials::profile_analytic;
+use saturn::workload::{imagenet_workload, wikitext_workload};
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let lib = default_library();
+
+    print_header("trial-runner wall time (analytic mode)");
+    for (name, jobs) in [("wikitext", wikitext_workload()),
+                         ("imagenet", imagenet_workload())] {
+        for nodes in [1u32, 2] {
+            let cluster = ClusterSpec::p4d(nodes);
+            let s = bencher.run_fn(&format!("profile/{name}/{nodes}-node"),
+                                   || {
+                let t = profile_analytic(&jobs, &lib, &cluster);
+                std::hint::black_box(t.len());
+            });
+            saturn::bench::print_stats(&s);
+        }
+    }
+
+    println!("\n### simulated on-cluster probe cost vs workload runtime");
+    println!("{:<14} {:>16} {:>14} {:>16} {:>10}", "workload",
+             "gpu-time (s)", "wall (s)", "cp makespan (s)", "fraction");
+    for (name, jobs) in [("wikitext", wikitext_workload()),
+                         ("imagenet", imagenet_workload())] {
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let cell = saturn::exp::run_cell_with(&jobs, &profiles, &cluster,
+                                              "current-practice", 0);
+        // probes for distinct (job, tech, g) combos run cluster-parallel
+        // before training starts; profiling_cost_s sums them sequentially
+        let wall = profiles.profiling_cost_s / cluster.total_gpus() as f64;
+        let frac = wall / cell.result.makespan_s;
+        println!("{:<14} {:>16.1} {:>14.1} {:>16.0} {:>9.2}%", name,
+                 profiles.profiling_cost_s, wall, cell.result.makespan_s,
+                 frac * 100.0);
+        assert!(frac < 0.02, "profiling must be negligible (paper §2)");
+    }
+    println!("\n[ok] cluster-parallel probe cost < 2% of makespan on both \
+              workloads");
+}

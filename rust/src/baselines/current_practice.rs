@@ -1,0 +1,78 @@
+//! "Current Practice" baseline (paper §3): each job gets ALL GPUs of one
+//! node, jobs run in sequence per node, task parallelism across nodes.
+//! The parallelism technique is whatever the practitioner would reach for:
+//! the fastest feasible one at full-node width (practitioners tune their
+//! single job well — the inefficiency is in the one-job-at-a-time
+
+//! resource usage, which is exactly what the paper critiques).
+
+use crate::sim::engine::{Launch, PlanContext, Policy};
+
+#[derive(Default)]
+pub struct CurrentPractice;
+
+impl Policy for CurrentPractice {
+    fn name(&self) -> &'static str {
+        "current-practice"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        let g = ctx.cluster.node.gpus_per_node;
+        let mut free = ctx.free.clone();
+        let mut out = Vec::new();
+        // FIFO over pending jobs; one whole node each
+        for s in ctx.jobs.iter().filter(|s| s.is_pending()) {
+            if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
+                if free.place(g).is_some() {
+                    out.push(Launch { job_id: s.job.id, tech, gpus: g });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::sim::engine::{simulate, SimConfig};
+    use crate::trials::profile_analytic;
+    use crate::workload::wikitext_workload;
+
+    #[test]
+    fn serializes_on_one_node() {
+        let jobs = wikitext_workload();
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let r = simulate(&jobs, &profiles, &cluster, &mut CurrentPractice,
+                         &SimConfig::default());
+        // makespan equals the sum of full-node runtimes (pure sequence)
+        let expected: f64 = jobs
+            .iter()
+            .map(|j| {
+                let (t, _) = profiles.best_at(j.id, 8).unwrap();
+                profiles.step_time(j.id, t, 8).unwrap() * j.total_steps() as f64
+            })
+            .sum();
+        assert!((r.makespan_s - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn two_nodes_halve_ish() {
+        let jobs = wikitext_workload();
+        let lib = default_library();
+        let c1 = ClusterSpec::p4d(1);
+        let c2 = ClusterSpec::p4d(2);
+        let p1 = profile_analytic(&jobs, &lib, &c1);
+        let p2 = profile_analytic(&jobs, &lib, &c2);
+        let r1 = simulate(&jobs, &p1, &c1, &mut CurrentPractice,
+                          &SimConfig::default());
+        let r2 = simulate(&jobs, &p2, &c2, &mut CurrentPractice,
+                          &SimConfig::default());
+        assert!(r2.makespan_s < r1.makespan_s * 0.65);
+        assert!(r2.makespan_s > r1.makespan_s * 0.40);
+    }
+}

@@ -1,0 +1,11 @@
+//! The four baselines of paper §3: Current Practice, Random, Optimus, and
+//! Optimus-Dynamic. All implement `sim::Policy`, so Table 2 compares them
+//! and Saturn under identical simulator semantics.
+
+pub mod current_practice;
+pub mod optimus;
+pub mod random;
+
+pub use current_practice::CurrentPractice;
+pub use optimus::{Optimus, OptimusDynamic};
+pub use random::RandomPolicy;

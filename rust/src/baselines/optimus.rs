@@ -1,0 +1,174 @@
+//! Optimus baseline (Peng et al., EuroSys'18; paper §3): greedy
+//! marginal-gain GPU allocation. GPUs are handed out one (small quantum)
+//! at a time to the job whose estimated remaining runtime improves most
+//! per GPU. Parallelism per job = fastest feasible technique at the
+//! assigned count.
+//!
+//! `Optimus` re-plans only when jobs complete (GPUs free up);
+//! `OptimusDynamic` adds the same fixed-interval introspection mechanism
+//! Saturn uses (checkpoint + full replan), isolating the value of the
+//! *joint MILP* from the value of *introspection* in Table 2.
+
+use crate::sim::engine::{Launch, PlanContext, Policy};
+
+fn greedy_allocation(ctx: &PlanContext) -> Vec<Launch> {
+    // candidate jobs: pending, with at least one feasible plan
+    let pending: Vec<usize> = ctx
+        .jobs
+        .iter()
+        .filter(|s| s.is_pending())
+        .map(|s| s.job.id)
+        .collect();
+    if pending.is_empty() {
+        return Vec::new();
+    }
+    let options = &ctx.profiles.gpu_options; // sorted ascending
+    let mut alloc: Vec<u32> = vec![0; ctx.jobs.len()];
+    let mut budget = ctx.free.total_free();
+
+    // remaining runtime for job j at allocation level g (None: infeasible)
+    let runtime = |job_id: usize, g: u32| -> Option<f64> {
+        let steps = ctx.jobs[job_id].remaining_steps() as f64;
+        ctx.profiles.best_at(job_id, g).map(|(_, t)| t * steps)
+    };
+
+    // Optimus quantum: step each job up the allocation ladder
+    loop {
+        let mut best: Option<(usize, u32, f64)> = None; // (job, next_g, gain/gpu)
+        for &j in &pending {
+            let cur = alloc[j];
+            // next FEASIBLE rung (e.g. GPT-J may be infeasible below 8 GPUs)
+            let next = options
+                .iter()
+                .copied()
+                .find(|&g| g > cur && runtime(j, g).is_some());
+            let Some(next) = next else { continue };
+            let delta_g = next - cur;
+            if delta_g > budget {
+                continue;
+            }
+            let cur_rt = if cur == 0 {
+                f64::INFINITY // unscheduled job: infinite remaining time
+            } else {
+                match runtime(j, cur) {
+                    Some(t) => t,
+                    None => f64::INFINITY,
+                }
+            };
+            let next_rt = runtime(j, next).expect("feasibility checked above");
+            let gain = if cur_rt.is_infinite() {
+                // first quantum: gain dominated by making the job runnable;
+                // Optimus prioritizes by resulting throughput
+                1e12 / next_rt.max(1e-9)
+            } else {
+                (cur_rt - next_rt).max(0.0) / delta_g as f64
+            };
+            if gain > 0.0 && best.map(|b| gain > b.2).unwrap_or(true) {
+                best = Some((j, next, gain));
+            }
+        }
+        let Some((j, next, _)) = best else { break };
+        budget -= next - alloc[j];
+        alloc[j] = next;
+    }
+
+    // realize: check placement feasibility in allocation order
+    let mut free = ctx.free.clone();
+    let mut out = Vec::new();
+    let mut jobs_sorted = pending.clone();
+    jobs_sorted.sort_by_key(|&j| std::cmp::Reverse(alloc[j]));
+    for j in jobs_sorted {
+        let g = alloc[j];
+        if g == 0 {
+            continue;
+        }
+        if let Some((tech, _)) = ctx.profiles.best_at(j, g) {
+            if free.place(g).is_some() {
+                out.push(Launch { job_id: j, tech, gpus: g });
+            }
+        }
+    }
+    out
+}
+
+#[derive(Default)]
+pub struct Optimus;
+
+impl Policy for Optimus {
+    fn name(&self) -> &'static str {
+        "optimus"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        greedy_allocation(ctx)
+    }
+}
+
+pub struct OptimusDynamic {
+    pub introspect_every_s: f64,
+}
+
+impl Default for OptimusDynamic {
+    fn default() -> Self {
+        OptimusDynamic { introspect_every_s: 3600.0 }
+    }
+}
+
+impl Policy for OptimusDynamic {
+    fn name(&self) -> &'static str {
+        "optimus-dynamic"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        greedy_allocation(ctx)
+    }
+
+    fn introspection_interval(&self) -> Option<f64> {
+        Some(self.introspect_every_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::sim::engine::{simulate, SimConfig};
+    use crate::trials::profile_analytic;
+    use crate::workload::{imagenet_workload, wikitext_workload};
+
+    fn run(policy: &mut dyn Policy, nodes: u32, vision: bool) -> f64 {
+        let jobs = if vision { imagenet_workload() } else { wikitext_workload() };
+        let cluster = ClusterSpec::p4d(nodes);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        simulate(&jobs, &profiles, &cluster, policy, &SimConfig::default())
+            .makespan_s
+    }
+
+    #[test]
+    fn optimus_completes() {
+        assert!(run(&mut Optimus, 1, false) > 0.0);
+    }
+
+    #[test]
+    fn dynamic_beats_static() {
+        // the paper's Table 2 ordering: Optimus-Dynamic < Optimus
+        let s = run(&mut Optimus, 1, false);
+        let d = run(&mut OptimusDynamic::default(), 1, false);
+        assert!(d <= s * 1.05, "dynamic {d} vs static {s}");
+    }
+
+    #[test]
+    fn optimus_shares_the_cluster() {
+        // unlike CurrentPractice, Optimus runs multiple jobs concurrently:
+        // utilization-driven makespan must beat pure sequencing on vision
+        let jobs = imagenet_workload();
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let r = simulate(&jobs, &profiles, &cluster, &mut Optimus,
+                         &SimConfig::default());
+        assert!(r.launches >= 12);
+    }
+}

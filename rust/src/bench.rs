@@ -1,0 +1,136 @@
+//! Criterion-style benchmark harness (substrate: no `criterion` in the
+//! offline set). Used by every target in `rust/benches/` via
+//! `harness = false`.
+//!
+//! Measures wall time over warmup + sampled iterations and prints a
+//! fixed-width report; `Bencher::run_fn` also returns the stats so bench
+//! binaries can assert regressions.
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Welford};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup, samples }
+    }
+
+    /// Honor `SATURN_BENCH_FAST=1` (CI): single sample, no warmup.
+    pub fn from_env() -> Self {
+        if std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(0, 1)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    pub fn run_fn<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut w = Welford::new();
+        let mut xs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            w.add(dt);
+            xs.push(dt);
+        }
+        BenchStats {
+            name: name.to_string(),
+            samples: xs.len(),
+            mean_s: w.mean(),
+            std_s: w.std(),
+            p50_s: percentile(&xs, 0.5),
+            p99_s: percentile(&xs, 0.99),
+            min_s: w.min(),
+        }
+    }
+
+    pub fn report(&self, name: &str, f: impl FnMut()) -> BenchStats {
+        let s = self.run_fn(name, f);
+        print_stats(&s);
+        s
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n### {title}");
+    println!("{:<44} {:>10} {:>10} {:>10} {:>6}", "benchmark", "mean",
+             "p50", "p99", "n");
+}
+
+pub fn print_stats(s: &BenchStats) {
+    println!("{:<44} {:>10} {:>10} {:>10} {:>6}", s.name, fmt_s(s.mean_s),
+             fmt_s(s.p50_s), fmt_s(s.p99_s), s.samples);
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(1, 5);
+        let s = b.run_fn("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(s.samples, 5);
+        assert!(s.mean_s > 0.0);
+        assert!(s.p99_s >= s.p50_s);
+        assert!(s.min_s <= s.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn formatting_units() {
+        assert!(fmt_s(2.5e-9).contains("ns"));
+        assert!(fmt_s(2.5e-5).contains("µs"));
+        assert!(fmt_s(2.5e-2).contains("ms"));
+        assert!(fmt_s(2.5).contains(" s"));
+    }
+}

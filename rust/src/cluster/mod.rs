@@ -1,0 +1,10 @@
+//! Cluster substrate: hardware specifications of the simulated GPU fleet.
+//!
+//! The paper evaluates on AWS `p4d.24xlarge` nodes (8x A100-40GB, NVSwitch
+//! intra-node, EFA inter-node). No GPUs exist on this testbed, so the specs
+//! here drive the analytic cost models in `parallelism/` and the
+//! discrete-event simulator in `sim/` (DESIGN.md §Hardware-Adaptation).
+
+pub mod specs;
+
+pub use specs::{ClusterSpec, GpuSpec, NodeSpec};

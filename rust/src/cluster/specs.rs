@@ -1,0 +1,143 @@
+//! Hardware constants for the simulated fleet.
+//!
+//! Sources for the numbers (cited so the calibration is auditable):
+//!  * A100-40GB SXM: 312 TFLOP/s bf16 dense, 40 GB HBM2e (NVIDIA A100
+//!    datasheet, 2020).
+//!  * p4d.24xlarge: 8x A100-40GB, 600 GB/s NVSwitch per-GPU bidirectional
+//!    (we use 240 GB/s effective all-reduce bus bandwidth, the standard
+//!    NCCL ring-effective figure), 400 Gbps EFA => ~50 GB/s, PCIe gen4
+//!    x16 => 32 GB/s (AWS EC2 docs, 2021).
+
+/// A single accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub mem_bytes: f64,
+    /// Dense bf16/fp16 peak, FLOP/s.
+    pub peak_flops: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_40gb() -> Self {
+        GpuSpec {
+            name: "A100-40GB".into(),
+            mem_bytes: 40e9,
+            peak_flops: 312e12,
+        }
+    }
+
+    pub fn mem_gb(&self) -> f64 {
+        self.mem_bytes / 1e9
+    }
+
+    /// Memory actually available to a training job: framework/driver
+    /// reserves ~2 GB and fragmentation eats ~8% in practice.
+    pub fn usable_bytes(&self) -> f64 {
+        0.92 * self.mem_bytes - 2e9
+    }
+}
+
+/// One server (the paper's unit of task parallelism).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpus_per_node: u32,
+    pub gpu: GpuSpec,
+    /// Effective intra-node collective bus bandwidth, bytes/s.
+    pub intra_bw: f64,
+    /// Host<->GPU PCIe bandwidth, bytes/s (offloading cost model).
+    pub pcie_bw: f64,
+}
+
+impl NodeSpec {
+    pub fn p4d_24xlarge() -> Self {
+        NodeSpec {
+            gpus_per_node: 8,
+            gpu: GpuSpec::a100_40gb(),
+            intra_bw: 240e9,
+            pcie_bw: 32e9,
+        }
+    }
+}
+
+/// The whole fleet visible to the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: u32,
+    pub node: NodeSpec,
+    /// Effective inter-node collective bandwidth, bytes/s.
+    pub inter_bw: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: `nodes` x p4d.24xlarge.
+    pub fn p4d(nodes: u32) -> Self {
+        ClusterSpec { nodes, node: NodeSpec::p4d_24xlarge(), inter_bw: 50e9 }
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    /// Effective collective bandwidth for a `gpus`-wide ring: NVSwitch when
+    /// the ring fits in one node, EFA-bound otherwise.
+    pub fn collective_bw(&self, gpus: u32) -> f64 {
+        if gpus <= self.node.gpus_per_node {
+            self.node.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// GPU counts a job may be assigned (powers of two up to the fleet,
+    /// whole-node multiples beyond one node — the granularities DL
+    /// practitioners actually use and the paper's solver searches over).
+    pub fn allocation_options(&self) -> Vec<u32> {
+        let per = self.node.gpus_per_node;
+        let mut opts: Vec<u32> = [1u32, 2, 4]
+            .into_iter()
+            .filter(|&g| g <= per)
+            .collect();
+        let mut g = per;
+        while g <= self.total_gpus() {
+            opts.push(g);
+            g *= 2;
+        }
+        if !opts.contains(&self.total_gpus()) && self.total_gpus() > per {
+            opts.push(self.total_gpus());
+        }
+        opts.sort_unstable();
+        opts.dedup();
+        opts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p4d_shape() {
+        let c = ClusterSpec::p4d(2);
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.node.gpu.mem_gb(), 40.0);
+        assert!(c.node.gpu.peak_flops > 3e14);
+    }
+
+    #[test]
+    fn collective_bw_hierarchy() {
+        let c = ClusterSpec::p4d(2);
+        assert!(c.collective_bw(8) > c.collective_bw(16));
+    }
+
+    #[test]
+    fn allocation_options_one_node() {
+        let c = ClusterSpec::p4d(1);
+        assert_eq!(c.allocation_options(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn allocation_options_two_nodes() {
+        let c = ClusterSpec::p4d(2);
+        assert_eq!(c.allocation_options(), vec![1, 2, 4, 8, 16]);
+    }
+}

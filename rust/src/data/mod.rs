@@ -1,0 +1,111 @@
+//! Synthetic data generators (dataset substitution, DESIGN.md
+//! §Hardware-Adaptation): a Zipfian token stream standing in for
+//! WikiText-2 and labeled image-tensor batches standing in for ImageNet.
+//! Content never affects scheduling decisions; the token stream feeds the
+//! REAL training loop in `examples/e2e_train.rs`.
+
+use crate::util::rng::Rng;
+
+/// Zipfian LM corpus with local n-gram structure so next-token losses are
+/// learnable (pure iid Zipf would bottom out at the unigram entropy).
+pub struct TokenStream {
+    rng: Rng,
+    vocab: u32,
+    /// Markov kick: with probability `p_repeat`, emit f(prev) instead of a
+    /// fresh Zipf draw -> gives the model predictable transitions.
+    p_repeat: f64,
+    prev: u32,
+}
+
+impl TokenStream {
+    pub fn new(seed: u64, vocab: u32) -> Self {
+        TokenStream { rng: Rng::new(seed), vocab, p_repeat: 0.5, prev: 0 }
+    }
+
+    pub fn next_token(&mut self) -> u32 {
+        let t = if self.rng.bool(self.p_repeat) {
+            // deterministic successor: strong learnable signal
+            (self.prev.wrapping_mul(31).wrapping_add(7)) % self.vocab
+        } else {
+            self.rng.zipf(self.vocab as usize, 1.1) as u32
+        };
+        self.prev = t;
+        t
+    }
+
+    /// A `(batch, seq)` token matrix flattened row-major (i32 for PJRT).
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * seq).map(|_| self.next_token() as i32).collect()
+    }
+}
+
+/// Synthetic "image" batch: normal pixels + balanced labels.
+pub struct ImageStream {
+    rng: Rng,
+    classes: u32,
+}
+
+impl ImageStream {
+    pub fn new(seed: u64, classes: u32) -> Self {
+        ImageStream { rng: Rng::new(seed), classes }
+    }
+
+    pub fn batch(&mut self, batch: usize, pixels: usize) -> (Vec<f32>, Vec<i32>) {
+        let data = (0..batch * pixels)
+            .map(|_| self.rng.normal() as f32)
+            .collect();
+        let labels = (0..batch)
+            .map(|_| self.rng.usize(self.classes as usize) as i32)
+            .collect();
+        (data, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut s = TokenStream::new(1, 512);
+        let b = s.batch(4, 64);
+        assert_eq!(b.len(), 256);
+        assert!(b.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn stream_deterministic_per_seed() {
+        let a = TokenStream::new(9, 512).batch(2, 32);
+        let b = TokenStream::new(9, 512).batch(2, 32);
+        let c = TokenStream::new(10, 512).batch(2, 32);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tokens_have_learnable_structure() {
+        // successor correlation: P(next == f(prev)) should be ~p_repeat,
+        // far above chance
+        let mut s = TokenStream::new(2, 512);
+        let n = 20_000;
+        let mut hits = 0;
+        let mut prev = s.next_token();
+        for _ in 0..n {
+            let t = s.next_token();
+            if t == (prev.wrapping_mul(31).wrapping_add(7)) % 512 {
+                hits += 1;
+            }
+            prev = t;
+        }
+        assert!(hits as f64 / n as f64 > 0.3, "structure too weak");
+    }
+
+    #[test]
+    fn image_batch_shapes() {
+        let mut s = ImageStream::new(3, 1000);
+        let (x, y) = s.batch(8, 3 * 32 * 32);
+        assert_eq!(x.len(), 8 * 3072);
+        assert_eq!(y.len(), 8);
+        assert!(y.iter().all(|&c| (0..1000).contains(&c)));
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment harness: regenerates every numeric artifact of the paper
+//! (Table 2 and the §3 speedup claims) plus the ablations DESIGN.md §5
+//! indexes. Shared by `saturn table2`, `benches/bench_table2.rs`, and the
+//! integration tests.
+
+use crate::baselines::{CurrentPractice, Optimus, OptimusDynamic, RandomPolicy};
+use crate::cluster::ClusterSpec;
+use crate::parallelism::default_library;
+use crate::saturn::SaturnPolicy;
+use crate::sim::engine::{simulate, Policy, SimConfig, SimResult};
+use crate::trials::{profile_analytic, ProfileTable};
+use crate::workload::{imagenet_workload, wikitext_workload, Job};
+
+pub const SYSTEMS: [&str; 5] =
+    ["current-practice", "random", "optimus", "optimus-dynamic", "saturn"];
+
+/// One Table 2 cell: a (workload, nodes, system) simulation.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: &'static str,
+    pub nodes: u32,
+    pub makespan_h: f64,
+    pub result: SimResult,
+}
+
+pub fn make_policy(system: &str, seed: u64) -> Box<dyn Policy> {
+    match system {
+        "current-practice" => Box::new(CurrentPractice),
+        "random" => Box::new(RandomPolicy::new(seed)),
+        "optimus" => Box::new(Optimus),
+        "optimus-dynamic" => Box::new(OptimusDynamic::default()),
+        "saturn" => Box::new(SaturnPolicy::paper_default()),
+        other => panic!("unknown system '{other}'"),
+    }
+}
+
+pub fn workload_by_name(name: &str) -> Vec<Job> {
+    match name {
+        "wikitext" => wikitext_workload(),
+        "imagenet" => imagenet_workload(),
+        other => panic!("unknown workload '{other}' (wikitext|imagenet)"),
+    }
+}
+
+/// Run one cell of Table 2.
+pub fn run_cell(workload: &str, nodes: u32, system: &str, seed: u64) -> Cell {
+    let jobs = workload_by_name(workload);
+    let cluster = ClusterSpec::p4d(nodes);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, &cluster);
+    run_cell_with(&jobs, &profiles, &cluster, system, seed)
+}
+
+pub fn run_cell_with(jobs: &[Job], profiles: &ProfileTable,
+                     cluster: &ClusterSpec, system: &str, seed: u64) -> Cell {
+    let mut policy = make_policy(system, seed);
+    let result = simulate(jobs, profiles, cluster, policy.as_mut(),
+                          &SimConfig::default());
+    Cell {
+        system: SYSTEMS.iter().find(|s| **s == system).copied()
+            .unwrap_or("custom"),
+        nodes: cluster.nodes,
+        makespan_h: result.makespan_s / 3600.0,
+        result,
+    }
+}
+
+/// A full Table 2 row: all five systems on {1, 2} nodes for one workload.
+pub fn run_row(workload: &str, seed: u64) -> Vec<(Cell, Cell)> {
+    SYSTEMS
+        .iter()
+        .map(|sys| (run_cell(workload, 1, sys, seed),
+                    run_cell(workload, 2, sys, seed)))
+        .collect()
+}
+
+/// Paper's Table 2 values (hours), for side-by-side reporting.
+pub fn paper_table2(workload: &str) -> [(f64, f64); 5] {
+    match workload {
+        "wikitext" => [(28.39, 14.57), (41.45, 21.76), (34.9, 16.62),
+                       (24.87, 13.62), (17.24, 8.23)],
+        "imagenet" => [(19.05, 10.15), (28.34, 14.44), (19.44, 10.19),
+                       (17.31, 8.32), (11.31, 5.16)],
+        other => panic!("unknown workload '{other}'"),
+    }
+}
+
+/// Render a Table 2 row in the paper's format.
+pub fn format_row(workload: &str, cells: &[(Cell, Cell)]) -> String {
+    let paper = paper_table2(workload);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Table 2: {workload} — makespan hours as (1-node/2-node) ==\n"));
+    out.push_str(&format!(
+        "{:<18} {:>16} {:>16} {:>10}\n", "system", "measured", "paper", "ratio"));
+    for (i, (c1, c2)) in cells.iter().enumerate() {
+        let (p1, p2) = paper[i];
+        out.push_str(&format!(
+            "{:<18} {:>7.2}/{:<8.2} {:>7.2}/{:<8.2} {:>4.2}/{:<4.2}\n",
+            c1.system, c1.makespan_h, c2.makespan_h, p1, p2,
+            c1.makespan_h / p1, c2.makespan_h / p2));
+    }
+    // §3 headline: speedup & reduction vs current practice
+    let cp = &cells[0];
+    let sat = &cells[4];
+    for (tag, a, b) in [("1-node", cp.0.makespan_h, sat.0.makespan_h),
+                        ("2-node", cp.1.makespan_h, sat.1.makespan_h)] {
+        out.push_str(&format!(
+            "saturn vs current-practice ({tag}): {:.2}x speedup, {:.0}% reduction\n",
+            a / b, 100.0 * (1.0 - b / a)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_runs_and_reports_hours() {
+        let c = run_cell("wikitext", 1, "current-practice", 0);
+        assert!(c.makespan_h > 0.0);
+        assert_eq!(c.nodes, 1);
+    }
+
+    #[test]
+    fn paper_values_sane() {
+        let p = paper_table2("wikitext");
+        assert!((p[0].0 - 28.39).abs() < 1e-9);
+        let p = paper_table2("imagenet");
+        assert!((p[4].1 - 5.16).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown workload")]
+    fn unknown_workload_rejected() {
+        workload_by_name("cifar");
+    }
+}

@@ -1,0 +1,35 @@
+//! # Saturn — Efficient Multi-Large-Model Deep Learning (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *Saturn* (Nagrecha & Kumar, 2023):
+//! a data system that jointly optimizes **parallelism selection**, **GPU
+//! allocation**, and **scheduling** for multi-large-model training (model
+//! selection / HPO over large models).
+//!
+//! Three-layer architecture (Python never on the execution path):
+//!  * **L3 (this crate)** — the Parallelism Library ([`parallelism`]), the
+//!    Trial Runner ([`trials`]), the joint MILP Solver with introspection
+//!    ([`saturn`], [`solver`]), the baselines ([`baselines`]), the cluster
+//!    simulator ([`sim`]), and the PJRT execution runtime ([`runtime`]).
+//!  * **L2** — `python/compile/model.py`: GPT-mini fwd/bwd+AdamW in JAX,
+//!    AOT-lowered to HLO text in `artifacts/`.
+//!  * **L1** — `python/compile/kernels/`: Pallas flash-attention, fused
+//!    LayerNorm and fused AdamW kernels (interpret=True).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results (Table 2 et al.).
+
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod models;
+pub mod parallelism;
+pub mod runtime;
+pub mod saturn;
+pub mod sim;
+pub mod solver;
+pub mod trials;
+pub mod util;
+pub mod workload;

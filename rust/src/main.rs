@@ -1,0 +1,144 @@
+//! `saturn` CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   table2     reproduce paper Table 2 (simulated p4d fleet)
+//!   plan       solve one workload and print the joint plan
+//!   workload   print the Table 1 HPO grids
+//!   e2e        real model selection over the AOT GPT-mini artifacts
+//!   info       runtime/artifact diagnostics
+
+use anyhow::Result;
+use saturn::cluster::ClusterSpec;
+use saturn::coordinator::{real_grid, Coordinator};
+use saturn::exp;
+use saturn::parallelism::default_library;
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::trials::profile_analytic;
+use saturn::util::cli::Args;
+use saturn::util::logging;
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("table2") => cmd_table2(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("workload") => cmd_workload(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("saturn — efficient multi-large-model deep learning \
+                      (reproduction)\n");
+            println!("usage: saturn <command> [--flags]\n");
+            println!("  table2    [--workload wikitext|imagenet|all] [--seed N]");
+            println!("  plan      [--workload ...] [--nodes N] [--mode joint|greedy]");
+            println!("  workload  [--workload ...]");
+            println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
+            println!("  info");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 0);
+    let which = args.str_or("workload", "all");
+    let workloads: Vec<&str> = match which.as_str() {
+        "all" => vec!["wikitext", "imagenet"],
+        w => vec![Box::leak(w.to_string().into_boxed_str()) as &str],
+    };
+    for w in workloads {
+        let cells = exp::run_row(w, seed);
+        print!("{}", exp::format_row(w, &cells));
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 1) as u32;
+    let workload = args.str_or("workload", "wikitext");
+    let mode = match args.str_or("mode", "joint").as_str() {
+        "greedy" => SolverMode::Heuristic,
+        _ => SolverMode::Joint,
+    };
+    let jobs = exp::workload_by_name(&workload);
+    let cluster = ClusterSpec::p4d(nodes);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, &cluster);
+    let remaining: Vec<(usize, u64)> =
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    let (plan, stats) = solve_joint(&remaining, &profiles, &cluster, mode);
+    println!("joint plan for '{workload}' on {nodes} node(s) \
+              ({} GPUs):", cluster.total_gpus());
+    println!("{:<24} {:>8} {:>6} {:>12}", "job", "tech", "gpus", "runtime");
+    for p in &plan.choices {
+        let job = &jobs[p.job_id];
+        println!("{:<24} {:>8} {:>6} {:>11.1}s", job.name,
+                 lib.get(p.tech).name(), p.gpus, p.runtime_s);
+    }
+    println!("\npredicted makespan: {:.2} h (lower bound {:.2} h)",
+             plan.predicted_makespan_s / 3600.0, plan.lower_bound_s / 3600.0);
+    println!("solver: {:.1} ms, {} B&B nodes, optimal={}",
+             stats.wall_s * 1e3, stats.milp_nodes, stats.proved_optimal);
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let which = args.str_or("workload", "all");
+    let names: Vec<&str> = match which.as_str() {
+        "all" => vec!["wikitext", "imagenet"],
+        w => vec![Box::leak(w.to_string().into_boxed_str()) as &str],
+    };
+    for name in names {
+        let jobs = exp::workload_by_name(name);
+        println!("== {name}: {} jobs (Table 1 grid) ==", jobs.len());
+        println!("{:<24} {:>10} {:>6} {:>8} {:>12}", "job", "params", "bs",
+                 "epochs", "steps");
+        for j in &jobs {
+            println!("{:<24} {:>9.2}B {:>6} {:>8} {:>12}", j.name,
+                     j.model.params / 1e9, j.batch, j.epochs, j.total_steps());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny");
+    let lanes = args.usize_or("lanes", 2);
+    let steps = args.u64_or("steps", 60);
+    let coord = Coordinator::new(lanes)?;
+    let jobs = real_grid(&[(model.as_str(), 8)],
+                         &[1e-3, 3e-3, 1e-4], steps);
+    println!("e2e model selection: {} jobs x {steps} steps on {lanes} lanes",
+             jobs.len());
+    let r = coord.run_model_selection(&jobs, 42)?;
+    println!("{:<22} {:>10} {:>12} {:>8}", "job", "loss", "ms/step", "lane");
+    for o in &r.outcomes {
+        println!("{:<22} {:>10.4} {:>12.1} {:>8}", o.job.name(),
+                 o.final_loss, o.mean_step_ms, o.lane);
+    }
+    println!("\nbest config: {} (loss {:.4})",
+             r.outcomes[r.best].job.name(), r.outcomes[r.best].final_loss);
+    println!("makespan {:.1}s | profiling {:.2}s | solver {:.3}s",
+             r.makespan_s, r.profiling_s, r.solver_s);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    use saturn::runtime::{Engine, Manifest};
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    match Manifest::load_default() {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {:<22} kind={:<6} P={:>9} file={}", a.name,
+                         a.kind, a.padded_params, a.file.display());
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    Ok(())
+}

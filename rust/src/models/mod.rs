@@ -1,0 +1,6 @@
+//! Model zoo: analytic specs of the paper's evaluation models plus the
+//! runnable GPT-mini variants whose AOT artifacts live in `artifacts/`.
+
+pub mod zoo;
+
+pub use zoo::{DatasetSpec, Family, ModelSpec};

@@ -1,0 +1,176 @@
+//! The two-function Parallelism interface + the Library registry
+//! (paper Figure 1B: `search(model, gpus)` / `execute(model, gpus)`).
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+
+/// Result of `search`: the technique's cost/feasibility estimate for one
+/// (model, batch, gpus) combination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepEstimate {
+    /// Wall-clock seconds for one optimizer step.
+    pub step_time_s: f64,
+    /// Peak per-GPU memory demand, bytes.
+    pub mem_per_gpu: f64,
+    /// Model FLOP utilization achieved (diagnostics / roofline reports).
+    pub mfu: f64,
+}
+
+/// A registered parallelization technique (the paper's user-extensible
+/// black box). `search` must be side-effect free; `execute` is invoked by
+/// the execution engine (simulator or the PJRT-backed real executor) and
+/// returns the realized step time.
+pub trait Parallelism: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Feasibility + cost estimate; `None` when the technique cannot run
+    /// this model on `gpus` GPUs (e.g. out of memory, or pipeline depth
+    /// exceeding layers).
+    fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+              batch: u32) -> Option<StepEstimate>;
+
+    /// Launch one training step under this technique. The default mirrors
+    /// `search` (the simulator realizes estimates); the real executor
+    /// overrides timing with measured PJRT step times.
+    fn execute(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+               batch: u32) -> Option<StepEstimate> {
+        self.search(model, cluster, gpus, batch)
+    }
+}
+
+/// Registry of techniques, reusable across sessions/users (paper §2).
+#[derive(Default)]
+pub struct Library {
+    techniques: Vec<Box<dyn Parallelism>>,
+}
+
+impl Library {
+    pub fn new() -> Self {
+        Library { techniques: Vec::new() }
+    }
+
+    /// `registerParallelism` in Figure 1B.
+    pub fn register(&mut self, tech: Box<dyn Parallelism>) {
+        assert!(
+            self.techniques.iter().all(|t| t.name() != tech.name()),
+            "technique '{}' already registered",
+            tech.name()
+        );
+        self.techniques.push(tech);
+    }
+
+    pub fn len(&self) -> usize {
+        self.techniques.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.techniques.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &dyn Parallelism {
+        self.techniques[idx].as_ref()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<(usize, &dyn Parallelism)> {
+        self.techniques
+            .iter()
+            .enumerate()
+            .find(|(_, t)| t.name() == name)
+            .map(|(i, t)| (i, t.as_ref()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.techniques.iter().map(|t| t.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &dyn Parallelism)> {
+        self.techniques.iter().enumerate().map(|(i, t)| (i, t.as_ref()))
+    }
+}
+
+/// Strong-scaling saturation: achievable MXU/SM occupancy falls off as the
+/// per-GPU (or per-microbatch) sample count shrinks — the effect that makes
+/// "throw 8 GPUs at every job" wasteful and joint allocation worth doing.
+/// Calibrated as a saturating curve with half-occupancy at 4 samples
+/// (typical for A100-class transformers; see DESIGN.md §6).
+pub fn batch_efficiency(samples_per_unit: f64) -> f64 {
+    let s = samples_per_unit.max(0.0);
+    s / (s + 4.0)
+}
+
+/// Shared memory-model helpers used by the built-in techniques.
+pub mod mem {
+    use crate::models::ModelSpec;
+
+    /// Full replicated training state (bytes/GPU) under data parallelism.
+    pub fn replicated_state(model: &ModelSpec) -> f64 {
+        model.state_bytes()
+    }
+
+    /// ZeRO-3/FSDP: state sharded across `g` GPUs + one layer's gathered
+    /// weights as working set.
+    pub fn sharded_state(model: &ModelSpec, g: u32) -> f64 {
+        model.state_bytes() / g as f64
+            + 2.0 * model.params / model.layers as f64 // gathered layer (bf16)
+    }
+
+    /// Activation footprint WITH checkpointing: per-layer boundaries are
+    /// stashed, one layer's activations recompute during backward.
+    pub fn checkpointed_act(model: &ModelSpec, samples: f64) -> f64 {
+        samples
+            * (model.layers as f64 * model.boundary_bytes_per_sample()
+                + model.act_bytes_per_sample / model.layers as f64)
+    }
+
+    /// Pipeline: contiguous stage of `layers/g` layers.
+    pub fn pipeline_stage_state(model: &ModelSpec, g: u32) -> f64 {
+        model.state_bytes() / g as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::models::ModelSpec;
+
+    struct Fake(&'static str);
+
+    impl Parallelism for Fake {
+        fn name(&self) -> &str {
+            self.0
+        }
+
+        fn search(&self, _: &ModelSpec, _: &ClusterSpec, gpus: u32, _: u32)
+            -> Option<StepEstimate> {
+            Some(StepEstimate { step_time_s: 1.0 / gpus as f64,
+                                mem_per_gpu: 1.0, mfu: 0.5 })
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut lib = Library::new();
+        lib.register(Box::new(Fake("a")));
+        lib.register(Box::new(Fake("b")));
+        assert_eq!(lib.len(), 2);
+        assert_eq!(lib.by_name("b").unwrap().0, 1);
+        assert_eq!(lib.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn duplicate_names_rejected() {
+        let mut lib = Library::new();
+        lib.register(Box::new(Fake("a")));
+        lib.register(Box::new(Fake("a")));
+    }
+
+    #[test]
+    fn execute_defaults_to_search() {
+        let f = Fake("x");
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::resnet200();
+        assert_eq!(f.execute(&m, &c, 4, 16), f.search(&m, &c, 4, 16));
+    }
+}

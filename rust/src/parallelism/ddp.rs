@@ -1,0 +1,117 @@
+//! DDP (PyTorch DistributedDataParallel) cost model.
+//!
+//! Full replication: every GPU holds the complete training state, the
+//! global batch splits across replicas, gradients all-reduce each step.
+//!
+//! step = compute(batch/g) + (1 - overlap) * ring_allreduce(grad bytes)
+//! ring_allreduce(bytes) = 2 * (g-1)/g * bytes / bus_bw
+//!
+//! DDP is the throughput king for models that FIT (ResNet-200) and
+//! infeasible for the large transformers — the asymmetry that makes the
+//! paper's joint parallelism selection matter.
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+use crate::parallelism::api::{mem, Parallelism, StepEstimate};
+
+#[derive(Debug, Clone)]
+pub struct Ddp {
+    /// Achieved MFU for dense compute under DDP.
+    pub mfu: f64,
+    /// Fraction of the all-reduce hidden behind backward compute.
+    pub overlap: f64,
+}
+
+impl Default for Ddp {
+    fn default() -> Self {
+        Ddp { mfu: 0.45, overlap: 0.7 }
+    }
+}
+
+impl Parallelism for Ddp {
+    fn name(&self) -> &str {
+        "ddp"
+    }
+
+    fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+              batch: u32) -> Option<StepEstimate> {
+        if gpus == 0 || gpus > cluster.total_gpus() || batch < gpus {
+            return None;
+        }
+        let per_gpu_batch = batch as f64 / gpus as f64;
+        let mem_per_gpu = mem::replicated_state(model)
+            + model.act_bytes_per_sample * per_gpu_batch;
+        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+            return None; // the A100-40GB wall for GPT-2 XL and up
+        }
+        let eff = self.mfu * crate::parallelism::api::batch_efficiency(per_gpu_batch);
+        let compute = model.flops_per_step(batch)
+            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+        let comm = if gpus == 1 {
+            0.0
+        } else {
+            let grad_bytes = 4.0 * model.params; // fp32 gradient buckets
+            2.0 * (gpus as f64 - 1.0) / gpus as f64 * grad_bytes
+                / cluster.collective_bw(gpus)
+        };
+        let step = compute + (1.0 - self.overlap) * comm;
+        Some(StepEstimate {
+            step_time_s: step,
+            mem_per_gpu,
+            mfu: eff * compute / step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infeasible_for_gpt2_xl() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt2_xl();
+        // full replication of AdamW state (20B/param = 30 GB) plus two
+        // samples of pre-flash activations exceeds the usable A100-40GB.
+        assert!(m.state_bytes() + m.act_bytes(2)
+                > c.node.gpu.usable_bytes());
+        assert!(Ddp::default().search(&m, &c, 8, 16).is_none());
+    }
+
+    #[test]
+    fn feasible_and_fast_for_resnet() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::resnet200();
+        let e = Ddp::default().search(&m, &c, 8, 64).expect("fits");
+        assert!(e.step_time_s > 0.0);
+        assert!(e.mem_per_gpu < 40e9);
+    }
+
+    #[test]
+    fn runtime_improves_with_gpus() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::resnet200();
+        let d = Ddp::default();
+        let t1 = d.search(&m, &c, 1, 64).unwrap().step_time_s;
+        let t8 = d.search(&m, &c, 8, 64).unwrap().step_time_s;
+        assert!(t8 < t1 / 4.0, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn batch_smaller_than_gpus_rejected() {
+        let c = ClusterSpec::p4d(2);
+        let m = ModelSpec::resnet200();
+        assert!(Ddp::default().search(&m, &c, 16, 8).is_none());
+    }
+
+    #[test]
+    fn cross_node_comm_penalty() {
+        let c = ClusterSpec::p4d(2);
+        let m = ModelSpec::resnet200();
+        let d = Ddp::default();
+        let t8 = d.search(&m, &c, 8, 128).unwrap().step_time_s;
+        let t16 = d.search(&m, &c, 16, 128).unwrap().step_time_s;
+        // 16 GPUs cross nodes: comm over EFA erodes the 2x compute win
+        assert!(t16 > t8 * 0.5, "t8={t8} t16={t16}");
+    }
+}

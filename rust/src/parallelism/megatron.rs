@@ -1,0 +1,109 @@
+//! Megatron-LM tensor parallelism (Shoeybi et al. 2019) — an OPTIONAL
+//! fifth technique demonstrating the Library's extensibility (paper
+//! Figure 1B). Not part of `default_library()`: Table 2 registers exactly
+//! the paper's four techniques; `extended_library()` adds this one (used
+//! by `examples/custom_parallelism.rs` and the sensitivity bench).
+//!
+//! Cost model: every matmul shards column/row-wise across `g` GPUs inside
+//! one NVLink domain; two activation all-reduces per layer per pass.
+//! Memory: weights/optimizer shard by `g`, activations replicated.
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+use crate::parallelism::api::{batch_efficiency, Parallelism, StepEstimate};
+
+#[derive(Debug, Clone)]
+pub struct MegatronTp {
+    pub mfu: f64,
+}
+
+impl Default for MegatronTp {
+    fn default() -> Self {
+        MegatronTp { mfu: 0.42 }
+    }
+}
+
+impl Parallelism for MegatronTp {
+    fn name(&self) -> &str {
+        "megatron-tp"
+    }
+
+    fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+              batch: u32) -> Option<StepEstimate> {
+        if gpus == 0 || gpus > cluster.node.gpus_per_node {
+            return None; // TP lives inside the NVLink domain
+        }
+        if model.hidden % gpus != 0 {
+            return None; // head/ffn dims must split evenly
+        }
+        let mem = model.state_bytes() / gpus as f64
+            + model.act_bytes_per_sample * batch as f64; // acts replicated
+        if mem > cluster.node.gpu.usable_bytes() {
+            return None;
+        }
+        // TP keeps the FULL batch on every shard: occupancy is set by the
+        // global batch, one of TP's practical advantages at small batches.
+        let eff = self.mfu * batch_efficiency(batch as f64);
+        let compute = model.flops_per_step(batch)
+            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+        let comm = if gpus == 1 {
+            0.0
+        } else {
+            // 4 all-reduces/layer (2 fwd + 2 bwd) over layer activations
+            let act = model.boundary_bytes_per_sample() * batch as f64;
+            4.0 * model.layers as f64 * 2.0 * (gpus as f64 - 1.0)
+                / gpus as f64 * act / cluster.node.intra_bw
+        };
+        let step = compute + 0.5 * comm; // partial overlap
+        Some(StepEstimate {
+            step_time_s: step,
+            mem_per_gpu: mem,
+            mfu: eff * compute / step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_in_nvlink_domain() {
+        let c = ClusterSpec::p4d(2);
+        let m = ModelSpec::gpt2_xl();
+        assert!(MegatronTp::default().search(&m, &c, 16, 4).is_none());
+        assert!(MegatronTp::default().search(&m, &c, 8, 4).is_some());
+    }
+
+    #[test]
+    fn activation_replication_limits_batch() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt2_xl();
+        let tp = MegatronTp::default();
+        // replicated pre-flash activations blow past usable memory at bs32
+        assert!(tp.search(&m, &c, 8, 32).is_none());
+        assert!(tp.search(&m, &c, 8, 4).is_some());
+    }
+
+    #[test]
+    fn wins_at_tiny_batches_vs_fsdp() {
+        // TP's occupancy uses the GLOBAL batch -> at batch 4 on 4 GPUs it
+        // beats FSDP (whose per-GPU batch is 1)
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt2_xl();
+        let tp = MegatronTp::default().search(&m, &c, 4, 4).unwrap();
+        let fsdp = crate::parallelism::fsdp::Fsdp::default()
+            .search(&m, &c, 4, 4)
+            .unwrap();
+        assert!(tp.step_time_s < fsdp.step_time_s,
+                "tp {} !< fsdp {}", tp.step_time_s, fsdp.step_time_s);
+    }
+
+    #[test]
+    fn hidden_divisibility() {
+        let c = ClusterSpec::p4d(1);
+        let mut m = ModelSpec::gpt2_xl();
+        m.hidden = 1602; // not divisible by 4
+        assert!(MegatronTp::default().search(&m, &c, 4, 16).is_none());
+    }
+}

@@ -1,0 +1,35 @@
+//! The Parallelism Library (paper §2, Figure 1B).
+//!
+//! Users register techniques behind the two-function `Parallelism` trait
+//! (`search` = feasibility + cost estimate, `execute` = launch); Saturn's
+//! Trial Runner then profiles every (model, technique, GPU count) and the
+//! Solver picks per-job winners. Four built-ins mirror the paper's
+//! registration set: DDP and FSDP (PyTorch Distributed), GPipe, and
+//! FairScale-style model offloading.
+
+pub mod api;
+pub mod ddp;
+pub mod fsdp;
+pub mod gpipe;
+pub mod megatron;
+pub mod offload;
+
+pub use api::{Library, Parallelism, StepEstimate};
+
+/// The paper's default library: DDP, FSDP, GPipe, offloading.
+pub fn default_library() -> Library {
+    let mut lib = Library::new();
+    lib.register(Box::new(ddp::Ddp::default()));
+    lib.register(Box::new(fsdp::Fsdp::default()));
+    lib.register(Box::new(gpipe::GPipe::default()));
+    lib.register(Box::new(offload::Offload::default()));
+    lib
+}
+
+/// Default library + Megatron tensor parallelism (extensibility demo /
+/// ablation arm; Table 2 itself uses the paper's four techniques).
+pub fn extended_library() -> Library {
+    let mut lib = default_library();
+    lib.register(Box::new(megatron::MegatronTp::default()));
+    lib
+}

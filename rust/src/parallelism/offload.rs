@@ -1,0 +1,116 @@
+//! Model offloading cost model (FairScale OffloadModel / ZeRO-Offload
+//! style): weights + optimizer state live in host DRAM, layers stream over
+//! PCIe for fwd/bwd, the optimizer step runs on CPU.
+//!
+//!   step = compute(batch) / (g * peak * mfu_offload)
+//!          + pcie_traffic / (g * pcie_bw)
+//!   pcie_traffic ~= 2B*P (weights in, fwd) + 2B*P (weights in, bwd)
+//!                 + 2B*P (grads out)             = 6B * params
+//!
+//! Always memory-feasible (GPU holds only a layer window + activations) and
+//! nearly always the slowest option — the scheduler's technique of last
+//! resort, which is exactly its role in the paper.
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+use crate::parallelism::api::{Parallelism, StepEstimate};
+
+#[derive(Debug, Clone)]
+pub struct Offload {
+    pub mfu: f64,
+    /// Fraction of PCIe traffic hidden behind compute (double buffering).
+    pub overlap: f64,
+}
+
+impl Default for Offload {
+    fn default() -> Self {
+        Offload { mfu: 0.30, overlap: 0.4 }
+    }
+}
+
+impl Parallelism for Offload {
+    fn name(&self) -> &str {
+        "offload"
+    }
+
+    fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
+              batch: u32) -> Option<StepEstimate> {
+        if gpus == 0 || gpus > cluster.total_gpus() || batch < gpus {
+            return None;
+        }
+        let per_gpu_batch = batch as f64 / gpus as f64;
+        // GPU working set: a 2-layer weight window + activation
+        // checkpoints (layer boundaries) + one layer's recompute acts —
+        // offload engines always pair with activation checkpointing.
+        let window = 2.0 * 2.0 * model.params / model.layers as f64;
+        let ckpts = model.layers as f64 * model.boundary_bytes_per_sample()
+            * per_gpu_batch;
+        let working =
+            model.act_bytes_per_sample * per_gpu_batch / model.layers as f64;
+        let mem_per_gpu = window + ckpts + working;
+        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+            return None; // activations can still overflow at huge batches
+        }
+        // checkpointing re-runs forward during backward: +1/3 compute
+        let eff = self.mfu * crate::parallelism::api::batch_efficiency(per_gpu_batch);
+        let compute = (4.0 / 3.0) * model.flops_per_step(batch)
+            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+        let pcie = 6.0 * model.params / (gpus as f64 * cluster.node.pcie_bw);
+        // data-parallel grad sync when g > 1 (fp32, ring)
+        let sync = if gpus == 1 {
+            0.0
+        } else {
+            2.0 * (gpus as f64 - 1.0) / gpus as f64 * 4.0 * model.params
+                / cluster.collective_bw(gpus)
+        };
+        let step = compute + (1.0 - self.overlap) * pcie + sync;
+        Some(StepEstimate {
+            step_time_s: step,
+            mem_per_gpu,
+            mfu: eff * compute / step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_feasible_for_gptj_single_gpu() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt_j();
+        let e = Offload::default().search(&m, &c, 1, 16).expect("feasible");
+        assert!(e.mem_per_gpu < 40e9);
+    }
+
+    #[test]
+    fn slower_than_fsdp_when_both_fit() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt2_xl();
+        let off = Offload::default().search(&m, &c, 8, 16).unwrap();
+        let fsdp = crate::parallelism::fsdp::Fsdp::default()
+            .search(&m, &c, 8, 16)
+            .unwrap();
+        assert!(off.step_time_s > fsdp.step_time_s);
+    }
+
+    #[test]
+    fn pcie_dominates_for_big_models() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt_j();
+        let e = Offload::default().search(&m, &c, 1, 16).unwrap();
+        let pcie = 6.0 * m.params / c.node.pcie_bw * (1.0 - 0.4);
+        assert!(e.step_time_s > pcie * 0.9);
+    }
+
+    #[test]
+    fn multi_gpu_offload_scales() {
+        let c = ClusterSpec::p4d(1);
+        let m = ModelSpec::gpt_j();
+        let o = Offload::default();
+        let t1 = o.search(&m, &c, 1, 16).unwrap().step_time_s;
+        let t8 = o.search(&m, &c, 8, 16).unwrap().step_time_s;
+        assert!(t8 < t1);
+    }
+}

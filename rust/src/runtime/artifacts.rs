@@ -1,0 +1,130 @@
+//! Artifact manifest: the machine-readable contract between `aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered HLO artifact (train / eval / init for a model x batch).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub model: String,
+    pub batch: Option<u32>,
+    pub seq: u32,
+    pub vocab: u32,
+    pub padded_params: usize,
+    pub param_count: usize,
+    pub flops_per_step: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let arr = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::new();
+        for a in arr {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let get_num = |k: &str| -> Result<f64> {
+                a.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                file: dir.join(get_str("file")?),
+                kind: get_str("kind")?,
+                model: get_str("model")?,
+                batch: a.get("batch").and_then(|v| v.as_f64()).map(|b| b as u32),
+                seq: get_num("seq")? as u32,
+                vocab: get_num("vocab")? as u32,
+                padded_params: get_num("padded_params")? as usize,
+                param_count: get_num("param_count")? as usize,
+                flops_per_step: a
+                    .get("flops_per_step")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Default location: `$SATURN_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("SATURN_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn find(&self, kind: &str, model: &str, batch: Option<u32>)
+        -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind && a.model == model
+                && (batch.is_none() || a.batch == batch)
+        })
+    }
+
+    pub fn train(&self, model: &str, batch: u32) -> Result<&ArtifactSpec> {
+        self.find("train", model, Some(batch)).ok_or_else(|| {
+            anyhow!("no train artifact for model={model} batch={batch}; \
+                     available: {:?}",
+                    self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>())
+        })
+    }
+
+    pub fn init(&self, model: &str) -> Result<&ArtifactSpec> {
+        self.find("init", model, None)
+            .ok_or_else(|| anyhow!("no init artifact for model={model}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the package root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        assert!(m.artifacts.len() >= 7);
+        let t = m.train("tiny", 8).unwrap();
+        assert_eq!(t.seq, 64);
+        assert_eq!(t.padded_params % 2048, 0);
+        assert!(t.file.exists());
+        assert!(m.init("tiny").is_ok());
+        assert!(m.train("tiny", 99).is_err());
+    }
+
+    #[test]
+    fn find_filters_by_kind() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.find("eval", "tiny", None).is_some());
+        assert!(m.find("nope", "tiny", None).is_none());
+    }
+}

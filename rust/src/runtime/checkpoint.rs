@@ -1,0 +1,211 @@
+//! Checkpoint/restore for real training sessions.
+//!
+//! The simulator charges an abstract checkpoint penalty when introspection
+//! migrates a job (paper §2); this module is the REAL counterpart used by
+//! the coordinator's executor lanes: a `Trainer`'s full state (flat
+//! params, AdamW moments, step counter, loss history) round-trips through
+//! a self-describing binary file, so a job can be stopped on one lane and
+//! resumed on another — or in another process entirely.
+//!
+//! Format (little-endian):
+//!   magic "STRNCKPT" | version u32 | step u64 | param_count u64 |
+//!   params f32[P] | m f32[P] | v f32[P] | n_losses u64 | losses f32[n]
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"STRNCKPT";
+const VERSION: u32 = 1;
+
+/// In-memory checkpoint of a training session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub losses: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf = Vec::with_capacity(24 + 12 * self.params.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for arr in [&self.params, &self.m, &self.v] {
+            for x in arr.iter() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        buf.extend_from_slice(&(self.losses.len() as u64).to_le_bytes());
+        for x in &self.losses {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        // atomic-ish: write sidecar then rename
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > data.len() {
+                bail!("truncated checkpoint at byte {pos:?}");
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("not a saturn checkpoint (bad magic)");
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let p = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        let mut read_arr = |pos: &mut usize, n: usize| -> Result<Vec<f32>> {
+            let raw = take(pos, 4 * n)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        };
+        let params = read_arr(&mut pos, p)?;
+        let m = read_arr(&mut pos, p)?;
+        let v = read_arr(&mut pos, p)?;
+        let nl = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        let losses = read_arr(&mut pos, nl)?;
+        if pos != data.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { step, params, m, v, losses })
+    }
+}
+
+impl crate::runtime::trainer::Trainer {
+    /// Snapshot the full session state.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(Checkpoint {
+            step: self.step,
+            params: self.params_vec()?,
+            m: self.m_vec()?,
+            v: self.v_vec()?,
+            losses: self.losses.clone(),
+        })
+    }
+
+    /// Restore a snapshot into this session (artifact shapes must match).
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let p = self.spec().padded_params;
+        if ckpt.params.len() != p {
+            return Err(anyhow!(
+                "checkpoint has {} params, artifact expects {p}",
+                ckpt.params.len()));
+        }
+        self.set_state(&ckpt.params, &ckpt.m, &ckpt.v, ckpt.step,
+                       ckpt.losses.clone());
+        Ok(())
+    }
+
+    pub fn save_to(&self, path: &Path) -> Result<()> {
+        self.checkpoint()?.save(path)
+    }
+
+    pub fn load_from(&mut self, path: &Path) -> Result<()> {
+        self.restore(&Checkpoint::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Engine, Manifest, Trainer};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<Engine>, Manifest) {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        (Arc::new(Engine::cpu().unwrap()),
+         Manifest::load(&dir).expect("make artifacts first"))
+    }
+
+    #[test]
+    fn roundtrip_preserves_training_trajectory() {
+        let (engine, manifest) = setup();
+        let tokens: Vec<i32> = (0..8 * 64).map(|i| (i * 7 % 512) as i32).collect();
+
+        // session A: 4 steps, checkpoint, 3 more steps
+        let mut a = Trainer::new(engine.clone(), &manifest, "tiny", 8, 3).unwrap();
+        for _ in 0..4 {
+            a.step_tokens(1e-3, &tokens).unwrap();
+        }
+        let ckpt = a.checkpoint().unwrap();
+        let mut want = Vec::new();
+        for _ in 0..3 {
+            want.push(a.step_tokens(1e-3, &tokens).unwrap());
+        }
+
+        // session B: restored from the checkpoint on a FRESH trainer
+        let mut b = Trainer::new(engine, &manifest, "tiny", 8, 999).unwrap();
+        b.restore(&ckpt).unwrap();
+        assert_eq!(b.step, 4);
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(b.step_tokens(1e-3, &tokens).unwrap());
+        }
+        assert_eq!(got, want, "restored session diverged");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ckpt = Checkpoint {
+            step: 42,
+            params: (0..2048).map(|i| i as f32 * 0.5).collect(),
+            m: vec![0.25; 2048],
+            v: vec![0.125; 2048],
+            losses: vec![6.2, 5.1, 4.0],
+        };
+        let path = std::env::temp_dir().join("saturn_ckpt_test.bin");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, loaded);
+    }
+
+    #[test]
+    fn corrupt_files_rejected() {
+        let path = std::env::temp_dir().join("saturn_ckpt_bad.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let path2 = std::env::temp_dir().join("saturn_ckpt_trunc.bin");
+        let ckpt = Checkpoint { step: 1, params: vec![1.0; 16], m: vec![0.0; 16],
+                                v: vec![0.0; 16], losses: vec![] };
+        ckpt.save(&path2).unwrap();
+        let full = std::fs::read(&path2).unwrap();
+        std::fs::write(&path2, &full[..full.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&path2).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (engine, manifest) = setup();
+        let mut t = Trainer::new(engine, &manifest, "tiny", 8, 0).unwrap();
+        let ckpt = Checkpoint { step: 1, params: vec![0.0; 10], m: vec![0.0; 10],
+                                v: vec![0.0; 10], losses: vec![] };
+        assert!(t.restore(&ckpt).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT execution runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
+//! drives training entirely from Rust. Python never runs here.
+
+pub mod artifacts;
+pub mod checkpoint;
+pub mod client;
+pub mod trainer;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use checkpoint::Checkpoint;
+pub use client::Engine;
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,10 @@
+//! Saturn's contribution: the joint (parallelism, allocation, schedule)
+//! solver and its introspection loop (paper §2, "Solver").
+
+pub mod introspect;
+pub mod plan;
+pub mod solver;
+
+pub use introspect::SaturnPolicy;
+pub use plan::{JobPlan, SaturnPlan};
+pub use solver::{solve_joint, SolverMode, SolverStats};

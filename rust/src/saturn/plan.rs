@@ -1,0 +1,63 @@
+//! Plan data model: the Solver's output consumed by the execution engine.
+
+/// Chosen execution plan for one job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobPlan {
+    pub job_id: usize,
+    pub tech: usize,
+    pub gpus: u32,
+    /// Estimated remaining runtime under this plan (seconds).
+    pub runtime_s: f64,
+}
+
+/// The Solver's answer for a whole multi-job.
+#[derive(Debug, Clone)]
+pub struct SaturnPlan {
+    /// One plan per unfinished job.
+    pub choices: Vec<JobPlan>,
+    /// Launch priority (list-scheduling order; earlier = higher priority).
+    pub order: Vec<usize>,
+    /// Makespan lower bound from the MILP relaxation (diagnostics).
+    pub lower_bound_s: f64,
+    /// Predicted makespan of the list schedule.
+    pub predicted_makespan_s: f64,
+}
+
+impl SaturnPlan {
+    pub fn plan_for(&self, job_id: usize) -> Option<&JobPlan> {
+        self.choices.iter().find(|p| p.job_id == job_id)
+    }
+
+    /// Total GPU-seconds of work the plan schedules (area).
+    pub fn area(&self) -> f64 {
+        self.choices
+            .iter()
+            .map(|p| p.gpus as f64 * p.runtime_s)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> SaturnPlan {
+        SaturnPlan {
+            choices: vec![
+                JobPlan { job_id: 0, tech: 1, gpus: 4, runtime_s: 100.0 },
+                JobPlan { job_id: 2, tech: 0, gpus: 2, runtime_s: 50.0 },
+            ],
+            order: vec![0, 2],
+            lower_bound_s: 90.0,
+            predicted_makespan_s: 110.0,
+        }
+    }
+
+    #[test]
+    fn lookup_and_area() {
+        let p = plan();
+        assert_eq!(p.plan_for(2).unwrap().gpus, 2);
+        assert!(p.plan_for(1).is_none());
+        assert!((p.area() - 500.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,554 @@
+//! The joint MILP: parallelism selection x GPU allocation x scheduling.
+//!
+//! The workshop paper states the joint problem is cast as an MILP and
+//! solved with Gurobi, without printing the formulation. We implement the
+//! standard two-level decomposition for malleable-task makespan problems
+//! (documented in DESIGN.md §4):
+//!
+//!  1. **Plan-selection MILP** (exact, via `solver::milp`): binary
+//!     x_{j,c} over each job's Pareto plans c = (technique, gpus) with
+//!
+//!     ```text
+//!     min  M
+//!     s.t. sum_c x_{jc} = 1                          (each job planned)
+//!          sum_c t_{jc} x_{jc} <= M                  (critical path)
+//!          sum_{j,c} g_{jc} t_{jc} x_{jc} <= G * M   (GPU area)
+//!     ```
+//!
+//!     The two lower bounds (longest job, total area / G) are exactly the
+//!     classic makespan LP bounds; minimizing M trades per-job speedups
+//!     (more GPUs) against cluster-wide packing — the paper's core insight
+//!     that allocation, parallelism and schedule must be decided jointly.
+//!
+//!  2. **List scheduling** (LPT first-fit on the chosen plans) to realize
+//!     an order, followed by a local-search repair that re-plans the
+//!     makespan-defining job if a different (tech, gpus) shortens the
+//!     schedule.
+//!
+//! An exact time-indexed formulation (`SolverMode::ExactSlots`) is kept
+//! for small instances to validate the decomposition in tests.
+
+use std::time::Instant;
+
+use crate::cluster::ClusterSpec;
+use crate::saturn::plan::{JobPlan, SaturnPlan};
+use crate::sim::placement::FreeState;
+use crate::solver::lp::{Cmp, Lp};
+use crate::solver::milp::{solve as milp_solve, MilpOptions, MilpResult};
+use crate::trials::ProfileTable;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverMode {
+    /// Plan-selection MILP + list scheduling (default; scales to dozens of
+    /// jobs).
+    Joint,
+    /// Greedy fallback (no MILP) — used for very large instances and as an
+    /// ablation arm in bench E9.
+    Heuristic,
+    /// Time-indexed exact MILP; exponential, tests/small instances only.
+    ExactSlots { slots: usize },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SolverStats {
+    pub milp_nodes: usize,
+    pub wall_s: f64,
+    pub proved_optimal: bool,
+}
+
+/// Inputs per unfinished job: (job_id, remaining_steps).
+pub fn solve_joint(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+) -> (SaturnPlan, SolverStats) {
+    solve_joint_with(jobs, profiles, cluster, mode, 1.0)
+}
+
+/// `lookahead` (kappa >= 1) encodes introspection-awareness: a job's
+/// critical-path contribution is divided by kappa because a re-solve can
+/// upsize it later. kappa = 1 -> static plans (no introspection). With
+/// kappa > 1 the solver prefers max-efficiency (min-area) allocations up
+/// front and naturally upgrades the stragglers at the tail — the classic
+/// water-filling optimum for malleable jobs under preemption.
+pub fn solve_joint_with(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+    lookahead: f64,
+) -> (SaturnPlan, SolverStats) {
+    let start = Instant::now();
+    let kappa = lookahead.max(1.0);
+    let mut stats = SolverStats::default();
+
+    let plans: Vec<(usize, Vec<(usize, u32, f64)>)> = jobs
+        .iter()
+        .map(|&(id, steps)| {
+            let ps = profiles
+                .pareto_plans(id)
+                .into_iter()
+                .map(|(tech, g, step)| (tech, g, step * steps as f64))
+                .collect::<Vec<_>>();
+            (id, ps)
+        })
+        .collect();
+
+    let choices = match mode {
+        SolverMode::Heuristic => greedy_choice(&plans, cluster, kappa),
+        SolverMode::Joint => {
+            match milp_choice(&plans, cluster, kappa, &mut stats) {
+                Some(c) => c,
+                None => greedy_choice(&plans, cluster, kappa), // fallback
+            }
+        }
+        SolverMode::ExactSlots { slots } => {
+            match exact_slot_choice(&plans, cluster, slots, &mut stats) {
+                Some(c) => c,
+                None => greedy_choice(&plans, cluster, kappa),
+            }
+        }
+    };
+
+    let mut plan = build_schedule(choices, cluster);
+    if kappa <= 1.0 + 1e-9 {
+        // static plans: repair against the realized list schedule
+        local_search(&mut plan, &plans, cluster);
+    }
+    stats.wall_s = start.elapsed().as_secs_f64();
+    (plan, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Level 1: plan selection
+// ---------------------------------------------------------------------------
+
+fn milp_choice(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    cluster: &ClusterSpec,
+    kappa: f64,
+    stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
+    let g_total = cluster.total_gpus() as f64;
+    // variable layout: x_{j,c} ... , M (last)
+    let mut var = 0usize;
+    let mut index: Vec<Vec<usize>> = Vec::new();
+    for (_, ps) in plans {
+        index.push((0..ps.len()).map(|c| { let v = var + c; v }).collect());
+        var += ps.len();
+    }
+    let m_var = var;
+    let n = var + 1;
+
+    let mut lp = Lp::new(n);
+    lp.set_obj(m_var, 1.0);
+    // assignment + critical path per job
+    for (ji, (_, ps)) in plans.iter().enumerate() {
+        if ps.is_empty() {
+            return None; // job with no feasible plan: give up to greedy
+        }
+        lp.add(index[ji].iter().map(|&v| (v, 1.0)).collect(), Cmp::Eq, 1.0);
+        // critical path, discounted by the introspection lookahead kappa
+        let mut cp: Vec<(usize, f64)> = ps
+            .iter()
+            .enumerate()
+            .map(|(c, p)| (index[ji][c], p.2 / kappa))
+            .collect();
+        cp.push((m_var, -1.0));
+        lp.add(cp, Cmp::Le, 0.0);
+    }
+    // area bound
+    let mut area: Vec<(usize, f64)> = Vec::new();
+    for (ji, (_, ps)) in plans.iter().enumerate() {
+        for (c, p) in ps.iter().enumerate() {
+            area.push((index[ji][c], p.1 as f64 * p.2));
+        }
+    }
+    area.push((m_var, -g_total));
+    lp.add(area, Cmp::Le, 0.0);
+    // binaries bounded by 1
+    for vs in &index {
+        for &v in vs {
+            lp.bound_le(v, 1.0);
+        }
+    }
+
+    let ints: Vec<usize> = index.iter().flatten().copied().collect();
+    let opts = MilpOptions { gap: 0.01, max_nodes: 20_000, time_limit_s: 10.0 };
+    match milp_solve(&lp, &ints, &opts) {
+        MilpResult::Solved { x, nodes, proved_optimal, .. } => {
+            stats.milp_nodes = nodes;
+            stats.proved_optimal = proved_optimal;
+            let mut out = Vec::new();
+            for (ji, (id, ps)) in plans.iter().enumerate() {
+                let c = (0..ps.len())
+                    .find(|&c| x[index[ji][c]] > 0.5)
+                    .unwrap_or(0);
+                let (tech, gpus, runtime) = ps[c];
+                out.push(JobPlan { job_id: *id, tech, gpus, runtime_s: runtime });
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+/// Greedy: start every job at its smallest feasible plan, then spend the
+/// remaining "area budget" on the job that currently bounds the makespan.
+fn greedy_choice(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    cluster: &ClusterSpec,
+    kappa: f64,
+) -> Vec<JobPlan> {
+    let g_total = cluster.total_gpus() as f64;
+    let mut pick: Vec<usize> = plans.iter().map(|_| 0).collect();
+    for _ in 0..64 {
+        // current makespan bound = max(longest job, area/G)
+        let longest_ji = (0..plans.len())
+            .max_by(|&a, &b| {
+                let ta = plans[a].1.get(pick[a]).map(|p| p.2).unwrap_or(0.0);
+                let tb = plans[b].1.get(pick[b]).map(|p| p.2).unwrap_or(0.0);
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap();
+        let area: f64 = (0..plans.len())
+            .map(|ji| plans[ji].1.get(pick[ji])
+                .map(|p| p.1 as f64 * p.2).unwrap_or(0.0))
+            .sum();
+        let longest = plans[longest_ji].1.get(pick[longest_ji])
+            .map(|p| p.2).unwrap_or(0.0);
+        if area / g_total >= longest / kappa {
+            break; // area-bound: more GPUs per job only adds area
+        }
+        // upgrade the critical job if a bigger plan exists
+        if pick[longest_ji] + 1 < plans[longest_ji].1.len() {
+            pick[longest_ji] += 1;
+        } else {
+            break;
+        }
+    }
+    plans
+        .iter()
+        .zip(&pick)
+        .filter(|((_, ps), _)| !ps.is_empty())
+        .map(|((id, ps), &c)| {
+            let (tech, gpus, runtime) = ps[c];
+            JobPlan { job_id: *id, tech, gpus, runtime_s: runtime }
+        })
+        .collect()
+}
+
+/// Exact time-indexed MILP (x_{j,c,s}); small instances only.
+fn exact_slot_choice(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    cluster: &ClusterSpec,
+    slots: usize,
+    stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
+    // horizon: makespan of the greedy schedule
+    let greedy = build_schedule(greedy_choice(plans, cluster, 1.0), cluster);
+    let horizon = greedy.predicted_makespan_s * 1.25 + 1.0;
+    let dt = horizon / slots as f64;
+    let g_total = cluster.total_gpus() as f64;
+
+    // variables: x_{j,c,s} + M
+    let mut var = 0usize;
+    let mut idx: Vec<Vec<Vec<usize>>> = Vec::new(); // [j][c][s]
+    for (_, ps) in plans {
+        let mut per_c = Vec::new();
+        for _ in ps {
+            per_c.push((0..slots).map(|s| { let v = var + s; v }).collect());
+            var += slots;
+        }
+        idx.push(per_c);
+    }
+    let m_var = var;
+    let n = var + 1;
+    let mut lp = Lp::new(n);
+    lp.set_obj(m_var, 1.0);
+
+    for (ji, (_, ps)) in plans.iter().enumerate() {
+        if ps.is_empty() {
+            return None;
+        }
+        // one (plan, start)
+        let all: Vec<(usize, f64)> = idx[ji]
+            .iter()
+            .flatten()
+            .map(|&v| (v, 1.0))
+            .collect();
+        lp.add(all, Cmp::Eq, 1.0);
+        // makespan: start*dt + t <= M  (big-M linearization)
+        let big = horizon * 2.0;
+        for (c, p) in ps.iter().enumerate() {
+            for s in 0..slots {
+                lp.add(
+                    vec![(idx[ji][c][s], s as f64 * dt + p.2 + big),
+                         (m_var, -1.0)],
+                    Cmp::Le,
+                    big,
+                );
+            }
+        }
+    }
+    // capacity per slot
+    for slot in 0..slots {
+        let mut cap: Vec<(usize, f64)> = Vec::new();
+        for (ji, (_, ps)) in plans.iter().enumerate() {
+            for (c, p) in ps.iter().enumerate() {
+                let dur_slots = (p.2 / dt).ceil() as usize;
+                // job occupies `slot` if it started in (slot-dur, slot]
+                let lo = slot.saturating_sub(dur_slots.saturating_sub(1));
+                for s in lo..=slot {
+                    cap.push((idx[ji][c][s], p.1 as f64));
+                }
+            }
+        }
+        if !cap.is_empty() {
+            lp.add(cap, Cmp::Le, g_total);
+        }
+    }
+    for vs in idx.iter().flatten().flatten() {
+        lp.bound_le(*vs, 1.0);
+    }
+
+    let ints: Vec<usize> = idx.iter().flatten().flatten().copied().collect();
+    let opts = MilpOptions { gap: 1e-3, max_nodes: 50_000, time_limit_s: 20.0 };
+    match milp_solve(&lp, &ints, &opts) {
+        MilpResult::Solved { x, nodes, proved_optimal, .. } => {
+            stats.milp_nodes += nodes;
+            stats.proved_optimal = proved_optimal;
+            let mut out = Vec::new();
+            for (ji, (id, ps)) in plans.iter().enumerate() {
+                let mut found = None;
+                for (c, p) in ps.iter().enumerate() {
+                    for s in 0..slots {
+                        if x[idx[ji][c][s]] > 0.5 {
+                            found = Some((c, *p));
+                        }
+                    }
+                }
+                let (_, (tech, gpus, runtime)) = found?;
+                out.push(JobPlan { job_id: *id, tech, gpus, runtime_s: runtime });
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 2: list scheduling + local search
+// ---------------------------------------------------------------------------
+
+/// LPT first-fit simulation of the chosen plans; fills `order` and
+/// `predicted_makespan_s`.
+pub fn build_schedule(mut choices: Vec<JobPlan>, cluster: &ClusterSpec)
+    -> SaturnPlan {
+    choices.sort_by(|a, b| b.runtime_s.partial_cmp(&a.runtime_s).unwrap());
+    let order: Vec<usize> = choices.iter().map(|p| p.job_id).collect();
+    let lower = lower_bound(&choices, cluster);
+    let makespan = simulate_list(&choices, cluster);
+    SaturnPlan {
+        choices,
+        order,
+        lower_bound_s: lower,
+        predicted_makespan_s: makespan,
+    }
+}
+
+fn lower_bound(choices: &[JobPlan], cluster: &ClusterSpec) -> f64 {
+    let longest = choices.iter().map(|p| p.runtime_s).fold(0.0, f64::max);
+    let area: f64 = choices.iter().map(|p| p.gpus as f64 * p.runtime_s).sum();
+    longest.max(area / cluster.total_gpus() as f64)
+}
+
+/// Fast list-schedule makespan (same placement rules as the simulator).
+fn simulate_list(choices: &[JobPlan], cluster: &ClusterSpec) -> f64 {
+    let mut free = FreeState::new(cluster);
+    let mut running: Vec<(f64, Vec<(usize, u32)>)> = Vec::new(); // (finish, placement)
+    let mut pending: Vec<&JobPlan> = choices.iter().collect();
+    let mut now = 0.0f64;
+    let mut makespan = 0.0f64;
+    while !pending.is_empty() || !running.is_empty() {
+        // launch whatever fits, in order (backfill allowed)
+        pending.retain(|p| {
+            if let Some(pl) = free.place(p.gpus) {
+                let fin = now + p.runtime_s;
+                makespan = makespan.max(fin);
+                running.push((fin, pl));
+                false
+            } else {
+                true
+            }
+        });
+        if running.is_empty() {
+            break; // nothing runnable (shouldn't happen with valid plans)
+        }
+        // advance to next completion
+        let (i, _) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        let (fin, pl) = running.swap_remove(i);
+        now = fin;
+        free.release(&pl);
+    }
+    makespan
+}
+
+/// Coordinate-descent repair on the REALIZED list schedule: the MILP's
+/// area/critical-path relaxation ignores packing losses, so sweep every
+/// job's alternatives against the simulated schedule and keep improvements.
+/// This is what turns "good on paper" plans into good makespans (and where
+/// Saturn's joint view beats per-job greedy allocation).
+fn local_search(
+    plan: &mut SaturnPlan,
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    cluster: &ClusterSpec,
+) {
+    for _sweep in 0..64 {
+        let mut improved = false;
+        // visit jobs by schedule impact (longest runtime first)
+        let mut order: Vec<usize> = (0..plan.choices.len()).collect();
+        order.sort_by(|&a, &b| {
+            plan.choices[b]
+                .runtime_s
+                .partial_cmp(&plan.choices[a].runtime_s)
+                .unwrap()
+        });
+        for pos in order {
+            let job_id = plan.choices[pos].job_id;
+            let Some((_, alts)) = plans.iter().find(|(id, _)| *id == job_id)
+            else {
+                continue;
+            };
+            let mut best = plan.predicted_makespan_s;
+            let mut best_plan: Option<SaturnPlan> = None;
+            for &(tech, gpus, runtime) in alts {
+                if (tech, gpus) == (plan.choices[pos].tech, plan.choices[pos].gpus) {
+                    continue;
+                }
+                let mut cand = plan.choices.clone();
+                cand[pos] = JobPlan { job_id, tech, gpus, runtime_s: runtime };
+                let new_plan = build_schedule(cand, cluster);
+                if new_plan.predicted_makespan_s < best - 1e-9 {
+                    best = new_plan.predicted_makespan_s;
+                    best_plan = Some(new_plan);
+                }
+            }
+            if let Some(p) = best_plan {
+                // positions shift after rebuild; restart the sweep ordering
+                *plan = p;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallelism::default_library;
+    use crate::trials::profile_analytic;
+    use crate::workload::{toy_workload, wikitext_workload};
+
+    fn setup(nodes: u32) -> (Vec<crate::workload::Job>, ProfileTable, ClusterSpec) {
+        let jobs = wikitext_workload();
+        let cluster = ClusterSpec::p4d(nodes);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        (jobs, profiles, cluster)
+    }
+
+    fn remaining(jobs: &[crate::workload::Job]) -> Vec<(usize, u64)> {
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect()
+    }
+
+    #[test]
+    fn joint_plans_every_job() {
+        let (jobs, profiles, cluster) = setup(1);
+        let (plan, stats) = solve_joint(&remaining(&jobs), &profiles,
+                                        &cluster, SolverMode::Joint);
+        assert_eq!(plan.choices.len(), 12);
+        assert_eq!(plan.order.len(), 12);
+        assert!(plan.predicted_makespan_s >= plan.lower_bound_s * 0.999);
+        assert!(stats.wall_s < 10.0);
+    }
+
+    #[test]
+    fn joint_beats_or_matches_greedy() {
+        let (jobs, profiles, cluster) = setup(1);
+        let rem = remaining(&jobs);
+        let (joint, _) = solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let (greedy, _) =
+            solve_joint(&rem, &profiles, &cluster, SolverMode::Heuristic);
+        assert!(joint.predicted_makespan_s
+                <= greedy.predicted_makespan_s * 1.001,
+                "joint {} greedy {}", joint.predicted_makespan_s,
+                greedy.predicted_makespan_s);
+    }
+
+    #[test]
+    fn two_nodes_shorter_than_one() {
+        let (jobs, p1, c1) = setup(1);
+        let (_, p2, c2) = {
+            let cluster = ClusterSpec::p4d(2);
+            let lib = default_library();
+            let p = profile_analytic(&jobs, &lib, &cluster);
+            (jobs.clone(), p, cluster)
+        };
+        let rem = remaining(&jobs);
+        let (m1, _) = solve_joint(&rem, &p1, &c1, SolverMode::Joint);
+        let (m2, _) = solve_joint(&rem, &p2, &c2, SolverMode::Joint);
+        assert!(m2.predicted_makespan_s < m1.predicted_makespan_s);
+    }
+
+    #[test]
+    fn mixed_allocations_appear() {
+        // the paper's "unintuitive" plans: not everything gets 8 GPUs
+        let (jobs, profiles, cluster) = setup(1);
+        let (plan, _) = solve_joint(&remaining(&jobs), &profiles, &cluster,
+                                    SolverMode::Joint);
+        let gpus: std::collections::BTreeSet<u32> =
+            plan.choices.iter().map(|p| p.gpus).collect();
+        assert!(gpus.len() > 1, "all jobs got identical allocations: {gpus:?}");
+    }
+
+    #[test]
+    fn exact_slots_close_to_joint_on_small_instance() {
+        let jobs = toy_workload(4);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (joint, _) = solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let (exact, _) = solve_joint(&rem, &profiles, &cluster,
+                                     SolverMode::ExactSlots { slots: 6 });
+        // exact formulation should not be dramatically worse than the
+        // decomposition (coarse slots cost some rounding)
+        assert!(exact.predicted_makespan_s
+                <= joint.predicted_makespan_s * 1.6 + 1.0,
+                "exact {} joint {}", exact.predicted_makespan_s,
+                joint.predicted_makespan_s);
+    }
+
+    #[test]
+    fn schedule_never_oversubscribes() {
+        // simulate_list with capacity accounting is exercised via
+        // lower-bound sanity: predicted >= area/G and >= longest
+        let (jobs, profiles, cluster) = setup(1);
+        let (plan, _) = solve_joint(&remaining(&jobs), &profiles, &cluster,
+                                    SolverMode::Joint);
+        assert!(plan.predicted_makespan_s >= plan.lower_bound_s - 1e-6);
+        assert!(plan.predicted_makespan_s
+                >= plan.area() / cluster.total_gpus() as f64 - 1e-6);
+    }
+}

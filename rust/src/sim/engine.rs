@@ -1,0 +1,370 @@
+//! The simulation engine: advances virtual time between job completions
+//! and introspection points, asks the `Policy` for launch decisions, and
+//! enforces capacity/placement/checkpoint semantics.
+//!
+//! Determinism: given the same policy (and policy seed), the simulation is
+//! bit-reproducible — Table 2 rows in EXPERIMENTS.md cite seeds.
+
+use crate::cluster::ClusterSpec;
+use crate::sim::placement::FreeState;
+use crate::trials::ProfileTable;
+use crate::workload::Job;
+
+/// A policy's decision: run `job_id` with `tech` on `gpus` GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Launch {
+    pub job_id: usize,
+    pub tech: usize,
+    pub gpus: u32,
+}
+
+/// A job currently holding GPUs.
+#[derive(Debug, Clone)]
+pub struct Running {
+    pub tech: usize,
+    pub gpus: u32,
+    pub placement: Vec<(usize, u32)>,
+    pub step_time: f64,
+    /// Virtual time at which steps start accumulating (start + restart lag).
+    pub resume_at: f64,
+    pub planned_finish: f64,
+}
+
+/// Job + live progress.
+#[derive(Debug, Clone)]
+pub struct JobProgress {
+    pub job: Job,
+    pub steps_done: u64,
+    pub running: Option<Running>,
+    pub finished_at: Option<f64>,
+    /// Last (tech, gpus) this job ran under (checkpoint-penalty detection).
+    pub last_alloc: Option<(usize, u32)>,
+}
+
+impl JobProgress {
+    pub fn remaining_steps(&self) -> u64 {
+        self.job.total_steps().saturating_sub(self.steps_done)
+    }
+
+    pub fn is_pending(&self) -> bool {
+        self.finished_at.is_none() && self.running.is_none()
+    }
+}
+
+/// Everything a policy may look at when planning.
+pub struct PlanContext<'a> {
+    pub now: f64,
+    pub jobs: &'a [JobProgress],
+    pub free: &'a FreeState,
+    pub profiles: &'a ProfileTable,
+    pub cluster: &'a ClusterSpec,
+}
+
+/// Scheduling policy plugged into the simulator (Saturn + all baselines).
+pub trait Policy {
+    fn name(&self) -> &'static str;
+
+    /// Called at t=0, after every completion, and at each introspection
+    /// point. Returns desired launches for PENDING jobs; at introspection
+    /// points it is called with ALL unfinished jobs marked pending
+    /// (preempt-and-replan semantics) and may reassign freely.
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch>;
+
+    /// `Some(interval)` enables Gandiva-style introspection every
+    /// `interval` virtual seconds.
+    fn introspection_interval(&self) -> Option<f64> {
+        None
+    }
+
+    /// Cumulative wall-clock seconds the policy spent deciding (solver
+    /// cost reporting, bench E9).
+    fn decision_time_s(&self) -> f64 {
+        0.0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Seconds charged when a running job is checkpointed and relaunched
+    /// under a different allocation (Gandiva/AntMan-style migration).
+    pub checkpoint_penalty_s: f64,
+    /// Safety valve for runaway simulations.
+    pub max_virtual_time_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { checkpoint_penalty_s: 60.0, max_virtual_time_s: 1e9 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan_s: f64,
+    pub finish_times: Vec<(usize, f64)>,
+    pub preemptions: usize,
+    /// busy GPU-seconds / (total GPUs * makespan)
+    pub gpu_utilization: f64,
+    pub launches: usize,
+    pub policy_decision_s: f64,
+}
+
+/// Run `jobs` to completion under `policy`. Panics if the policy deadlocks
+/// (no job running and the policy refuses to launch any pending job).
+pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
+                policy: &mut dyn Policy, cfg: &SimConfig) -> SimResult {
+    let mut state: Vec<JobProgress> = jobs
+        .iter()
+        .map(|j| JobProgress {
+            job: j.clone(),
+            steps_done: 0,
+            running: None,
+            finished_at: None,
+            last_alloc: None,
+        })
+        .collect();
+    let mut free = FreeState::new(cluster);
+    let mut now = 0.0f64;
+    let mut preemptions = 0usize;
+    let mut launches = 0usize;
+    let mut busy_gpu_seconds = 0.0f64;
+    let interval = policy.introspection_interval();
+    let mut next_introspect = interval.map(|i| i.max(1.0));
+
+    // initial plan
+    apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+               &mut launches, cfg);
+
+    let max_iters = 200_000;
+    for _ in 0..max_iters {
+        if state.iter().all(|s| s.finished_at.is_some()) {
+            break;
+        }
+        // next completion event
+        let next_finish = state
+            .iter()
+            .filter_map(|s| s.running.as_ref().map(|r| r.planned_finish))
+            .fold(f64::INFINITY, f64::min);
+        let t_next = match next_introspect {
+            Some(ti) if ti < next_finish => ti,
+            _ => next_finish,
+        };
+        if !t_next.is_finite() {
+            // nothing running: force-plan; if still nothing, deadlock
+            let before = launches;
+            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+                       &mut launches, cfg);
+            if launches == before {
+                panic!(
+                    "policy '{}' deadlocked at t={now:.1}s with {} pending jobs",
+                    policy.name(),
+                    state.iter().filter(|s| s.is_pending()).count()
+                );
+            }
+            continue;
+        }
+        assert!(t_next >= now - 1e-6, "time went backwards");
+        assert!(t_next < cfg.max_virtual_time_s, "virtual time runaway");
+
+        // accumulate busy gpu-seconds over [now, t_next)
+        let busy: u32 = state
+            .iter()
+            .filter_map(|s| s.running.as_ref().map(|r| r.gpus))
+            .sum();
+        busy_gpu_seconds += busy as f64 * (t_next - now);
+        now = t_next;
+
+        if Some(now) == next_introspect {
+            // checkpoint-everything introspection point: bank progress,
+            // mark all unfinished jobs pending, let the policy replan.
+            for s in state.iter_mut() {
+                if let Some(r) = s.running.take() {
+                    let done = ((now - r.resume_at) / r.step_time).floor();
+                    s.steps_done = (s.steps_done + done.max(0.0) as u64)
+                        .min(s.job.total_steps());
+                    free.release(&r.placement);
+                    if s.remaining_steps() == 0 {
+                        s.finished_at = Some(now);
+                    } else {
+                        s.last_alloc = Some((r.tech, r.gpus));
+                    }
+                }
+            }
+            let pre_launch = snapshot_allocs(&state);
+            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+                       &mut launches, cfg);
+            preemptions += count_migrations(&pre_launch, &state);
+            next_introspect = Some(now + interval.unwrap());
+        } else {
+            // completions at `now`
+            for s in state.iter_mut() {
+                let done_now = s
+                    .running
+                    .as_ref()
+                    .map(|r| (r.planned_finish - now).abs() < 1e-9)
+                    .unwrap_or(false);
+                if done_now {
+                    let r = s.running.take().unwrap();
+                    s.steps_done = s.job.total_steps();
+                    s.finished_at = Some(now);
+                    free.release(&r.placement);
+                }
+            }
+            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+                       &mut launches, cfg);
+        }
+    }
+
+    let makespan = state
+        .iter()
+        .map(|s| s.finished_at.expect("all jobs finished"))
+        .fold(0.0, f64::max);
+    SimResult {
+        makespan_s: makespan,
+        finish_times: state
+            .iter()
+            .map(|s| (s.job.id, s.finished_at.unwrap()))
+            .collect(),
+        preemptions,
+        gpu_utilization: busy_gpu_seconds
+            / (cluster.total_gpus() as f64 * makespan.max(1e-9)),
+        launches,
+        policy_decision_s: policy.decision_time_s(),
+    }
+}
+
+fn snapshot_allocs(state: &[JobProgress]) -> Vec<Option<(usize, u32)>> {
+    state.iter().map(|s| s.last_alloc).collect()
+}
+
+fn count_migrations(before: &[Option<(usize, u32)>], state: &[JobProgress])
+    -> usize {
+    state
+        .iter()
+        .zip(before)
+        .filter(|(s, prev)| {
+            if let (Some(r), Some(prev)) = (&s.running, prev) {
+                (r.tech, r.gpus) != *prev
+            } else {
+                false
+            }
+        })
+        .count()
+}
+
+fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
+              free: &mut FreeState, profiles: &ProfileTable,
+              cluster: &ClusterSpec, now: f64, launches: &mut usize,
+              cfg: &SimConfig) {
+    let proposals = {
+        let ctx = PlanContext { now, jobs: state, free, profiles, cluster };
+        policy.plan(&ctx)
+    };
+    for l in proposals {
+        let Some(s) = state.get_mut(l.job_id) else { continue };
+        if !s.is_pending() {
+            continue; // policy asked for a running/finished job; ignore
+        }
+        let Some(step_time) = profiles.step_time(l.job_id, l.tech, l.gpus)
+        else {
+            continue; // infeasible plan; ignore defensively
+        };
+        let Some(placement) = free.place(l.gpus) else { continue };
+        // checkpoint/restart lag when the allocation changed shape
+        let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus))
+            .unwrap_or(false);
+        let lag = if migrated { cfg.checkpoint_penalty_s } else { 0.0 };
+        let resume_at = now + lag;
+        let remaining = s.remaining_steps() as f64;
+        s.running = Some(Running {
+            tech: l.tech,
+            gpus: l.gpus,
+            placement,
+            step_time,
+            resume_at,
+            planned_finish: resume_at + remaining * step_time,
+        });
+        s.last_alloc = Some((l.tech, l.gpus));
+        *launches += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallelism::default_library;
+    use crate::trials::profile_analytic;
+    use crate::workload::toy_workload;
+
+    /// Trivial FIFO policy: whole node per job, best technique at 8 GPUs.
+    struct Fifo;
+
+    impl Policy for Fifo {
+        fn name(&self) -> &'static str {
+            "fifo-test"
+        }
+
+        fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+            let mut free = ctx.free.clone();
+            let mut out = Vec::new();
+            for s in ctx.jobs.iter().filter(|s| s.is_pending()) {
+                let g = ctx.cluster.node.gpus_per_node;
+                if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
+                    if free.place(g).is_some() {
+                        out.push(Launch { job_id: s.job.id, tech, gpus: g });
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    fn setup(n: usize) -> (Vec<crate::workload::Job>, ProfileTable, ClusterSpec) {
+        let jobs = toy_workload(n);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        (jobs, profiles, cluster)
+    }
+
+    #[test]
+    fn fifo_completes_all_jobs() {
+        let (jobs, profiles, cluster) = setup(4);
+        let mut p = Fifo;
+        let r = simulate(&jobs, &profiles, &cluster, &mut p,
+                         &SimConfig::default());
+        assert_eq!(r.finish_times.len(), 4);
+        assert!(r.makespan_s > 0.0);
+        assert_eq!(r.preemptions, 0);
+        assert!(r.gpu_utilization > 0.0 && r.gpu_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn sequential_makespan_is_sum_of_runtimes() {
+        let (jobs, profiles, cluster) = setup(3);
+        let mut p = Fifo;
+        let r = simulate(&jobs, &profiles, &cluster, &mut p,
+                         &SimConfig::default());
+        let expected: f64 = jobs
+            .iter()
+            .map(|j| {
+                let (tech, _) = profiles.best_at(j.id, 8).unwrap();
+                profiles.step_time(j.id, tech, 8).unwrap()
+                    * j.total_steps() as f64
+            })
+            .sum();
+        assert!((r.makespan_s - expected).abs() / expected < 1e-6,
+                "{} vs {expected}", r.makespan_s);
+    }
+
+    #[test]
+    fn determinism() {
+        let (jobs, profiles, cluster) = setup(6);
+        let a = simulate(&jobs, &profiles, &cluster, &mut Fifo,
+                         &SimConfig::default());
+        let b = simulate(&jobs, &profiles, &cluster, &mut Fifo,
+                         &SimConfig::default());
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.finish_times, b.finish_times);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event GPU-cluster simulator (hardware-substitution substrate).
+//!
+//! Executes a multi-job under a scheduling `Policy`, reproducing exactly
+//! what determines Table 2's makespans: per-job runtimes from the Trial
+//! Runner's estimates, GPU capacity over time, node placement rules, and
+//! Gandiva-style checkpoint/restart penalties on introspective replans.
+
+pub mod engine;
+pub mod placement;
+
+pub use engine::{simulate, JobProgress, Launch, PlanContext, Policy,
+                 Running, SimConfig, SimResult};
+pub use placement::FreeState;

@@ -1,0 +1,133 @@
+//! GPU placement rules: jobs <= node size must be contained in one node
+//! (NVLink domain); larger jobs take whole nodes. Mirrors how DL schedulers
+//! place collective groups on p4d fleets.
+
+use crate::cluster::ClusterSpec;
+
+/// Free-GPU bookkeeping per node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreeState {
+    pub free: Vec<u32>,
+    pub per_node: u32,
+}
+
+impl FreeState {
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        FreeState {
+            free: vec![cluster.node.gpus_per_node; cluster.nodes as usize],
+            per_node: cluster.node.gpus_per_node,
+        }
+    }
+
+    pub fn total_free(&self) -> u32 {
+        self.free.iter().sum()
+    }
+
+    /// Try to place `gpus`; returns per-node grants and mutates `free`.
+    /// Best-fit within a node for small jobs (reduces fragmentation);
+    /// whole nodes for multi-node jobs.
+    pub fn place(&mut self, gpus: u32) -> Option<Vec<(usize, u32)>> {
+        if gpus == 0 {
+            return None;
+        }
+        if gpus <= self.per_node {
+            // best-fit: the feasible node with the least free capacity
+            let node = self
+                .free
+                .iter()
+                .enumerate()
+                .filter(|(_, &f)| f >= gpus)
+                .min_by_key(|(_, &f)| f)
+                .map(|(i, _)| i)?;
+            self.free[node] -= gpus;
+            Some(vec![(node, gpus)])
+        } else {
+            if gpus % self.per_node != 0 {
+                return None; // multi-node jobs use whole nodes
+            }
+            let need = (gpus / self.per_node) as usize;
+            let full: Vec<usize> = self
+                .free
+                .iter()
+                .enumerate()
+                .filter(|(_, &f)| f == self.per_node)
+                .map(|(i, _)| i)
+                .take(need)
+                .collect();
+            if full.len() < need {
+                return None;
+            }
+            for &i in &full {
+                self.free[i] = 0;
+            }
+            Some(full.into_iter().map(|i| (i, self.per_node)).collect())
+        }
+    }
+
+    /// Check placement feasibility without mutating.
+    pub fn can_place(&self, gpus: u32) -> bool {
+        self.clone().place(gpus).is_some()
+    }
+
+    pub fn release(&mut self, placement: &[(usize, u32)]) {
+        for &(node, g) in placement {
+            self.free[node] += g;
+            debug_assert!(self.free[node] <= self.per_node,
+                          "released more GPUs than the node has");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(nodes: u32) -> FreeState {
+        FreeState::new(&ClusterSpec::p4d(nodes))
+    }
+
+    #[test]
+    fn small_job_single_node() {
+        let mut f = fleet(2);
+        let p = f.place(4).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(f.total_free(), 12);
+    }
+
+    #[test]
+    fn best_fit_prefers_fuller_node() {
+        let mut f = fleet(2);
+        f.place(6).unwrap(); // node A now has 2 free
+        let p = f.place(2).unwrap(); // should slot into node A
+        assert_eq!(p[0].0, 0);
+        assert_eq!(f.free, vec![0, 8]);
+    }
+
+    #[test]
+    fn no_cross_node_fragmentation_for_small_jobs() {
+        let mut f = fleet(2);
+        f.place(5).unwrap();
+        f.place(5).unwrap();
+        // 3+3 free across nodes: a 5-GPU job must NOT span them
+        assert!(f.place(5).is_none());
+        assert_eq!(f.total_free(), 6);
+    }
+
+    #[test]
+    fn multi_node_needs_whole_nodes() {
+        let mut f = fleet(2);
+        assert!(f.clone().place(16).is_some());
+        f.place(1).unwrap();
+        assert!(f.place(16).is_none()); // one node is no longer empty
+        assert!(f.place(12).is_none()); // not a whole-node multiple
+    }
+
+    #[test]
+    fn release_restores() {
+        let mut f = fleet(1);
+        let p = f.place(8).unwrap();
+        assert_eq!(f.total_free(), 0);
+        f.release(&p);
+        assert_eq!(f.total_free(), 8);
+    }
+}

@@ -1,0 +1,8 @@
+//! Optimization substrates: LP simplex + MILP branch-and-bound.
+//!
+//! The paper formulates joint (parallelism, allocation, schedule) selection
+//! as an MILP and solves it with Gurobi; this module is the open
+//! replacement. `saturn::solver` builds the actual formulation.
+
+pub mod lp;
+pub mod milp;

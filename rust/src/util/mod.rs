@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (the offline crate set has no
+//! serde/clap/rand/tokio/proptest — see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,225 @@
+//! Miniature property-based testing framework (substrate: no `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`; on failure it greedily shrinks the input via the
+//! strategy's `shrink` candidates and reports the minimal counterexample
+//! with the seed needed to replay it.
+//!
+//! Used across the repo for solver/scheduler/cost-model invariants — see
+//! `rust/tests/prop_invariants.rs`.
+
+use crate::util::rng::Rng;
+
+/// A generation + shrinking strategy for `T`.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values; empty when fully shrunk.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run a property over random inputs; panics with the minimal failing case.
+pub fn forall<S, P>(seed: u64, cases: usize, strat: &S, prop: P)
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = strat.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            let (min_v, min_msg) = shrink_loop(strat, v, msg, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {min_v:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<S, P>(strat: &S, mut v: S::Value, mut msg: String, prop: &P)
+    -> (S::Value, String)
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    // Greedy: take the first shrink candidate that still fails; bound work.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in strat.shrink(&v) {
+            if let Err(m) = prop(&cand) {
+                v = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (v, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Built-in strategies
+// ---------------------------------------------------------------------------
+
+/// Uniform `i64` in `[lo, hi]`, shrinking toward `lo`.
+pub struct IntRange(pub i64, pub i64);
+
+impl Strategy for IntRange {
+    type Value = i64;
+
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.range(self.0, self.1 + 1)
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform `f64` in `[lo, hi)`, shrinking toward `lo`.
+pub struct FloatRange(pub f64, pub f64);
+
+impl Strategy for FloatRange {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        self.0 + rng.f64() * (self.1 - self.0)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if (*v - self.0).abs() < 1e-9 {
+            Vec::new()
+        } else {
+            vec![self.0, self.0 + (*v - self.0) / 2.0]
+        }
+    }
+}
+
+/// Vector of `inner` with length in `[min_len, max_len]`; shrinks by
+/// halving the tail and element-wise shrinking of the first offender.
+pub struct VecOf<S> {
+    pub inner: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let len = self.min_len + rng.usize(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len].to_vec());
+            out.push(v[..self.min_len + (v.len() - self.min_len) / 2].to_vec());
+            let mut drop_last = v.clone();
+            drop_last.pop();
+            out.push(drop_last);
+        }
+        for (i, x) in v.iter().enumerate() {
+            for cand in self.inner.shrink(x) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+                break; // only the first shrink per index; keeps it O(n)
+            }
+        }
+        out
+    }
+}
+
+/// Pair strategy.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 200, &IntRange(0, 100), |&x| {
+            if (0..=100).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 200, &IntRange(0, 100), |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_minimal_counterexample() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(3, 500, &IntRange(0, 1000), |&x| {
+                if x < 123 {
+                    Ok(())
+                } else {
+                    Err("ge 123".into())
+                }
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving shrink should land near the boundary (not at 1000)
+        assert!(msg.contains("input: 123") || msg.contains("input: 12"),
+                "unexpected shrink result: {msg}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds() {
+        let strat = VecOf { inner: IntRange(0, 9), min_len: 2, max_len: 6 };
+        forall(4, 100, &strat, |v| {
+            if (2..=6).contains(&v.len()) && v.iter().all(|x| (0..=9).contains(x)) {
+                Ok(())
+            } else {
+                Err(format!("bad vec {v:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,123 @@
+//! Model-selection workload generator (paper Table 1).
+//!
+//! A *multi-job* is the unit Saturn optimizes: a set of fine-tuning jobs
+//! produced by hyper-parameter grids. Table 1's two workloads are
+//! {GPT-2, GPT-J} x LR {1e-5,1e-4,1e-3} x batch {16,32} on WikiText-2 and
+//! {ViT-G, ResNet-200} x same LRs x batch {64,128} on ImageNet, 10 epochs.
+
+use crate::models::{DatasetSpec, ModelSpec};
+
+/// One fine-tuning job in a multi-job (a point of the HPO grid).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    pub name: String,
+    pub model: ModelSpec,
+    pub dataset: DatasetSpec,
+    pub lr: f64,
+    pub batch: u32,
+    pub epochs: u32,
+}
+
+impl Job {
+    pub fn total_steps(&self) -> u64 {
+        self.dataset.steps_per_epoch(self.batch) * self.epochs as u64
+    }
+}
+
+/// Cartesian HPO grid over models x LRs x batch sizes (the paper's trial
+/// generation; mirrors `SaturnTrial` construction in Figure 1B).
+pub fn grid(models: &[ModelSpec], dataset: &DatasetSpec, lrs: &[f64],
+            batches: &[u32], epochs: u32) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for model in models {
+        for &lr in lrs {
+            for &batch in batches {
+                let id = jobs.len();
+                jobs.push(Job {
+                    id,
+                    name: format!("{}-lr{lr:.0e}-bs{batch}", model.name),
+                    model: model.clone(),
+                    dataset: dataset.clone(),
+                    lr,
+                    batch,
+                    epochs,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+pub const TABLE1_LRS: [f64; 3] = [1e-5, 1e-4, 1e-3];
+
+/// Table 1 row 1: language workload (12 jobs).
+pub fn wikitext_workload() -> Vec<Job> {
+    grid(&[ModelSpec::gpt2_xl(), ModelSpec::gpt_j()],
+         &DatasetSpec::wikitext2(), &TABLE1_LRS, &[16, 32], 10)
+}
+
+/// Table 1 row 2: vision workload (12 jobs).
+pub fn imagenet_workload() -> Vec<Job> {
+    grid(&[ModelSpec::vit_g(), ModelSpec::resnet200()],
+         &DatasetSpec::imagenet(), &TABLE1_LRS, &[64, 128], 10)
+}
+
+/// Smaller synthetic multi-job for tests/examples: `n` jobs cycling over
+/// the zoo with short epochs.
+pub fn toy_workload(n: usize) -> Vec<Job> {
+    let zoo = [ModelSpec::resnet200(), ModelSpec::gpt2_xl(),
+               ModelSpec::vit_g(), ModelSpec::gpt_j()];
+    let mut jobs = Vec::new();
+    for i in 0..n {
+        let model = zoo[i % zoo.len()].clone();
+        let dataset = DatasetSpec { name: "toy".into(), samples: 4096 };
+        jobs.push(Job {
+            id: i,
+            name: format!("toy{i}-{}", model.name),
+            model,
+            dataset,
+            lr: 1e-4,
+            batch: 32,
+            epochs: 1,
+        });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_grids_have_12_jobs() {
+        assert_eq!(wikitext_workload().len(), 12);
+        assert_eq!(imagenet_workload().len(), 12);
+    }
+
+    #[test]
+    fn ids_are_dense_and_names_unique() {
+        let jobs = wikitext_workload();
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+        let mut names: Vec<_> = jobs.iter().map(|j| j.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 12);
+    }
+
+    #[test]
+    fn steps_scale_inversely_with_batch() {
+        let jobs = imagenet_workload();
+        let bs64 = jobs.iter().find(|j| j.batch == 64).unwrap();
+        let bs128 = jobs.iter().find(|j| j.batch == 128).unwrap();
+        assert!(bs64.total_steps() > bs128.total_steps());
+    }
+
+    #[test]
+    fn wikitext_epochs_to_steps() {
+        let j = &wikitext_workload()[0]; // GPT-2 bs16
+        assert_eq!(j.total_steps(), 150 * 10);
+    }
+}

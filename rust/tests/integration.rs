@@ -1,0 +1,157 @@
+//! Integration tests: cross-module flows through the whole L3 stack, plus
+//! failure injection on the artifact boundary.
+
+use std::collections::HashMap;
+
+use saturn::cluster::ClusterSpec;
+use saturn::coordinator::{real_grid, Coordinator};
+use saturn::exp;
+use saturn::parallelism::default_library;
+use saturn::runtime::{Engine, Manifest};
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::saturn::SaturnPolicy;
+use saturn::sim::engine::{simulate, SimConfig};
+use saturn::trials::{profile_analytic, profile_empirical};
+use saturn::workload::{imagenet_workload, wikitext_workload};
+
+// ---------------------------------------------------------------------------
+// full pipeline over every (workload, nodes, system) combination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_systems_complete_all_workloads() {
+    for workload in ["wikitext", "imagenet"] {
+        for nodes in [1u32, 2] {
+            for sys in exp::SYSTEMS {
+                let cell = exp::run_cell(workload, nodes, sys, 1);
+                assert!(cell.makespan_h > 0.0,
+                        "{sys}/{workload}/{nodes}n produced zero makespan");
+                assert_eq!(cell.result.finish_times.len(), 12);
+                assert!(cell.result.gpu_utilization <= 1.0 + 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn saturn_beats_every_baseline_on_both_workloads() {
+    for workload in ["wikitext", "imagenet"] {
+        let sat = exp::run_cell(workload, 1, "saturn", 0).makespan_h;
+        for sys in &exp::SYSTEMS[..4] {
+            let other = exp::run_cell(workload, 1, sys, 0).makespan_h;
+            assert!(sat < other,
+                    "{workload}: saturn {sat:.2}h !< {sys} {other:.2}h");
+        }
+    }
+}
+
+#[test]
+fn profiles_internally_consistent_across_node_counts() {
+    let jobs = wikitext_workload();
+    let lib = default_library();
+    let p1 = profile_analytic(&jobs, &lib, &ClusterSpec::p4d(1));
+    let p2 = profile_analytic(&jobs, &lib, &ClusterSpec::p4d(2));
+    // single-node estimates must be identical regardless of fleet size
+    for j in &jobs {
+        for t in 0..p1.n_techniques {
+            for g in [1u32, 2, 4, 8] {
+                assert_eq!(p1.step_time(j.id, t, g), p2.step_time(j.id, t, g),
+                           "job {} tech {t} g{g}", j.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn empirical_profiles_flow_into_solver() {
+    let jobs = imagenet_workload();
+    let lib = default_library();
+    let cluster = ClusterSpec::p4d(1);
+    let mut measured = HashMap::new();
+    for j in &jobs {
+        measured.insert(j.id, 0.5 + j.id as f64 * 0.01);
+    }
+    let profiles = profile_empirical(&jobs, &lib, &cluster, &measured);
+    let remaining: Vec<(usize, u64)> =
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
+                                SolverMode::Joint);
+    assert_eq!(plan.choices.len(), 12);
+}
+
+#[test]
+fn introspection_interval_sweep_is_stable() {
+    let jobs = wikitext_workload();
+    let lib = default_library();
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_analytic(&jobs, &lib, &cluster);
+    let mut makespans = Vec::new();
+    for interval in [None, Some(1800.0), Some(3600.0)] {
+        let mut p = SaturnPolicy::new(SolverMode::Joint, interval);
+        let r = simulate(&jobs, &profiles, &cluster, &mut p,
+                         &SimConfig::default());
+        makespans.push(r.makespan_s);
+    }
+    let base = makespans[0];
+    for m in &makespans {
+        assert!((m - base).abs() / base < 0.25,
+                "introspection destabilized a static workload: {makespans:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime boundary (requires `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_end_to_end_two_jobs_real_training() {
+    let coord = Coordinator::new(2).expect("artifacts present");
+    let jobs = real_grid(&[("tiny", 8)], &[3e-3, 1e-4], 8);
+    let r = coord.run_model_selection(&jobs, 11).unwrap();
+    assert_eq!(r.outcomes.len(), 2);
+    // higher LR learns faster from random init on this tiny budget
+    let by_lr: HashMap<String, f32> = r
+        .outcomes
+        .iter()
+        .map(|o| (format!("{:.0e}", o.job.lr), o.final_loss))
+        .collect();
+    assert!(by_lr["3e-3"] < by_lr["1e-4"],
+            "3e-3 {} should beat 1e-4 {}", by_lr["3e-3"], by_lr["1e-4"]);
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_cleanly() {
+    let dir = std::env::temp_dir().join("saturn_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("json"),
+            "unexpected error: {err:#}");
+}
+
+#[test]
+fn missing_artifact_file_fails_at_load_not_at_parse() {
+    let dir = std::env::temp_dir().join("saturn_missing_artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"artifacts":[{"name":"ghost","file":"ghost.hlo.txt",
+            "kind":"train","model":"ghost","batch":8,"seq":64,"vocab":512,
+            "param_count":10,"padded_params":2048,"flops_per_step":1.0,
+            "inputs":[],"outputs":[]}]}"#,
+    )
+    .unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let spec = m.train("ghost", 8).unwrap();
+    let engine = Engine::cpu().unwrap();
+    assert!(engine.load_artifact(spec).is_err());
+}
+
+#[test]
+fn manifest_missing_required_field_errors() {
+    let dir = std::env::temp_dir().join("saturn_bad_field");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"),
+                   r#"{"artifacts":[{"name":"x"}]}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}

@@ -1,0 +1,314 @@
+//! Property-based invariants over the solver, scheduler, cost models and
+//! substrates, using the in-repo `util::prop` framework.
+
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::sim::engine::{simulate, SimConfig};
+use saturn::sim::placement::FreeState;
+use saturn::solver::lp::{solve as lp_solve, Cmp, Lp, LpResult};
+use saturn::solver::milp::{solve as milp_solve, MilpOptions};
+use saturn::trials::profile_analytic;
+use saturn::util::json::Json;
+use saturn::util::prop::{forall, IntRange, PairOf, Strategy, VecOf};
+use saturn::util::rng::Rng;
+use saturn::workload::{toy_workload, Job};
+use saturn::models::{DatasetSpec, ModelSpec};
+
+// ---------------------------------------------------------------------------
+// LP / MILP
+// ---------------------------------------------------------------------------
+
+/// Random bounded-feasible LP: min c'x, x <= ub, a'x <= b with a,ub >= 0.
+struct RandomLp;
+
+impl Strategy for RandomLp {
+    type Value = (Vec<i64>, Vec<i64>, Vec<i64>, i64); // c, ub, a, b
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = 2 + rng.usize(4);
+        let c: Vec<i64> = (0..n).map(|_| rng.range(-5, 6)).collect();
+        let ub: Vec<i64> = (0..n).map(|_| rng.range(1, 8)).collect();
+        let a: Vec<i64> = (0..n).map(|_| rng.range(0, 5)).collect();
+        let b = rng.range(1, 30);
+        (c, ub, a, b)
+    }
+}
+
+fn build_lp(v: &(Vec<i64>, Vec<i64>, Vec<i64>, i64)) -> Lp {
+    let (c, ub, a, b) = v;
+    let mut lp = Lp::new(c.len());
+    for j in 0..c.len() {
+        lp.set_obj(j, c[j] as f64);
+        lp.bound_le(j, ub[j] as f64);
+    }
+    lp.add(a.iter().cloned().enumerate()
+            .map(|(j, x)| (j, x as f64)).collect(), Cmp::Le, *b as f64);
+    lp
+}
+
+#[test]
+fn prop_lp_solution_is_feasible_and_beats_random_points() {
+    forall(42, 60, &RandomLp, |v| {
+        let lp = build_lp(v);
+        let LpResult::Optimal { x, objective } = lp_solve(&lp) else {
+            return Err("bounded feasible LP must be optimal".into());
+        };
+        // feasibility of the returned vertex
+        let (c, ub, a, b) = v;
+        for j in 0..x.len() {
+            if x[j] < -1e-7 || x[j] > ub[j] as f64 + 1e-7 {
+                return Err(format!("x[{j}]={} violates bounds", x[j]));
+            }
+        }
+        let lhs: f64 = x.iter().zip(a).map(|(xi, ai)| xi * *ai as f64).sum();
+        if lhs > *b as f64 + 1e-6 {
+            return Err("capacity violated".into());
+        }
+        // optimality vs sampled feasible points
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let y: Vec<f64> = ub.iter().map(|&u| rng.f64() * u as f64).collect();
+            let cap: f64 = y.iter().zip(a).map(|(yi, ai)| yi * *ai as f64).sum();
+            if cap <= *b as f64 {
+                let val: f64 = y.iter().zip(c).map(|(yi, ci)| yi * *ci as f64).sum();
+                if val < objective - 1e-6 {
+                    return Err(format!(
+                        "sampled point {val} beats 'optimal' {objective}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_milp_matches_bruteforce_on_random_binary_programs() {
+    forall(43, 30, &RandomLp, |v| {
+        let (c, _, a, b) = v;
+        let n = c.len();
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_obj(j, c[j] as f64);
+            lp.bound_le(j, 1.0);
+        }
+        lp.add(a.iter().cloned().enumerate()
+                .map(|(j, x)| (j, x as f64)).collect(), Cmp::Le, *b as f64);
+        let ints: Vec<usize> = (0..n).collect();
+        let res = milp_solve(&lp, &ints, &MilpOptions::default());
+        let Some((_, got)) = res.solution() else {
+            return Err("binary program with x=0 feasible must solve".into());
+        };
+        // brute force
+        let mut best = f64::INFINITY;
+        for mask in 0u32..(1 << n) {
+            let (mut val, mut cap) = (0.0, 0.0);
+            for j in 0..n {
+                if mask & (1 << j) != 0 {
+                    val += c[j] as f64;
+                    cap += a[j] as f64;
+                }
+            }
+            if cap <= *b as f64 {
+                best = best.min(val);
+            }
+        }
+        if (got - best).abs() > 1e-6 {
+            return Err(format!("milp {got} != brute {best}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scheduler / simulator invariants
+// ---------------------------------------------------------------------------
+
+/// Random toy multi-jobs: (n_jobs, seed).
+struct RandomWorkload;
+
+impl Strategy for RandomWorkload {
+    type Value = (i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (rng.range(1, 10), rng.range(0, 1000))
+    }
+}
+
+fn vary(jobs: &mut [Job], seed: i64) {
+    let mut rng = Rng::new(seed as u64);
+    let models = [ModelSpec::resnet200(), ModelSpec::gpt2_xl(),
+                  ModelSpec::vit_g(), ModelSpec::gpt_j()];
+    for j in jobs.iter_mut() {
+        j.model = models[rng.usize(models.len())].clone();
+        j.batch = *rng.choice(&[16u32, 32, 64]);
+        j.dataset = DatasetSpec { name: "rand".into(),
+                                  samples: 512 + rng.range(0, 4096) as u64 };
+    }
+}
+
+#[test]
+fn prop_all_policies_finish_every_job_exactly_once() {
+    forall(44, 12, &RandomWorkload, |&(n, seed)| {
+        let mut jobs = toy_workload(n as usize);
+        vary(&mut jobs, seed);
+        let cluster = ClusterSpec::p4d(1 + (seed % 2) as u32);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        for sys in saturn::exp::SYSTEMS {
+            let cell = saturn::exp::run_cell_with(&jobs, &profiles, &cluster,
+                                                  sys, seed as u64);
+            let mut ids: Vec<usize> =
+                cell.result.finish_times.iter().map(|(id, _)| *id).collect();
+            ids.sort();
+            if ids != (0..jobs.len()).collect::<Vec<_>>() {
+                return Err(format!("{sys}: jobs finished {ids:?}"));
+            }
+            if cell.result.gpu_utilization > 1.0 + 1e-9 {
+                return Err(format!("{sys}: oversubscribed GPUs util={}",
+                                   cell.result.gpu_utilization));
+            }
+            // makespan >= best possible single-job runtime (sanity floor)
+            let floor = jobs
+                .iter()
+                .map(|j| {
+                    profiles
+                        .pareto_plans(j.id)
+                        .last()
+                        .map(|p| p.2 * j.total_steps() as f64)
+                        .unwrap_or(0.0)
+                })
+                .fold(0.0f64, f64::max);
+            if cell.result.makespan_s < floor * 0.999 {
+                return Err(format!("{sys}: makespan below physical floor"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_never_plans_infeasible_combinations() {
+    forall(45, 15, &RandomWorkload, |&(n, seed)| {
+        let mut jobs = toy_workload(n as usize);
+        vary(&mut jobs, seed);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let remaining: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        for mode in [SolverMode::Joint, SolverMode::Heuristic] {
+            let (plan, _) = solve_joint(&remaining, &profiles, &cluster, mode);
+            for p in &plan.choices {
+                if profiles.step_time(p.job_id, p.tech, p.gpus).is_none() {
+                    return Err(format!(
+                        "plan uses infeasible (job={}, tech={}, g={})",
+                        p.job_id, p.tech, p.gpus));
+                }
+                if p.gpus > cluster.total_gpus() {
+                    return Err("plan exceeds fleet".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_runtime_monotone_in_gpus() {
+    let jobs = toy_workload(8);
+    let cluster = ClusterSpec::p4d(2);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, &cluster);
+    for j in &jobs {
+        let plans = profiles.pareto_plans(j.id);
+        for w in plans.windows(2) {
+            assert!(w[1].1 > w[0].1 && w[1].2 < w[0].2,
+                    "pareto set not monotone for {}", j.name);
+        }
+    }
+}
+
+#[test]
+fn prop_placement_conserves_gpus() {
+    forall(46, 200, &VecOf { inner: IntRange(1, 16), min_len: 1, max_len: 10 },
+           |sizes| {
+        let cluster = ClusterSpec::p4d(2);
+        let mut free = FreeState::new(&cluster);
+        let total = free.total_free();
+        let mut placed = Vec::new();
+        let mut used = 0;
+        for &g in sizes {
+            if let Some(p) = free.place(g as u32) {
+                used += g as u32;
+                placed.push(p);
+            }
+        }
+        if free.total_free() + used != total {
+            return Err("GPU accounting leak".into());
+        }
+        for p in &placed {
+            free.release(p);
+        }
+        if free.total_free() != total {
+            return Err("release did not restore".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// substrates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_for_random_trees() {
+    struct RandomJson;
+    impl Strategy for RandomJson {
+        type Value = String;
+        fn generate(&self, rng: &mut Rng) -> String {
+            fn gen(rng: &mut Rng, depth: usize) -> Json {
+                match if depth > 2 { rng.usize(4) } else { rng.usize(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.bool(0.5)),
+                    2 => Json::Num((rng.range(-1000, 1000) as f64) / 8.0),
+                    3 => Json::Str(format!("s{}", rng.next_u64() % 1000)),
+                    4 => Json::arr((0..rng.usize(4)).map(|_| gen(rng, depth + 1))),
+                    _ => Json::Obj(
+                        (0..rng.usize(4))
+                            .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            gen(rng, 0).to_string()
+        }
+    }
+    forall(47, 200, &RandomJson, |s| {
+        let a = Json::parse(s).map_err(|e| e.to_string())?;
+        let b = Json::parse(&a.to_string()).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err(format!("roundtrip mismatch: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_deterministic_for_fixed_seed() {
+    forall(48, 8, &PairOf(IntRange(2, 8), IntRange(0, 99)), |&(n, seed)| {
+        let jobs = toy_workload(n as usize);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let run = || {
+            let mut p = saturn::baselines::RandomPolicy::new(seed as u64);
+            simulate(&jobs, &profiles, &cluster, &mut p, &SimConfig::default())
+                .makespan_s
+        };
+        if run() != run() {
+            return Err("nondeterministic simulation".into());
+        }
+        Ok(())
+    });
+}
