@@ -1,0 +1,118 @@
+//! Bench E13: the online scheduling subsystem — arrival-trace replay
+//! (avg/p95 JCT + makespan, online-Saturn vs the online baselines on
+//! identical traces) and the warm-vs-cold joint re-solve cost on one
+//! identical arrival event. Emits a machine-readable perf record to
+//! `BENCH_online.json` (override with `SATURN_BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_online`
+
+use saturn::bench::{fmt_s, print_header, print_stats, Bencher};
+use saturn::cluster::ClusterSpec;
+use saturn::exp;
+use saturn::online::{profile_trace, run_trace, warm_cold_probe,
+                     OnlineMetrics, ONLINE_SYSTEMS};
+use saturn::saturn::solver::SolverMode;
+use saturn::sim::engine::RungConfig;
+use saturn::util::json::Json;
+use saturn::workload::{generate_trace, ArrivalProcess, TraceConfig};
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let cfg = TraceConfig {
+        seed: 42,
+        multijobs: 6,
+        process: ArrivalProcess::Poisson { rate_per_hour: 2.0 },
+        grid_lrs: 2,
+        grid_batches: 2,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: Some(24.0 * 3600.0),
+    };
+    let trace = generate_trace(&cfg);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+
+    print_header(&format!(
+        "online trace replay ({} jobs / {} multi-jobs, rungs {:?})",
+        trace.jobs.len(), trace.groups, rungs.fractions));
+    let mut metrics: Vec<OnlineMetrics> = Vec::new();
+    let mut replay_wall = Vec::new();
+    for sys in ONLINE_SYSTEMS {
+        let mut last: Option<OnlineMetrics> = None;
+        let stats = bencher.run_fn(sys, || {
+            let (_, m) = run_trace(&trace, Some(&rungs), &profiles, &cluster,
+                                   sys, SolverMode::Joint);
+            last = Some(m);
+        });
+        print_stats(&stats);
+        replay_wall.push(stats.mean_s);
+        metrics.push(last.expect("ran at least once"));
+    }
+    print!("\n{}", exp::format_online_row(&metrics));
+
+    // headline: JCT comparison vs both baselines
+    let sat = &metrics[2];
+    for m in &metrics[..2] {
+        println!("online-saturn vs {}: {:.2}x avg JCT, {:.2}x p95 JCT",
+                 m.system, m.avg_jct_s / sat.avg_jct_s,
+                 m.p95_jct_s / sat.p95_jct_s);
+    }
+
+    print_header("warm vs cold joint re-solve (same arrival event)");
+    // best-of-N wall times: the node counts are deterministic, the wall
+    // times are min-filtered to suppress scheduler noise
+    let reps = if std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1") {
+        3
+    } else {
+        15
+    };
+    let mut probe = warm_cold_probe(&trace, &profiles, &cluster);
+    let (mut cold_wall, mut warm_wall) = (probe.cold.wall_s, probe.warm.wall_s);
+    for _ in 1..reps {
+        let p = warm_cold_probe(&trace, &profiles, &cluster);
+        cold_wall = cold_wall.min(p.cold.wall_s);
+        warm_wall = warm_wall.min(p.warm.wall_s);
+        probe = p;
+    }
+    println!("{:<44} {:>10} {:>10} nodes", "re-solve", "wall", "B&B");
+    println!("{:<44} {:>10} {:>10}", "cold", fmt_s(cold_wall),
+             probe.cold.milp_nodes);
+    println!("{:<44} {:>10} {:>10}", "warm (prev-plan incumbent)",
+             fmt_s(warm_wall), probe.warm.milp_nodes);
+    println!("warm speedup: {:.2}x wall, {:.2}x nodes \
+              (plan quality {:.1}s vs {:.1}s)",
+             cold_wall / warm_wall.max(1e-12),
+             probe.cold.milp_nodes as f64
+                 / probe.warm.milp_nodes.max(1) as f64,
+             probe.warm_makespan_s, probe.cold_makespan_s);
+
+    // machine-readable perf record
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_online.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("online")),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("multijobs", Json::num(cfg.multijobs as f64)),
+        ("jobs", Json::num(trace.jobs.len() as f64)),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("rung_fractions",
+         Json::arr(rungs.fractions.iter().map(|&f| Json::num(f)))),
+        ("kill_fraction", Json::num(rungs.kill_fraction)),
+        ("systems", Json::arr(metrics.iter().map(|m| m.to_json()))),
+        ("replay_wall_s",
+         Json::arr(replay_wall.iter().map(|&w| Json::num(w)))),
+        ("warm_cold", Json::obj(vec![
+            ("jobs_before", Json::num(probe.jobs_before as f64)),
+            ("jobs_after", Json::num(probe.jobs_after as f64)),
+            ("cold_wall_s", Json::num(cold_wall)),
+            ("warm_wall_s", Json::num(warm_wall)),
+            ("cold_nodes", Json::num(probe.cold.milp_nodes as f64)),
+            ("warm_nodes", Json::num(probe.warm.milp_nodes as f64)),
+            ("cold_makespan_s", Json::num(probe.cold_makespan_s)),
+            ("warm_makespan_s", Json::num(probe.warm_makespan_s)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("\nwrote {out}");
+}

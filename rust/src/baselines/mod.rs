@@ -3,9 +3,11 @@
 //! and Saturn under identical simulator semantics.
 
 pub mod current_practice;
+pub mod online;
 pub mod optimus;
 pub mod random;
 
 pub use current_practice::CurrentPractice;
+pub use online::{OnlineCurrentPractice, OnlineOptimus};
 pub use optimus::{Optimus, OptimusDynamic};
 pub use random::RandomPolicy;

@@ -1,0 +1,152 @@
+//! Online variants of the §3 baselines for the streaming setting, so
+//! `bench_online` compares Saturn's event-driven joint re-solves against
+//! the same allocation philosophies under identical arrival traces
+//! (DESIGN.md §Online).
+//!
+//!  * [`OnlineCurrentPractice`] — FIFO-by-priority, one whole node per
+//!    job, no elasticity: arrivals queue until a node frees up.
+//!  * [`OnlineOptimus`] — Optimus' greedy marginal-gain allocation,
+//!    re-run with preempt-and-replan at every arrival/departure event
+//!    (the natural online extension of `OptimusDynamic`).
+
+use crate::baselines::optimus::greedy_allocation;
+use crate::sim::engine::{Launch, PlanContext, Policy};
+
+/// FIFO whole-node scheduling with tenant priorities: the highest-priority
+/// pending job (ties: earliest id = earliest arrival) takes the next free
+/// node. Running jobs are never disturbed.
+#[derive(Default)]
+pub struct OnlineCurrentPractice;
+
+impl Policy for OnlineCurrentPractice {
+    fn name(&self) -> &'static str {
+        "online-current-practice"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        let g = ctx.cluster.node.gpus_per_node;
+        let mut pending: Vec<_> =
+            ctx.jobs.iter().filter(|s| s.is_pending()).collect();
+        pending.sort_by(|a, b| {
+            b.priority
+                .partial_cmp(&a.priority)
+                .unwrap()
+                .then(a.job.id.cmp(&b.job.id))
+        });
+        let mut free = ctx.free.clone();
+        let mut out = Vec::new();
+        for s in pending {
+            if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
+                if free.place(g).is_some() {
+                    out.push(Launch { job_id: s.job.id, tech, gpus: g });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Optimus with event-driven elasticity: every arrival and departure
+/// preempts the cluster and re-runs the greedy marginal-gain allocation
+/// over all unfinished jobs (checkpoint lag charged on shape changes by
+/// the engine). Optional periodic introspection on top.
+pub struct OnlineOptimus {
+    pub introspect_every_s: Option<f64>,
+}
+
+impl Default for OnlineOptimus {
+    fn default() -> Self {
+        OnlineOptimus { introspect_every_s: None }
+    }
+}
+
+impl Policy for OnlineOptimus {
+    fn name(&self) -> &'static str {
+        "online-optimus"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        greedy_allocation(ctx)
+    }
+
+    fn introspection_interval(&self) -> Option<f64> {
+        self.introspect_every_s
+    }
+
+    fn replan_on_events(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::sim::engine::{simulate_online, SimConfig};
+    use crate::trials::profile_analytic;
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn setup() -> (crate::workload::Trace, crate::trials::ProfileTable,
+                   ClusterSpec) {
+        let trace = generate_trace(&TraceConfig {
+            seed: 11,
+            multijobs: 3,
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let jobs: Vec<_> = trace.jobs.iter().map(|o| o.job.clone()).collect();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        (trace, profiles, cluster)
+    }
+
+    #[test]
+    fn online_current_practice_completes_stream() {
+        let (trace, profiles, cluster) = setup();
+        let r = simulate_online(&trace.jobs, None, &profiles, &cluster,
+                                &mut OnlineCurrentPractice,
+                                &SimConfig::default());
+        assert_eq!(r.finish_times.len(), trace.jobs.len());
+        assert_eq!(r.preemptions, 0, "FIFO must not preempt");
+        assert!(r.peak_gpus <= cluster.total_gpus());
+    }
+
+    #[test]
+    fn online_optimus_completes_stream_elastically() {
+        let (trace, profiles, cluster) = setup();
+        let r = simulate_online(&trace.jobs, None, &profiles, &cluster,
+                                &mut OnlineOptimus::default(),
+                                &SimConfig::default());
+        assert_eq!(r.finish_times.len(), trace.jobs.len());
+        assert!(r.peak_gpus <= cluster.total_gpus());
+        // elastic sharing launches more than one job concurrently at some
+        // point, so total launches >= job count
+        assert!(r.launches >= trace.jobs.len());
+    }
+
+    #[test]
+    fn priorities_reorder_the_fifo_queue() {
+        // two jobs arriving together, one high priority: with a single
+        // node, the high-priority one must run first
+        let (mut trace, profiles, cluster) = setup();
+        for oj in trace.jobs.iter_mut() {
+            oj.arrival_s = 0.0;
+            oj.priority = 1.0;
+        }
+        let last = trace.jobs.len() - 1;
+        trace.jobs[last].priority = 10.0;
+        let r = simulate_online(&trace.jobs, None, &profiles, &cluster,
+                                &mut OnlineCurrentPractice,
+                                &SimConfig::default());
+        let first_departure = r
+            .finish_times
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(first_departure.0, last,
+                   "high-priority job did not run first: {:?}",
+                   r.finish_times);
+    }
+}

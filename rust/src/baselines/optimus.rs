@@ -11,7 +11,7 @@
 
 use crate::sim::engine::{Launch, PlanContext, Policy};
 
-fn greedy_allocation(ctx: &PlanContext) -> Vec<Launch> {
+pub(crate) fn greedy_allocation(ctx: &PlanContext) -> Vec<Launch> {
     // candidate jobs: pending, with at least one feasible plan
     let pending: Vec<usize> = ctx
         .jobs

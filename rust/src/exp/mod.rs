@@ -112,6 +112,30 @@ pub fn format_row(workload: &str, cells: &[(Cell, Cell)]) -> String {
     out
 }
 
+/// Render an online-bench row (streaming scenario; see `online::run_trace`)
+/// in the same spirit as `format_row`. Shared by the `saturn online` CLI,
+/// `benches/bench_online.rs`, and `examples/online_stream.rs`.
+pub fn format_online_row(metrics: &[crate::online::OnlineMetrics]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<24} {:>10} {:>10} {:>10} {:>11} {:>8} {:>7} {:>7} {:>8}\n",
+        "system", "avgJCT(h)", "p95JCT(h)", "wJCT(h)", "makespan(h)",
+        "util(%)", "kills", "miss", "solves"));
+    for m in metrics {
+        let solves = match (m.solves, m.warm_solves) {
+            (Some(s), Some(w)) => format!("{s}({w}w)"),
+            _ => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<24} {:>10.2} {:>10.2} {:>10.2} {:>11.2} {:>8.0} {:>7} {:>7} {:>8}\n",
+            m.system, m.avg_jct_s / 3600.0, m.p95_jct_s / 3600.0,
+            m.weighted_jct_s / 3600.0, m.makespan_s / 3600.0,
+            m.gpu_utilization * 100.0, m.early_stopped, m.deadline_misses,
+            solves));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,8 +8,10 @@
 //! Three-layer architecture (Python never on the execution path):
 //!  * **L3 (this crate)** — the Parallelism Library ([`parallelism`]), the
 //!    Trial Runner ([`trials`]), the joint MILP Solver with introspection
-//!    ([`saturn`], [`solver`]), the baselines ([`baselines`]), the cluster
-//!    simulator ([`sim`]), and the PJRT execution runtime ([`runtime`]).
+//!    ([`saturn`], [`solver`]), the online scheduling subsystem
+//!    ([`online`], streaming arrivals + early-stopping departures), the
+//!    baselines ([`baselines`]), the cluster simulator ([`sim`]), and the
+//!    PJRT execution runtime ([`runtime`]).
 //!  * **L2** — `python/compile/model.py`: GPT-mini fwd/bwd+AdamW in JAX,
 //!    AOT-lowered to HLO text in `artifacts/`.
 //!  * **L1** — `python/compile/kernels/`: Pallas flash-attention, fused
@@ -25,6 +27,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod models;
+pub mod online;
 pub mod parallelism;
 pub mod runtime;
 pub mod saturn;

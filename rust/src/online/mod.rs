@@ -1,0 +1,260 @@
+//! The online scheduling subsystem (DESIGN.md §Online): streaming
+//! multi-job arrivals, elastic event-driven re-optimization, and
+//! early-stopping departures, with an apples-to-apples harness comparing
+//! [`OnlineSaturn`] against the online baselines on identical traces.
+//!
+//! Layering mirrors `exp/` for the batch setting: `workload::arrivals`
+//! generates traces, `sim::simulate_online` executes them, and this
+//! module owns the system registry, JCT metrics, and the warm-vs-cold
+//! re-solve probe that `bench_online` and the `saturn online` CLI share.
+
+pub mod scheduler;
+
+pub use scheduler::OnlineSaturn;
+
+use crate::baselines::{OnlineCurrentPractice, OnlineOptimus};
+use crate::cluster::ClusterSpec;
+use crate::parallelism::default_library;
+use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
+use crate::sim::engine::{simulate_online, OnlineSimResult, RungConfig,
+                         SimConfig};
+use crate::trials::{profile_analytic, ProfileTable};
+use crate::util::json::Json;
+use crate::workload::Trace;
+
+pub const ONLINE_SYSTEMS: [&str; 3] =
+    ["online-current-practice", "online-optimus", "online-saturn"];
+
+/// Scheduler-quality metrics of one (trace, system) run.
+#[derive(Debug, Clone)]
+pub struct OnlineMetrics {
+    pub system: &'static str,
+    pub avg_jct_s: f64,
+    pub p95_jct_s: f64,
+    /// Mean JCT weighted by tenant priority.
+    pub weighted_jct_s: f64,
+    pub makespan_s: f64,
+    pub gpu_utilization: f64,
+    pub completed: usize,
+    pub early_stopped: usize,
+    pub deadline_misses: usize,
+    pub preemptions: usize,
+    pub migrations: usize,
+    pub decision_s: f64,
+    /// Joint re-solves (Saturn only).
+    pub solves: Option<usize>,
+    /// Warm-started re-solves among them (Saturn only).
+    pub warm_solves: Option<usize>,
+}
+
+impl OnlineMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("system", Json::str(self.system)),
+            ("avg_jct_s", Json::num(self.avg_jct_s)),
+            ("p95_jct_s", Json::num(self.p95_jct_s)),
+            ("weighted_jct_s", Json::num(self.weighted_jct_s)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("gpu_utilization", Json::num(self.gpu_utilization)),
+            ("completed", Json::num(self.completed as f64)),
+            ("early_stopped", Json::num(self.early_stopped as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("migrations", Json::num(self.migrations as f64)),
+            ("decision_s", Json::num(self.decision_s)),
+            ("solves", match self.solves {
+                Some(s) => Json::num(s as f64),
+                None => Json::Null,
+            }),
+            ("warm_solves", match self.warm_solves {
+                Some(s) => Json::num(s as f64),
+                None => Json::Null,
+            }),
+        ])
+    }
+}
+
+/// Profile every job of a trace against the cluster (arrival metadata
+/// does not affect per-job cost models, so one table serves the run).
+pub fn profile_trace(trace: &Trace, cluster: &ClusterSpec) -> ProfileTable {
+    let lib = default_library();
+    let jobs: Vec<_> = trace.jobs.iter().map(|o| o.job.clone()).collect();
+    profile_analytic(&jobs, &lib, cluster)
+}
+
+/// Execute one (trace, system) cell and reduce it to metrics.
+pub fn run_trace(trace: &Trace, rungs: Option<&RungConfig>,
+                 profiles: &ProfileTable, cluster: &ClusterSpec,
+                 system: &str, mode: SolverMode)
+    -> (OnlineSimResult, OnlineMetrics) {
+    let cfg = SimConfig::default();
+    let (result, sys, solves, warm) = match system {
+        "online-current-practice" => {
+            let mut p = OnlineCurrentPractice;
+            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
+                                    &mut p, &cfg);
+            (r, ONLINE_SYSTEMS[0], None, None)
+        }
+        "online-optimus" => {
+            let mut p = OnlineOptimus::default();
+            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
+                                    &mut p, &cfg);
+            (r, ONLINE_SYSTEMS[1], None, None)
+        }
+        "online-saturn" => {
+            let mut p = OnlineSaturn::new(mode);
+            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
+                                    &mut p, &cfg);
+            let (s, w) = (p.solves(), p.warm_solves());
+            (r, ONLINE_SYSTEMS[2], Some(s), Some(w))
+        }
+        other => panic!("unknown online system '{other}' \
+                         (online-current-practice|online-optimus|online-saturn)"),
+    };
+
+    let total_w: f64 = trace.jobs.iter().map(|j| j.priority).sum();
+    let weighted = if total_w > 0.0 {
+        result
+            .jct_s
+            .iter()
+            .map(|&(id, jct)| trace.jobs[id].priority * jct)
+            .sum::<f64>()
+            / total_w
+    } else {
+        0.0
+    };
+    let metrics = OnlineMetrics {
+        system: sys,
+        avg_jct_s: result.avg_jct_s(),
+        p95_jct_s: result.p95_jct_s(),
+        weighted_jct_s: weighted,
+        makespan_s: result.makespan_s,
+        gpu_utilization: result.gpu_utilization,
+        completed: result.completed.len(),
+        early_stopped: result.early_stopped.len(),
+        deadline_misses: result.deadline_misses,
+        preemptions: result.preemptions,
+        migrations: result.migrations,
+        decision_s: result.policy_decision_s,
+        solves,
+        warm_solves: warm,
+    };
+    (result, metrics)
+}
+
+/// Warm-vs-cold re-solve comparison on one identical arrival event.
+#[derive(Debug, Clone)]
+pub struct WarmColdProbe {
+    pub jobs_before: usize,
+    pub jobs_after: usize,
+    pub cold: SolverStats,
+    pub warm: SolverStats,
+    pub cold_makespan_s: f64,
+    pub warm_makespan_s: f64,
+}
+
+/// Replays the moment the LAST multi-job of a trace arrives: solve the
+/// pre-arrival set, then re-solve the post-arrival set twice — cold, and
+/// warm-started from the pre-arrival plan. Both re-solves see the exact
+/// same inputs, isolating the incumbent-seeding effect (bench_online
+/// reports wall time and branch-and-bound node counts for both).
+pub fn warm_cold_probe(trace: &Trace, profiles: &ProfileTable,
+                       cluster: &ClusterSpec) -> WarmColdProbe {
+    let last_group = trace.groups.saturating_sub(1);
+    let before: Vec<(usize, u64)> = trace
+        .jobs
+        .iter()
+        .filter(|o| o.group < last_group)
+        .map(|o| (o.job.id, o.job.total_steps()))
+        .collect();
+    let after: Vec<(usize, u64)> = trace
+        .jobs
+        .iter()
+        .map(|o| (o.job.id, o.job.total_steps()))
+        .collect();
+    let (prev_plan, _) = solve_joint_warm(&before, profiles, cluster,
+                                          SolverMode::Joint, 1.0, None);
+    let (cold_plan, cold) = solve_joint_warm(&after, profiles, cluster,
+                                             SolverMode::Joint, 1.0, None);
+    let (warm_plan, warm) = solve_joint_warm(&after, profiles, cluster,
+                                             SolverMode::Joint, 1.0,
+                                             Some(&prev_plan));
+    WarmColdProbe {
+        jobs_before: before.len(),
+        jobs_after: after.len(),
+        cold,
+        warm,
+        cold_makespan_s: cold_plan.predicted_makespan_s,
+        warm_makespan_s: warm_plan.predicted_makespan_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn trace() -> (Trace, ProfileTable, ClusterSpec) {
+        let t = generate_trace(&TraceConfig {
+            seed: 9,
+            multijobs: 3,
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&t, &cluster);
+        (t, profiles, cluster)
+    }
+
+    #[test]
+    fn all_online_systems_complete_the_stream() {
+        let (t, profiles, cluster) = trace();
+        let rungs = RungConfig::halving();
+        for sys in ONLINE_SYSTEMS {
+            let (r, m) = run_trace(&t, Some(&rungs), &profiles, &cluster,
+                                   sys, SolverMode::Joint);
+            assert_eq!(r.finish_times.len(), t.jobs.len(), "{sys}");
+            assert_eq!(m.completed + m.early_stopped, t.jobs.len(), "{sys}");
+            assert!(m.avg_jct_s > 0.0, "{sys}");
+            assert!(m.p95_jct_s >= m.avg_jct_s * 0.5, "{sys}");
+            assert!(m.gpu_utilization <= 1.0 + 1e-9, "{sys}");
+        }
+    }
+
+    #[test]
+    fn saturn_beats_fifo_on_avg_jct() {
+        let (t, profiles, cluster) = trace();
+        let (_, fifo) = run_trace(&t, None, &profiles, &cluster,
+                                  "online-current-practice",
+                                  SolverMode::Joint);
+        let (_, sat) = run_trace(&t, None, &profiles, &cluster,
+                                 "online-saturn", SolverMode::Joint);
+        assert!(sat.avg_jct_s < fifo.avg_jct_s * 1.001,
+                "online-saturn {:.0}s !< fifo {:.0}s",
+                sat.avg_jct_s, fifo.avg_jct_s);
+    }
+
+    #[test]
+    fn warm_probe_preserves_quality_and_prunes_nodes() {
+        let (t, profiles, cluster) = trace();
+        let p = warm_cold_probe(&t, &profiles, &cluster);
+        assert!(p.warm.warm_used);
+        assert!(!p.cold.warm_used);
+        // both solves run to the same 1% MILP gap; list-scheduling can
+        // amplify in-gap differences slightly, hence the loose band
+        assert!(p.warm_makespan_s <= p.cold_makespan_s * 1.05 + 1.0,
+                "warm {} vs cold {}", p.warm_makespan_s, p.cold_makespan_s);
+        assert!(p.jobs_after > p.jobs_before);
+    }
+
+    #[test]
+    fn metrics_serialize_to_json() {
+        let (t, profiles, cluster) = trace();
+        let (_, m) = run_trace(&t, None, &profiles, &cluster,
+                               "online-saturn", SolverMode::Joint);
+        let s = m.to_json().to_string();
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("system").unwrap().as_str(),
+                   Some("online-saturn"));
+        assert!(parsed.get("avg_jct_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

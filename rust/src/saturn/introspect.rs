@@ -5,9 +5,49 @@
 
 use std::time::Instant;
 
-use crate::saturn::plan::SaturnPlan;
+use crate::saturn::plan::{JobPlan, SaturnPlan};
 use crate::saturn::solver::{solve_joint_with, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
+
+/// Realize launches from a cached plan: pending jobs only, first-fit with
+/// backfill against a scratch copy of the free state. Order is
+/// longest-remaining first; `by_priority` (the online scheduler) puts
+/// tenant priority ahead of runtime.
+pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
+                               by_priority: bool) -> Vec<Launch> {
+    let mut ordered: Vec<&JobPlan> = plan
+        .choices
+        .iter()
+        .filter(|jp| {
+            ctx.jobs
+                .get(jp.job_id)
+                .map(|s| s.is_pending())
+                .unwrap_or(false)
+        })
+        .collect();
+    ordered.sort_by(|a, b| {
+        let runtime = b.runtime_s.partial_cmp(&a.runtime_s).unwrap();
+        if by_priority {
+            let pa = ctx.jobs[a.job_id].priority;
+            let pb = ctx.jobs[b.job_id].priority;
+            pb.partial_cmp(&pa).unwrap().then(runtime)
+        } else {
+            runtime
+        }
+    });
+    let mut free = ctx.free.clone();
+    let mut launches = Vec::new();
+    for jp in ordered {
+        if free.place(jp.gpus).is_some() {
+            launches.push(Launch {
+                job_id: jp.job_id,
+                tech: jp.tech,
+                gpus: jp.gpus,
+            });
+        }
+    }
+    launches
+}
 
 pub struct SaturnPolicy {
     mode: SolverMode,
@@ -57,29 +97,41 @@ impl SaturnPolicy {
     /// first-fit with backfill (the list-scheduling realization).
     fn launch_from_cache(&self, ctx: &PlanContext) -> Vec<Launch> {
         let Some(plan) = &self.cached else { return Vec::new() };
-        let mut ordered: Vec<_> = plan
-            .choices
-            .iter()
-            .filter(|jp| {
-                ctx.jobs
-                    .get(jp.job_id)
-                    .map(|s| s.is_pending())
-                    .unwrap_or(false)
-            })
-            .collect();
-        ordered.sort_by(|a, b| b.runtime_s.partial_cmp(&a.runtime_s).unwrap());
-        let mut free = ctx.free.clone();
-        let mut launches = Vec::new();
-        for jp in ordered {
-            if free.place(jp.gpus).is_some() {
-                launches.push(Launch {
-                    job_id: jp.job_id,
-                    tech: jp.tech,
-                    gpus: jp.gpus,
-                });
-            }
+        launch_from_plan(plan, ctx, false)
+    }
+}
+
+/// Migration hysteresis shared by the batch and online Saturn policies:
+/// keep a previously-running job on its old (tech, gpus) unless the fresh
+/// plan improves its remaining runtime by more than `threshold` —
+/// checkpoint/restart penalties otherwise erode the re-solve gains
+/// (Gandiva's lesson).
+pub(crate) fn apply_migration_hysteresis(
+    plan: &mut SaturnPlan,
+    ctx: &PlanContext,
+    remaining: &[(usize, u64)],
+    threshold: f64,
+) {
+    let steps_of = |job_id: usize| {
+        remaining.iter().find(|(id, _)| *id == job_id).map(|&(_, s)| s)
+    };
+    for jp in plan.choices.iter_mut() {
+        let Some(s) = ctx.jobs.get(jp.job_id) else { continue };
+        let Some(prev) = s.last_alloc else { continue };
+        if prev == (jp.tech, jp.gpus) {
+            continue;
         }
-        launches
+        let Some(steps) = steps_of(jp.job_id) else { continue };
+        let Some(prev_step) = ctx.profiles.step_time(jp.job_id, prev.0, prev.1)
+        else {
+            continue;
+        };
+        let prev_runtime = prev_step * steps as f64;
+        if jp.runtime_s > prev_runtime * (1.0 - threshold) {
+            jp.tech = prev.0;
+            jp.gpus = prev.1;
+            jp.runtime_s = prev_runtime;
+        }
     }
 }
 
@@ -90,12 +142,13 @@ impl Policy for SaturnPolicy {
 
     fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
         let t0 = Instant::now();
-        // Re-solve over unfinished jobs with their *remaining* steps —
-        // this is what makes introspection adapt as the workload shifts.
+        // Re-solve over unfinished ARRIVED jobs with their *remaining*
+        // steps — this is what makes introspection adapt as the workload
+        // shifts (in batch mode every job has arrived at t=0).
         let remaining: Vec<(usize, u64)> = ctx
             .jobs
             .iter()
-            .filter(|s| s.finished_at.is_none() && s.running.is_none())
+            .filter(|s| s.is_pending())
             .map(|s| (s.job.id, s.remaining_steps()))
             .collect();
         if remaining.is_empty() {
@@ -130,31 +183,8 @@ impl Policy for SaturnPolicy {
         self.solves += 1;
         self.last_solve_t = ctx.now;
 
-        // Hysteresis: keep a previously-running job on its old (tech, gpus)
-        // unless the new plan is decisively better — checkpoint/restart
-        // penalties otherwise erode the re-solve gains (Gandiva's lesson).
-        let steps_of = |job_id: usize| {
-            remaining.iter().find(|(id, _)| *id == job_id).map(|&(_, s)| s)
-        };
-        for jp in plan.choices.iter_mut() {
-            let Some(s) = ctx.jobs.get(jp.job_id) else { continue };
-            let Some(prev) = s.last_alloc else { continue };
-            if prev == (jp.tech, jp.gpus) {
-                continue;
-            }
-            let Some(steps) = steps_of(jp.job_id) else { continue };
-            let Some(prev_step) =
-                ctx.profiles.step_time(jp.job_id, prev.0, prev.1)
-            else {
-                continue;
-            };
-            let prev_runtime = prev_step * steps as f64;
-            if jp.runtime_s > prev_runtime * (1.0 - self.migration_threshold) {
-                jp.tech = prev.0;
-                jp.gpus = prev.1;
-                jp.runtime_s = prev_runtime;
-            }
-        }
+        apply_migration_hysteresis(&mut plan, ctx, &remaining,
+                                   self.migration_threshold);
 
         self.cached = Some(plan);
         let launches = self.launch_from_cache(ctx);

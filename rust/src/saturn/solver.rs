@@ -54,6 +54,9 @@ pub struct SolverStats {
     pub milp_nodes: usize,
     pub wall_s: f64,
     pub proved_optimal: bool,
+    /// An incumbent seeded from a previous plan was handed to the MILP
+    /// (online incremental re-solves; see `solve_joint_warm`).
+    pub warm_used: bool,
 }
 
 /// Inputs per unfinished job: (job_id, remaining_steps).
@@ -79,6 +82,23 @@ pub fn solve_joint_with(
     mode: SolverMode,
     lookahead: f64,
 ) -> (SaturnPlan, SolverStats) {
+    solve_joint_warm(jobs, profiles, cluster, mode, lookahead, None)
+}
+
+/// Incremental re-solve for the online scheduler: `warm` (the plan from
+/// the previous event) seeds the branch-and-bound incumbent, so the MILP
+/// prunes against a known-good schedule from node one. Jobs absent from
+/// `warm` (fresh arrivals) default to their min-GPU Pareto plan in the
+/// seeded incumbent; departed jobs are simply dropped. This is what makes
+/// event-rate re-solving affordable (bench_online measures warm vs cold).
+pub fn solve_joint_warm(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+    lookahead: f64,
+    warm: Option<&SaturnPlan>,
+) -> (SaturnPlan, SolverStats) {
     let start = Instant::now();
     let kappa = lookahead.max(1.0);
     let mut stats = SolverStats::default();
@@ -98,7 +118,7 @@ pub fn solve_joint_with(
     let choices = match mode {
         SolverMode::Heuristic => greedy_choice(&plans, cluster, kappa),
         SolverMode::Joint => {
-            match milp_choice(&plans, cluster, kappa, &mut stats) {
+            match milp_choice(&plans, cluster, kappa, warm, &mut stats) {
                 Some(c) => c,
                 None => greedy_choice(&plans, cluster, kappa), // fallback
             }
@@ -128,6 +148,7 @@ fn milp_choice(
     plans: &[(usize, Vec<(usize, u32, f64)>)],
     cluster: &ClusterSpec,
     kappa: f64,
+    warm: Option<&SaturnPlan>,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     let g_total = cluster.total_gpus() as f64;
@@ -174,8 +195,39 @@ fn milp_choice(
         }
     }
 
+    // Warm start: translate the previous plan into an incumbent vector.
+    // Every job needs exactly one plan set; arrivals absent from the old
+    // plan (and stale choices pruned off the Pareto set) fall back to the
+    // min-GPU plan, which always satisfies the area bound together with
+    // the matching makespan value for M.
+    let warm_x = warm.map(|prev| {
+        let mut x = vec![0.0; n];
+        let mut longest = 0.0f64;
+        let mut area_tot = 0.0f64;
+        for (ji, (id, ps)) in plans.iter().enumerate() {
+            let c = prev
+                .plan_for(*id)
+                .and_then(|jp| {
+                    ps.iter().position(|&(t, g, _)| (t, g) == (jp.tech, jp.gpus))
+                })
+                .unwrap_or(0);
+            x[index[ji][c]] = 1.0;
+            let (_, g, t) = ps[c];
+            longest = longest.max(t / kappa);
+            area_tot += g as f64 * t;
+        }
+        x[m_var] = longest.max(area_tot / g_total);
+        x
+    });
+    stats.warm_used = warm_x.is_some();
+
     let ints: Vec<usize> = index.iter().flatten().copied().collect();
-    let opts = MilpOptions { gap: 0.01, max_nodes: 20_000, time_limit_s: 10.0 };
+    let opts = MilpOptions {
+        gap: 0.01,
+        max_nodes: 20_000,
+        time_limit_s: 10.0,
+        warm_start: warm_x,
+    };
     match milp_solve(&lp, &ints, &opts) {
         MilpResult::Solved { x, nodes, proved_optimal, .. } => {
             stats.milp_nodes = nodes;
@@ -314,7 +366,12 @@ fn exact_slot_choice(
     }
 
     let ints: Vec<usize> = idx.iter().flatten().flatten().copied().collect();
-    let opts = MilpOptions { gap: 1e-3, max_nodes: 50_000, time_limit_s: 20.0 };
+    let opts = MilpOptions {
+        gap: 1e-3,
+        max_nodes: 50_000,
+        time_limit_s: 20.0,
+        warm_start: None,
+    };
     match milp_solve(&lp, &ints, &opts) {
         MilpResult::Solved { x, nodes, proved_optimal, .. } => {
             stats.milp_nodes += nodes;
@@ -538,6 +595,37 @@ mod tests {
                 <= joint.predicted_makespan_s * 1.6 + 1.0,
                 "exact {} joint {}", exact.predicted_makespan_s,
                 joint.predicted_makespan_s);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_quality() {
+        let (jobs, profiles, cluster) = setup(1);
+        let rem = remaining(&jobs);
+        let (cold, _) = solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let (warm, warm_stats) = solve_joint_warm(&rem, &profiles, &cluster,
+                                                  SolverMode::Joint, 1.0,
+                                                  Some(&cold));
+        assert!(warm_stats.warm_used);
+        assert!(warm.predicted_makespan_s
+                <= cold.predicted_makespan_s * 1.001,
+                "warm {} vs cold {}", warm.predicted_makespan_s,
+                cold.predicted_makespan_s);
+    }
+
+    #[test]
+    fn warm_start_tolerates_arrivals_and_departures() {
+        // warm plan covers a different job set: overlaps warm-start, new
+        // arrivals fall back to min-GPU plans, departures are dropped
+        let (jobs, profiles, cluster) = setup(1);
+        let rem = remaining(&jobs);
+        let (prev, _) = solve_joint(&rem[..6], &profiles, &cluster,
+                                    SolverMode::Joint);
+        let (plan, stats) = solve_joint_warm(&rem[3..], &profiles, &cluster,
+                                             SolverMode::Joint, 1.0,
+                                             Some(&prev));
+        assert!(stats.warm_used);
+        assert_eq!(plan.choices.len(), rem.len() - 3);
+        assert!(plan.predicted_makespan_s >= plan.lower_bound_s * 0.999);
     }
 
     #[test]

@@ -2,12 +2,22 @@
 //! and introspection points, asks the `Policy` for launch decisions, and
 //! enforces capacity/placement/checkpoint semantics.
 //!
+//! Two entrypoints share one event loop:
+//!  * [`simulate`] — the paper's batch setting: every job known at t=0.
+//!  * [`simulate_online`] — the streaming setting (DESIGN.md §Online):
+//!    jobs arrive over virtual time, ASHA-style rung boundaries early-stop
+//!    the worst fraction of each HPO grid, and policies may opt into
+//!    preempt-and-replan on arrival/departure events (checkpoint penalties
+//!    charged whenever a relaunched job's (technique, gpus) changed).
+//!
 //! Determinism: given the same policy (and policy seed), the simulation is
-//! bit-reproducible — Table 2 rows in EXPERIMENTS.md cite seeds.
+//! bit-reproducible — Table 2 rows in EXPERIMENTS.md cite seeds, and the
+//! `online` CLI replays traces to bit-identical schedules.
 
 use crate::cluster::ClusterSpec;
 use crate::sim::placement::FreeState;
 use crate::trials::ProfileTable;
+use crate::workload::arrivals::OnlineJob;
 use crate::workload::Job;
 
 /// A policy's decision: run `job_id` with `tech` on `gpus` GPUs.
@@ -30,7 +40,7 @@ pub struct Running {
     pub planned_finish: f64,
 }
 
-/// Job + live progress.
+/// Job + live progress (+ online metadata; batch mode uses the defaults).
 #[derive(Debug, Clone)]
 pub struct JobProgress {
     pub job: Job,
@@ -39,6 +49,22 @@ pub struct JobProgress {
     pub finished_at: Option<f64>,
     /// Last (tech, gpus) this job ran under (checkpoint-penalty detection).
     pub last_alloc: Option<(usize, u32)>,
+    /// Virtual time at which the job becomes schedulable (0 in batch mode).
+    pub arrival_s: f64,
+    /// Flipped by the engine once virtual time reaches `arrival_s`.
+    pub arrived: bool,
+    /// Killed by an early-stopping rung rather than trained to completion.
+    pub early_stopped: bool,
+    /// Multi-job (HPO grid) this job belongs to; rung kills rank in-group.
+    pub group: usize,
+    /// Tenant priority weight (>= 1.0; online policies launch high first).
+    pub priority: f64,
+    /// Optional completion deadline, seconds after arrival.
+    pub deadline_s: Option<f64>,
+    /// Latent validation score (higher = better) driving rung kills.
+    pub score: f64,
+    /// Next index into `RungConfig::fractions` this job has yet to cross.
+    next_rung: usize,
 }
 
 impl JobProgress {
@@ -47,7 +73,7 @@ impl JobProgress {
     }
 
     pub fn is_pending(&self) -> bool {
-        self.finished_at.is_none() && self.running.is_none()
+        self.arrived && self.finished_at.is_none() && self.running.is_none()
     }
 }
 
@@ -76,6 +102,13 @@ pub trait Policy {
         None
     }
 
+    /// Online mode: when true, arrival and departure events ALSO trigger
+    /// preempt-and-replan (all unfinished jobs offered back to the policy;
+    /// checkpoint lag charged only where the allocation shape changes).
+    fn replan_on_events(&self) -> bool {
+        false
+    }
+
     /// Cumulative wall-clock seconds the policy spent deciding (solver
     /// cost reporting, bench E9).
     fn decision_time_s(&self) -> f64 {
@@ -98,6 +131,24 @@ impl Default for SimConfig {
     }
 }
 
+/// Early-stopping rule for streaming HPO grids (successive-halving rungs,
+/// applied asynchronously as each job reaches a rung — ASHA).
+#[derive(Debug, Clone)]
+pub struct RungConfig {
+    /// Progress fractions in (0, 1), ascending, at which jobs hit rungs.
+    pub fractions: Vec<f64>,
+    /// Fraction of each rung cohort killed (worst scores first), in [0, 1).
+    pub kill_fraction: f64,
+}
+
+impl RungConfig {
+    /// Two rungs at 25%/50% progress killing the worst half seen so far —
+    /// the classic eta=2 successive-halving shape.
+    pub fn halving() -> Self {
+        RungConfig { fractions: vec![0.25, 0.5], kill_fraction: 0.5 }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub makespan_s: f64,
@@ -109,51 +160,142 @@ pub struct SimResult {
     pub policy_decision_s: f64,
 }
 
-/// Run `jobs` to completion under `policy`. Panics if the policy deadlocks
-/// (no job running and the policy refuses to launch any pending job).
+/// Result of an online (streaming) simulation.
+#[derive(Debug, Clone)]
+pub struct OnlineSimResult {
+    /// Last departure (completion or rung kill) time.
+    pub makespan_s: f64,
+    /// Departure time per job, in job-id order (kills included).
+    pub finish_times: Vec<(usize, f64)>,
+    /// Job completion time (departure - arrival) per job, job-id order.
+    pub jct_s: Vec<(usize, f64)>,
+    /// Jobs trained to completion.
+    pub completed: Vec<usize>,
+    /// Jobs killed at a rung boundary.
+    pub early_stopped: Vec<usize>,
+    /// Completed jobs that blew their deadline.
+    pub deadline_misses: usize,
+    /// Running jobs whose allocation changed across a replan.
+    pub preemptions: usize,
+    /// Launches that paid the checkpoint/restart penalty.
+    pub migrations: usize,
+    /// busy GPU-seconds / (total GPUs * makespan)
+    pub gpu_utilization: f64,
+    /// Max GPUs simultaneously busy (capacity invariant diagnostics).
+    pub peak_gpus: u32,
+    pub launches: usize,
+    pub policy_decision_s: f64,
+}
+
+impl OnlineSimResult {
+    pub fn avg_jct_s(&self) -> f64 {
+        if self.jct_s.is_empty() {
+            return 0.0;
+        }
+        self.jct_s.iter().map(|(_, j)| j).sum::<f64>() / self.jct_s.len() as f64
+    }
+
+    pub fn p95_jct_s(&self) -> f64 {
+        let xs: Vec<f64> = self.jct_s.iter().map(|&(_, j)| j).collect();
+        crate::util::stats::percentile(&xs, 0.95)
+    }
+}
+
+/// Run `jobs` to completion under `policy` (batch mode: all jobs known at
+/// t=0, no early stopping). Panics if the policy deadlocks (no job running
+/// and the policy refuses to launch any pending job).
 pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
                 policy: &mut dyn Policy, cfg: &SimConfig) -> SimResult {
+    let online: Vec<OnlineJob> = jobs.iter().map(OnlineJob::batch).collect();
+    let r = simulate_online(&online, None, profiles, cluster, policy, cfg);
+    SimResult {
+        makespan_s: r.makespan_s,
+        finish_times: r.finish_times,
+        preemptions: r.preemptions,
+        gpu_utilization: r.gpu_utilization,
+        launches: r.launches,
+        policy_decision_s: r.policy_decision_s,
+    }
+}
+
+/// Streaming event loop: arrivals, rung-boundary departures, completions
+/// and introspection points, in deterministic order. `jobs` must carry
+/// dense ids 0..n (policies index job state by id).
+pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
+                       profiles: &ProfileTable, cluster: &ClusterSpec,
+                       policy: &mut dyn Policy, cfg: &SimConfig)
+    -> OnlineSimResult {
+    for (i, oj) in jobs.iter().enumerate() {
+        assert_eq!(oj.job.id, i, "online jobs must have dense ids");
+    }
     let mut state: Vec<JobProgress> = jobs
         .iter()
-        .map(|j| JobProgress {
-            job: j.clone(),
+        .map(|oj| JobProgress {
+            job: oj.job.clone(),
             steps_done: 0,
             running: None,
             finished_at: None,
             last_alloc: None,
+            arrival_s: oj.arrival_s.max(0.0),
+            arrived: oj.arrival_s <= 0.0,
+            early_stopped: false,
+            group: oj.group,
+            priority: oj.priority.max(1e-6),
+            deadline_s: oj.deadline_s,
+            score: oj.score,
+            next_rung: 0,
         })
         .collect();
     let mut free = FreeState::new(cluster);
     let mut now = 0.0f64;
     let mut preemptions = 0usize;
+    let mut migrations = 0usize;
     let mut launches = 0usize;
     let mut busy_gpu_seconds = 0.0f64;
+    let mut peak_gpus = 0u32;
     let interval = policy.introspection_interval();
     let mut next_introspect = interval.map(|i| i.max(1.0));
 
-    // initial plan
-    apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
-               &mut launches, cfg);
+    // Asynchronous-ASHA bookkeeping: scores seen so far per (group, rung).
+    let n_groups = state.iter().map(|s| s.group + 1).max().unwrap_or(0);
+    let n_rungs = rungs.map(|r| r.fractions.len()).unwrap_or(0);
+    let mut cohorts: Vec<Vec<Vec<f64>>> =
+        vec![vec![Vec::new(); n_rungs]; n_groups];
 
-    let max_iters = 200_000;
+    // initial plan over the jobs already arrived at t=0
+    apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+               &mut launches, &mut migrations, cfg);
+
+    let max_iters = 400_000;
     for _ in 0..max_iters {
         if state.iter().all(|s| s.finished_at.is_some()) {
             break;
         }
-        // next completion event
+        // --- candidate events ---------------------------------------------
         let next_finish = state
             .iter()
             .filter_map(|s| s.running.as_ref().map(|r| r.planned_finish))
             .fold(f64::INFINITY, f64::min);
-        let t_next = match next_introspect {
-            Some(ti) if ti < next_finish => ti,
-            _ => next_finish,
+        let next_arrival = state
+            .iter()
+            .filter(|s| !s.arrived)
+            .map(|s| s.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        let next_rung = match rungs {
+            Some(rc) => state
+                .iter()
+                .filter_map(|s| rung_crossing(s, rc, now))
+                .fold(f64::INFINITY, f64::min),
+            None => f64::INFINITY,
         };
+        let next_intro = next_introspect.unwrap_or(f64::INFINITY);
+        let t_next = next_finish.min(next_arrival).min(next_rung).min(next_intro);
+
         if !t_next.is_finite() {
-            // nothing running: force-plan; if still nothing, deadlock
+            // nothing running/arriving: force-plan; if still nothing, deadlock
             let before = launches;
             apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
-                       &mut launches, cfg);
+                       &mut launches, &mut migrations, cfg);
             if launches == before {
                 panic!(
                     "policy '{}' deadlocked at t={now:.1}s with {} pending jobs",
@@ -171,12 +313,74 @@ pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
             .iter()
             .filter_map(|s| s.running.as_ref().map(|r| r.gpus))
             .sum();
+        peak_gpus = peak_gpus.max(busy);
         busy_gpu_seconds += busy as f64 * (t_next - now);
         now = t_next;
+        let mut set_changed = false; // any arrival/departure at this instant
 
-        if Some(now) == next_introspect {
-            // checkpoint-everything introspection point: bank progress,
-            // mark all unfinished jobs pending, let the policy replan.
+        // (1) completions due now
+        for s in state.iter_mut() {
+            let done_now = s
+                .running
+                .as_ref()
+                .map(|r| (r.planned_finish - now).abs() < 1e-9)
+                .unwrap_or(false);
+            if done_now {
+                let r = s.running.take().unwrap();
+                s.steps_done = s.job.total_steps();
+                s.finished_at = Some(now);
+                free.release(&r.placement);
+                set_changed = true;
+            }
+        }
+
+        // (2) rung crossings due now: rank within the cohort seen so far;
+        // the worst `kill_fraction` depart early (banked and released).
+        // Jobs are visited in id order, so cohort growth is deterministic.
+        if let Some(rc) = rungs {
+            for i in 0..state.len() {
+                while let Some(t) = rung_crossing(&state[i], rc, now) {
+                    if t > now + 1e-9 {
+                        break;
+                    }
+                    let s = &mut state[i];
+                    let rung = s.next_rung;
+                    s.next_rung += 1;
+                    let cohort = &mut cohorts[s.group][rung];
+                    cohort.push(s.score);
+                    let worse = cohort.iter().filter(|&&x| x < s.score).count();
+                    let quota =
+                        (cohort.len() as f64 * rc.kill_fraction).floor() as usize;
+                    if worse < quota {
+                        if let Some(r) = s.running.take() {
+                            let done =
+                                ((now - r.resume_at) / r.step_time).floor();
+                            s.steps_done = (s.steps_done + done.max(0.0) as u64)
+                                .min(s.job.total_steps());
+                            free.release(&r.placement);
+                        }
+                        s.finished_at = Some(now);
+                        s.early_stopped = true;
+                        set_changed = true;
+                    }
+                }
+            }
+        }
+
+        // (3) arrivals due now
+        for s in state.iter_mut() {
+            if !s.arrived && s.arrival_s <= now + 1e-9 {
+                s.arrived = true;
+                set_changed = true;
+            }
+        }
+
+        // (4) replan: periodic introspection always preempts everything;
+        // arrival/departure events do so only when the policy opts in.
+        let introspect_now = next_introspect == Some(now);
+        if introspect_now || (set_changed && policy.replan_on_events()) {
+            // checkpoint-everything: bank progress, mark all unfinished
+            // jobs pending, let the policy replan from scratch.
             for s in state.iter_mut() {
                 if let Some(r) = s.running.take() {
                     let done = ((now - r.resume_at) / r.step_time).floor();
@@ -190,28 +394,16 @@ pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
                     }
                 }
             }
+            if introspect_now {
+                next_introspect = Some(now + interval.unwrap());
+            }
             let pre_launch = snapshot_allocs(&state);
             apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
-                       &mut launches, cfg);
+                       &mut launches, &mut migrations, cfg);
             preemptions += count_migrations(&pre_launch, &state);
-            next_introspect = Some(now + interval.unwrap());
         } else {
-            // completions at `now`
-            for s in state.iter_mut() {
-                let done_now = s
-                    .running
-                    .as_ref()
-                    .map(|r| (r.planned_finish - now).abs() < 1e-9)
-                    .unwrap_or(false);
-                if done_now {
-                    let r = s.running.take().unwrap();
-                    s.steps_done = s.job.total_steps();
-                    s.finished_at = Some(now);
-                    free.release(&r.placement);
-                }
-            }
             apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
-                       &mut launches, cfg);
+                       &mut launches, &mut migrations, cfg);
         }
     }
 
@@ -219,18 +411,60 @@ pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
         .iter()
         .map(|s| s.finished_at.expect("all jobs finished"))
         .fold(0.0, f64::max);
-    SimResult {
+    let mut completed = Vec::new();
+    let mut early_stopped = Vec::new();
+    let mut deadline_misses = 0usize;
+    for s in &state {
+        if s.early_stopped {
+            early_stopped.push(s.job.id);
+        } else {
+            completed.push(s.job.id);
+            if let Some(d) = s.deadline_s {
+                if s.finished_at.unwrap() > s.arrival_s + d {
+                    deadline_misses += 1;
+                }
+            }
+        }
+    }
+    OnlineSimResult {
         makespan_s: makespan,
         finish_times: state
             .iter()
             .map(|s| (s.job.id, s.finished_at.unwrap()))
             .collect(),
+        jct_s: state
+            .iter()
+            .map(|s| (s.job.id, s.finished_at.unwrap() - s.arrival_s))
+            .collect(),
+        completed,
+        early_stopped,
+        deadline_misses,
         preemptions,
+        migrations,
         gpu_utilization: busy_gpu_seconds
             / (cluster.total_gpus() as f64 * makespan.max(1e-9)),
+        peak_gpus,
         launches,
         policy_decision_s: policy.decision_time_s(),
     }
+}
+
+/// Virtual time at which a RUNNING job crosses its next rung threshold,
+/// `None` if it isn't running, is out of rungs, or completes first.
+/// Clamped to `now` defensively so time never runs backwards.
+fn rung_crossing(s: &JobProgress, rc: &RungConfig, now: f64) -> Option<f64> {
+    let r = s.running.as_ref()?;
+    let frac = *rc.fractions.get(s.next_rung)?;
+    let threshold = (s.job.total_steps() as f64 * frac).ceil() as u64;
+    if threshold >= s.job.total_steps() {
+        return None; // degenerate rung: completion handles it
+    }
+    let delta = threshold.saturating_sub(s.steps_done);
+    let t = r.resume_at + delta as f64 * r.step_time;
+    if t >= r.planned_finish - 1e-9 {
+        return None; // finishes before (or at) the rung
+    }
+    Some(t.max(now))
 }
 
 fn snapshot_allocs(state: &[JobProgress]) -> Vec<Option<(usize, u32)>> {
@@ -252,10 +486,11 @@ fn count_migrations(before: &[Option<(usize, u32)>], state: &[JobProgress])
         .count()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
               free: &mut FreeState, profiles: &ProfileTable,
               cluster: &ClusterSpec, now: f64, launches: &mut usize,
-              cfg: &SimConfig) {
+              migrations: &mut usize, cfg: &SimConfig) {
     let proposals = {
         let ctx = PlanContext { now, jobs: state, free, profiles, cluster };
         policy.plan(&ctx)
@@ -274,6 +509,9 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus))
             .unwrap_or(false);
         let lag = if migrated { cfg.checkpoint_penalty_s } else { 0.0 };
+        if migrated {
+            *migrations += 1;
+        }
         let resume_at = now + lag;
         let remaining = s.remaining_steps() as f64;
         s.running = Some(Running {
@@ -366,5 +604,103 @@ mod tests {
                          &SimConfig::default());
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.finish_times, b.finish_times);
+    }
+
+    // -- online mode -------------------------------------------------------
+
+    fn online_jobs(n: usize, gap_s: f64) -> Vec<OnlineJob> {
+        toy_workload(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, job)| OnlineJob {
+                job,
+                arrival_s: gap_s * i as f64,
+                group: 0,
+                priority: 1.0,
+                deadline_s: None,
+                // descending: every later job ranks below the cohort seen
+                // so far, so rung kills actually trigger under FIFO order
+                score: (n - i) as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn staggered_arrivals_delay_schedulability() {
+        let (_, profiles, cluster) = setup(3);
+        let jobs = online_jobs(3, 5_000.0);
+        let r = simulate_online(&jobs, None, &profiles, &cluster, &mut Fifo,
+                                &SimConfig::default());
+        assert_eq!(r.completed.len(), 3);
+        assert!(r.early_stopped.is_empty());
+        // job i cannot depart before it arrived + its own runtime
+        for &(id, fin) in &r.finish_times {
+            assert!(fin >= jobs[id].arrival_s, "job {id} finished pre-arrival");
+        }
+        // JCT bookkeeping is relative to arrival
+        for &(id, jct) in &r.jct_s {
+            let fin = r.finish_times[id].1;
+            assert!((jct - (fin - jobs[id].arrival_s)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn online_with_zero_arrivals_matches_batch() {
+        let (jobs, profiles, cluster) = setup(5);
+        let batch = simulate(&jobs, &profiles, &cluster, &mut Fifo,
+                             &SimConfig::default());
+        let online: Vec<OnlineJob> =
+            jobs.iter().map(OnlineJob::batch).collect();
+        let r = simulate_online(&online, None, &profiles, &cluster, &mut Fifo,
+                                &SimConfig::default());
+        assert_eq!(batch.makespan_s, r.makespan_s);
+        assert_eq!(batch.finish_times, r.finish_times);
+    }
+
+    #[test]
+    fn rung_kills_depart_early_and_release_gpus() {
+        let (_, profiles, cluster) = setup(6);
+        // all six arrive at t=0 in one grid; scores ascend with id
+        let jobs = online_jobs(6, 0.0);
+        let rungs = RungConfig { fractions: vec![0.25], kill_fraction: 0.5 };
+        let with = simulate_online(&jobs, Some(&rungs), &profiles, &cluster,
+                                   &mut Fifo, &SimConfig::default());
+        let without = simulate_online(&jobs, None, &profiles, &cluster,
+                                      &mut Fifo, &SimConfig::default());
+        assert!(!with.early_stopped.is_empty(), "no job was early-stopped");
+        assert_eq!(with.early_stopped.len() + with.completed.len(), 6);
+        assert!(with.makespan_s < without.makespan_s,
+                "early stopping did not shorten the schedule: {} vs {}",
+                with.makespan_s, without.makespan_s);
+        // killed jobs departed strictly before their full runtime elapsed
+        for &id in &with.early_stopped {
+            assert!(with.jct_s[id].1 < without.jct_s[id].1);
+        }
+    }
+
+    #[test]
+    fn online_replay_is_bit_identical() {
+        let (_, profiles, cluster) = setup(6);
+        let jobs = online_jobs(6, 1_000.0);
+        let rungs = RungConfig::halving();
+        let run = || {
+            simulate_online(&jobs, Some(&rungs), &profiles, &cluster,
+                            &mut Fifo, &SimConfig::default())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.jct_s, b.jct_s);
+        assert_eq!(a.early_stopped, b.early_stopped);
+        assert_eq!(a.launches, b.launches);
+    }
+
+    #[test]
+    fn peak_gpus_never_exceed_capacity() {
+        let (_, profiles, cluster) = setup(8);
+        let jobs = online_jobs(8, 2_000.0);
+        let r = simulate_online(&jobs, Some(&RungConfig::halving()), &profiles,
+                                &cluster, &mut Fifo, &SimConfig::default());
+        assert!(r.peak_gpus <= cluster.total_gpus());
+        assert!(r.gpu_utilization <= 1.0 + 1e-9);
     }
 }

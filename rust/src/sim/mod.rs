@@ -8,6 +8,7 @@
 pub mod engine;
 pub mod placement;
 
-pub use engine::{simulate, JobProgress, Launch, PlanContext, Policy,
-                 Running, SimConfig, SimResult};
+pub use engine::{simulate, simulate_online, JobProgress, Launch,
+                 OnlineSimResult, PlanContext, Policy, Running, RungConfig,
+                 SimConfig, SimResult};
 pub use placement::FreeState;

@@ -17,11 +17,21 @@ pub struct MilpOptions {
     pub gap: f64,
     pub max_nodes: usize,
     pub time_limit_s: f64,
+    /// Candidate solution seeding the incumbent (Gurobi's MIP start).
+    /// Validated against the constraints before use; an infeasible warm
+    /// start is silently ignored. Online re-solves pass the previous
+    /// plan here so branch-and-bound prunes against it from node one.
+    pub warm_start: Option<Vec<f64>>,
 }
 
 impl Default for MilpOptions {
     fn default() -> Self {
-        MilpOptions { gap: 1e-6, max_nodes: 200_000, time_limit_s: 30.0 }
+        MilpOptions {
+            gap: 1e-6,
+            max_nodes: 200_000,
+            time_limit_s: 30.0,
+            warm_start: None,
+        }
     }
 }
 
@@ -79,7 +89,11 @@ pub fn solve(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> MilpResult 
     let mut heap = BinaryHeap::new();
     heap.push(Node { bound: root_bound, extra: Vec::new() });
 
-    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut incumbent: Option<(Vec<f64>, f64)> =
+        opts.warm_start.as_ref().and_then(|ws| {
+            let x = round_ints(ws.clone(), integer_vars);
+            warm_objective(lp, &x).map(|obj| (x, obj))
+        });
     let mut nodes = 0usize;
     let mut exhausted = true;
 
@@ -163,6 +177,32 @@ pub fn solve(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> MilpResult 
             }
         }
     }
+}
+
+/// Objective value of `x` if it satisfies every constraint of `lp` (the
+/// integer restriction is the caller's concern — `x` arrives pre-rounded);
+/// `None` when infeasible. Used to vet warm starts.
+fn warm_objective(lp: &Lp, x: &[f64]) -> Option<f64> {
+    if x.len() != lp.n {
+        return None;
+    }
+    let tol = 1e-6;
+    if x.iter().any(|&v| v < -tol) {
+        return None;
+    }
+    for c in &lp.constraints {
+        let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+        let slack = tol * (1.0 + c.rhs.abs() + lhs.abs());
+        let ok = match c.cmp {
+            Cmp::Le => lhs <= c.rhs + slack,
+            Cmp::Ge => lhs >= c.rhs - slack,
+            Cmp::Eq => (lhs - c.rhs).abs() <= slack,
+        };
+        if !ok {
+            return None;
+        }
+    }
+    Some(x.iter().zip(&lp.objective).map(|(xi, ci)| xi * ci).sum())
 }
 
 fn relax_with(lp: &Lp, extra: &[(usize, Cmp, f64)]) -> LpResult {
@@ -283,6 +323,68 @@ mod tests {
                 .expect("solved");
             assert!((-obj - best).abs() < 1e-5, "milp {} vs brute {best}", -obj);
         }
+    }
+
+    fn knapsack_lp() -> Lp {
+        // max 10x0 + 13x1 + 7x2, weights 3,4,2 <= 6, x binary; optimum 20
+        let mut lp = Lp::new(3);
+        for (j, v) in [10.0, 13.0, 7.0].iter().enumerate() {
+            lp.set_obj(j, -v);
+            lp.bound_le(j, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        lp
+    }
+
+    #[test]
+    fn warm_start_preserves_optimum_and_prunes() {
+        let lp = knapsack_lp();
+        let ints = [0usize, 1, 2];
+        let cold = solve(&lp, &ints, &MilpOptions::default());
+        let MilpResult::Solved { objective: cold_obj, nodes: cold_nodes, .. } =
+            cold
+        else {
+            panic!("cold solve failed");
+        };
+        let opts = MilpOptions {
+            warm_start: Some(vec![0.0, 1.0, 1.0]), // the optimum itself
+            ..Default::default()
+        };
+        let warm = solve(&lp, &ints, &opts);
+        let MilpResult::Solved { objective, nodes, proved_optimal, .. } = warm
+        else {
+            panic!("warm solve failed");
+        };
+        assert_close(objective, cold_obj);
+        assert!(proved_optimal);
+        assert!(nodes <= cold_nodes,
+                "warm explored {nodes} nodes vs cold {cold_nodes}");
+    }
+
+    #[test]
+    fn suboptimal_warm_start_still_finds_optimum() {
+        let lp = knapsack_lp();
+        let opts = MilpOptions {
+            warm_start: Some(vec![1.0, 0.0, 1.0]), // feasible, value 17
+            ..Default::default()
+        };
+        let res = solve(&lp, &[0, 1, 2], &opts);
+        let (x, obj) = res.solution().expect("solved");
+        assert_close(obj, -20.0);
+        assert_close(x[1], 1.0);
+        assert_close(x[2], 1.0);
+    }
+
+    #[test]
+    fn infeasible_warm_start_is_ignored() {
+        let lp = knapsack_lp();
+        let opts = MilpOptions {
+            warm_start: Some(vec![1.0, 1.0, 1.0]), // weight 9 > 6
+            ..Default::default()
+        };
+        let res = solve(&lp, &[0, 1, 2], &opts);
+        let (_, obj) = res.solution().expect("solved");
+        assert_close(obj, -20.0);
     }
 
     #[test]

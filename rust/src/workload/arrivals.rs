@@ -1,0 +1,238 @@
+//! Arrival-trace model for the online (streaming) setting: multi-jobs —
+//! whole HPO grids — arrive over virtual time from multiple tenants, and
+//! each job carries a latent validation score that drives ASHA-style
+//! early-stopping departures at rung boundaries (DESIGN.md §Online).
+//!
+//! Everything is generated from a seeded [`Rng`], so a trace replays to a
+//! bit-identical event sequence: `saturn online --seed 42` twice yields
+//! the same schedule.
+
+use crate::models::{DatasetSpec, ModelSpec};
+use crate::util::rng::Rng;
+use crate::workload::{grid, Job, TABLE1_LRS};
+
+/// One streaming job: a grid point plus its arrival metadata. The batch
+/// setting is the degenerate trace where every job arrives at t=0.
+#[derive(Debug, Clone)]
+pub struct OnlineJob {
+    pub job: Job,
+    pub arrival_s: f64,
+    /// Multi-job (HPO grid) this job belongs to; rung kills rank in-group.
+    pub group: usize,
+    /// Tenant priority weight (>= 1.0; higher launches first).
+    pub priority: f64,
+    /// Optional completion deadline, seconds after arrival.
+    pub deadline_s: Option<f64>,
+    /// Latent validation score (higher = better): the quality signal an
+    /// early-stopping rule would read off the real loss curves.
+    pub score: f64,
+}
+
+impl OnlineJob {
+    /// Wrap a batch job: arrives at t=0, neutral priority, no deadline.
+    pub fn batch(job: &Job) -> OnlineJob {
+        OnlineJob {
+            job: job.clone(),
+            arrival_s: 0.0,
+            group: 0,
+            priority: 1.0,
+            deadline_s: None,
+            score: 0.0,
+        }
+    }
+}
+
+/// How multi-job arrival instants are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps.
+    Poisson { rate_per_hour: f64 },
+    /// Bursty arrivals: Poisson burst instants at `rate_per_hour`, each
+    /// burst dropping `burst_size` multi-jobs back to back (the "Monday
+    /// morning" pattern that stresses elastic re-optimization).
+    Burst { rate_per_hour: f64, burst_size: usize },
+}
+
+/// Knobs of the streaming scenario family (see README §Online knobs).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Number of multi-jobs (HPO grids) in the trace.
+    pub multijobs: usize,
+    pub process: ArrivalProcess,
+    /// Learning rates per grid (<= TABLE1_LRS.len()).
+    pub grid_lrs: usize,
+    /// Batch sizes per grid (<= 2: {16, 32}).
+    pub grid_batches: usize,
+    pub epochs: u32,
+    /// Tenant classes; tenant `k` gets priority weight `k + 1`.
+    pub tenants: usize,
+    /// Completion deadline granted to every job, seconds after arrival.
+    pub deadline_slack_s: Option<f64>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0,
+            multijobs: 4,
+            process: ArrivalProcess::Poisson { rate_per_hour: 2.0 },
+            grid_lrs: 2,
+            grid_batches: 2,
+            epochs: 1,
+            tenants: 2,
+            deadline_slack_s: None,
+        }
+    }
+}
+
+/// A generated stream of multi-jobs, ready for `sim::simulate_online`.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub jobs: Vec<OnlineJob>,
+    /// Number of multi-jobs (groups).
+    pub groups: usize,
+    /// Last arrival instant.
+    pub horizon_s: f64,
+}
+
+/// Generate a deterministic arrival trace. Job ids are dense (0..n) in
+/// arrival order, as the simulator requires.
+pub fn generate_trace(cfg: &TraceConfig) -> Trace {
+    let mut rng = Rng::new(cfg.seed);
+    let models = [ModelSpec::resnet200(), ModelSpec::gpt2_xl(),
+                  ModelSpec::vit_g(), ModelSpec::gpt_j()];
+    let lrs = &TABLE1_LRS[..cfg.grid_lrs.clamp(1, TABLE1_LRS.len())];
+    let batches: &[u32] = match cfg.grid_batches.clamp(1, 2) {
+        1 => &[32],
+        _ => &[16, 32],
+    };
+
+    // arrival instants per multi-job
+    let mut arrivals = Vec::with_capacity(cfg.multijobs);
+    let mut t = 0.0f64;
+    match cfg.process {
+        ArrivalProcess::Poisson { rate_per_hour } => {
+            let rate = (rate_per_hour / 3600.0).max(1e-9);
+            for _ in 0..cfg.multijobs {
+                t += rng.exp(rate);
+                arrivals.push(t);
+            }
+        }
+        ArrivalProcess::Burst { rate_per_hour, burst_size } => {
+            let rate = (rate_per_hour / 3600.0).max(1e-9);
+            let burst = burst_size.max(1);
+            while arrivals.len() < cfg.multijobs {
+                t += rng.exp(rate);
+                for _ in 0..burst {
+                    if arrivals.len() < cfg.multijobs {
+                        arrivals.push(t);
+                    }
+                }
+            }
+        }
+    }
+
+    let mut jobs = Vec::new();
+    for (group, &arrival_s) in arrivals.iter().enumerate() {
+        let model = models[rng.usize(models.len())].clone();
+        let dataset = DatasetSpec {
+            name: format!("stream{group}"),
+            samples: 1024 + rng.range(0, 4096) as u64,
+        };
+        let tenant = rng.usize(cfg.tenants.max(1));
+        let priority = 1.0 + tenant as f64;
+        let mut grid_jobs = grid(&[model], &dataset, lrs, batches, cfg.epochs);
+        for j in grid_jobs.iter_mut() {
+            let id = jobs.len() + j.id;
+            j.name = format!("g{group}-{}", j.name);
+            j.id = id;
+        }
+        for j in grid_jobs {
+            jobs.push(OnlineJob {
+                job: j,
+                arrival_s,
+                group,
+                priority,
+                deadline_s: cfg.deadline_slack_s,
+                score: rng.f64(),
+            });
+        }
+    }
+    Trace { jobs, groups: arrivals.len(), horizon_s: t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_seed_deterministic() {
+        let cfg = TraceConfig { seed: 42, multijobs: 5, ..Default::default() };
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.job.name, y.job.name);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.score, y.score);
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = generate_trace(&TraceConfig { seed: 43, ..cfg });
+        assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| {
+            x.arrival_s != y.arrival_s || x.score != y.score
+        }));
+    }
+
+    #[test]
+    fn ids_are_dense_and_groups_sized() {
+        let cfg = TraceConfig { seed: 7, multijobs: 3, grid_lrs: 2,
+                                grid_batches: 2, ..Default::default() };
+        let t = generate_trace(&cfg);
+        assert_eq!(t.groups, 3);
+        assert_eq!(t.jobs.len(), 3 * 4); // 2 lrs x 2 batches per grid
+        for (i, oj) in t.jobs.iter().enumerate() {
+            assert_eq!(oj.job.id, i);
+            assert!(oj.group < 3);
+            assert!((0.0..1.0).contains(&oj.score));
+            assert!(oj.priority >= 1.0);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_jobs_share_group_arrival() {
+        let t = generate_trace(&TraceConfig { seed: 1, multijobs: 6,
+                                              ..Default::default() });
+        let mut last = 0.0;
+        for oj in &t.jobs {
+            assert!(oj.arrival_s >= last - 1e-12);
+            last = last.max(oj.arrival_s);
+        }
+        assert!(t.horizon_s >= last - 1e-9);
+    }
+
+    #[test]
+    fn burst_process_clusters_arrivals() {
+        let t = generate_trace(&TraceConfig {
+            seed: 3,
+            multijobs: 6,
+            process: ArrivalProcess::Burst { rate_per_hour: 1.0, burst_size: 3 },
+            ..Default::default()
+        });
+        // 6 multijobs in bursts of 3 -> exactly 2 distinct arrival instants
+        let mut instants: Vec<f64> =
+            t.jobs.iter().map(|j| j.arrival_s).collect();
+        instants.dedup();
+        assert_eq!(instants.len(), 2, "{instants:?}");
+    }
+
+    #[test]
+    fn batch_wrapper_is_neutral() {
+        let jobs = crate::workload::toy_workload(3);
+        let oj = OnlineJob::batch(&jobs[1]);
+        assert_eq!(oj.arrival_s, 0.0);
+        assert_eq!(oj.priority, 1.0);
+        assert!(oj.deadline_s.is_none());
+        assert_eq!(oj.job.id, 1);
+    }
+}

@@ -5,6 +5,11 @@
 //! {GPT-2, GPT-J} x LR {1e-5,1e-4,1e-3} x batch {16,32} on WikiText-2 and
 //! {ViT-G, ResNet-200} x same LRs x batch {64,128} on ImageNet, 10 epochs.
 
+pub mod arrivals;
+
+pub use arrivals::{generate_trace, ArrivalProcess, OnlineJob, Trace,
+                   TraceConfig};
+
 use crate::models::{DatasetSpec, ModelSpec};
 
 /// One fine-tuning job in a multi-job (a point of the HPO grid).

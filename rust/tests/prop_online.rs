@@ -1,0 +1,277 @@
+//! Property-based invariants for the online scheduling subsystem and the
+//! solver's schedule-level guarantees, via the in-repo `util::prop`
+//! framework:
+//!
+//!  * a returned plan never exceeds cluster GPU capacity at any event
+//!    time (independent list-schedule replay with explicit accounting);
+//!  * makespan >= max(longest-job, total-area/G) — the LP lower bounds;
+//!  * online runs: every job departs exactly once, peak GPU usage stays
+//!    within the fleet, JCTs respect physical floors, and replays are
+//!    deterministic.
+
+use saturn::cluster::ClusterSpec;
+use saturn::online::{profile_trace, run_trace, ONLINE_SYSTEMS};
+use saturn::parallelism::default_library;
+use saturn::saturn::plan::JobPlan;
+use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::sim::engine::RungConfig;
+use saturn::sim::placement::FreeState;
+use saturn::trials::profile_analytic;
+use saturn::util::prop::{forall, Strategy};
+use saturn::util::rng::Rng;
+use saturn::workload::{generate_trace, toy_workload, ArrivalProcess,
+                       TraceConfig};
+
+// ---------------------------------------------------------------------------
+// solver: capacity at every event time + LP lower bounds
+// ---------------------------------------------------------------------------
+
+/// Independent replay of a plan's list schedule with explicit GPU
+/// accounting; errors on any oversubscription, returns the realized
+/// makespan.
+fn replay_list_schedule(choices: &[JobPlan], cluster: &ClusterSpec)
+    -> Result<f64, String> {
+    let total = cluster.total_gpus();
+    let mut free = FreeState::new(cluster);
+    let mut running: Vec<(f64, Vec<(usize, u32)>, u32)> = Vec::new();
+    let mut pending: Vec<&JobPlan> = choices.iter().collect();
+    pending.sort_by(|a, b| b.runtime_s.partial_cmp(&a.runtime_s).unwrap());
+    let mut now = 0.0f64;
+    let mut makespan = 0.0f64;
+    let mut in_use = 0u32;
+    let mut overflow = false;
+    while !pending.is_empty() || !running.is_empty() {
+        pending.retain(|p| {
+            if let Some(pl) = free.place(p.gpus) {
+                in_use += p.gpus;
+                if in_use > total {
+                    overflow = true;
+                }
+                let fin = now + p.runtime_s;
+                makespan = makespan.max(fin);
+                running.push((fin, pl, p.gpus));
+                false
+            } else {
+                true
+            }
+        });
+        if overflow {
+            return Err(format!("{in_use} GPUs in use at t={now} (> {total})"));
+        }
+        if running.is_empty() {
+            return Err(format!("{} jobs can never be placed", pending.len()));
+        }
+        let (i, _) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        let (fin, pl, g) = running.swap_remove(i);
+        now = fin;
+        in_use -= g;
+        free.release(&pl);
+    }
+    Ok(makespan)
+}
+
+/// Random (n_jobs, nodes) instances.
+struct RandomInstance;
+
+impl Strategy for RandomInstance {
+    type Value = (i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (rng.range(1, 11), rng.range(1, 3))
+    }
+}
+
+#[test]
+fn prop_plan_respects_capacity_at_every_event_time() {
+    forall(52, 12, &RandomInstance, |&(n, nodes)| {
+        let jobs = toy_workload(n as usize);
+        let cluster = ClusterSpec::p4d(nodes as u32);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let remaining: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        for mode in [SolverMode::Joint, SolverMode::Heuristic] {
+            let (plan, _) = solve_joint(&remaining, &profiles, &cluster, mode);
+            let realized = replay_list_schedule(&plan.choices, &cluster)?;
+            // the realized schedule is what the plan predicted
+            if (realized - plan.predicted_makespan_s).abs()
+                > 1e-6 * plan.predicted_makespan_s.max(1.0) {
+                return Err(format!(
+                    "replay {realized} != predicted {}",
+                    plan.predicted_makespan_s));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_dominates_lp_lower_bounds() {
+    forall(53, 12, &RandomInstance, |&(n, nodes)| {
+        let jobs = toy_workload(n as usize);
+        let cluster = ClusterSpec::p4d(nodes as u32);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let remaining: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let g_total = cluster.total_gpus() as f64;
+        for mode in [SolverMode::Joint, SolverMode::Heuristic] {
+            let (plan, _) = solve_joint(&remaining, &profiles, &cluster, mode);
+            let longest = plan
+                .choices
+                .iter()
+                .map(|p| p.runtime_s)
+                .fold(0.0f64, f64::max);
+            let area: f64 =
+                plan.choices.iter().map(|p| p.gpus as f64 * p.runtime_s).sum();
+            let bound = longest.max(area / g_total);
+            if plan.predicted_makespan_s < bound - 1e-6 * bound.max(1.0) {
+                return Err(format!(
+                    "makespan {} below LP bound {bound}",
+                    plan.predicted_makespan_s));
+            }
+            if plan.lower_bound_s > plan.predicted_makespan_s + 1e-6 {
+                return Err("reported lower bound exceeds makespan".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// online runs: conservation, capacity, JCT floors, determinism
+// ---------------------------------------------------------------------------
+
+/// Random streaming scenarios: (seed, multijobs, bursty).
+struct RandomTrace;
+
+impl Strategy for RandomTrace {
+    type Value = (i64, i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (rng.range(0, 1000), rng.range(1, 4), rng.range(0, 2))
+    }
+}
+
+fn build_trace(seed: i64, multijobs: i64, bursty: i64)
+    -> saturn::workload::Trace {
+    generate_trace(&TraceConfig {
+        seed: seed as u64,
+        multijobs: multijobs as usize,
+        process: if bursty == 1 {
+            ArrivalProcess::Burst { rate_per_hour: 1.5, burst_size: 2 }
+        } else {
+            ArrivalProcess::Poisson { rate_per_hour: 3.0 }
+        },
+        grid_lrs: 2,
+        grid_batches: 1,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: None,
+    })
+}
+
+#[test]
+fn prop_online_every_job_departs_exactly_once_within_capacity() {
+    forall(54, 8, &RandomTrace, |&(seed, mj, bursty)| {
+        let trace = build_trace(seed, mj, bursty);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        for sys in ONLINE_SYSTEMS {
+            let (r, m) = run_trace(&trace, Some(&rungs), &profiles, &cluster,
+                                   sys, SolverMode::Joint);
+            let mut ids: Vec<usize> =
+                r.finish_times.iter().map(|&(id, _)| id).collect();
+            ids.sort();
+            if ids != (0..trace.jobs.len()).collect::<Vec<_>>() {
+                return Err(format!("{sys}: departures {ids:?}"));
+            }
+            if m.completed + m.early_stopped != trace.jobs.len() {
+                return Err(format!("{sys}: job conservation violated"));
+            }
+            if r.peak_gpus > cluster.total_gpus() {
+                return Err(format!("{sys}: peak {} > fleet", r.peak_gpus));
+            }
+            if r.gpu_utilization > 1.0 + 1e-9 {
+                return Err(format!("{sys}: utilization {}",
+                                   r.gpu_utilization));
+            }
+            // no departure precedes its own arrival
+            for &(id, fin) in &r.finish_times {
+                if fin + 1e-9 < trace.jobs[id].arrival_s {
+                    return Err(format!("{sys}: job {id} departed pre-arrival"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_jct_and_makespan_respect_physical_floors() {
+    forall(55, 6, &RandomTrace, |&(seed, mj, bursty)| {
+        let trace = build_trace(seed, mj, bursty);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let g_total = cluster.total_gpus() as f64;
+        // no early stopping here: every job runs to completion, so the
+        // classic LP bounds apply to the realized online schedule
+        let (r, _) = run_trace(&trace, None, &profiles, &cluster,
+                               "online-current-practice", SolverMode::Joint);
+        let mut min_area_total = 0.0f64;
+        let mut arrival_floor = 0.0f64;
+        for oj in &trace.jobs {
+            let plans = profiles.pareto_plans(oj.job.id);
+            let steps = oj.job.total_steps() as f64;
+            let fastest = plans
+                .iter()
+                .map(|&(_, _, t)| t * steps)
+                .fold(f64::INFINITY, f64::min);
+            let min_area = plans
+                .iter()
+                .map(|&(_, g, t)| g as f64 * t * steps)
+                .fold(f64::INFINITY, f64::min);
+            min_area_total += min_area;
+            arrival_floor = arrival_floor.max(oj.arrival_s + fastest);
+            let jct = r.jct_s[oj.job.id].1;
+            if jct < fastest * 0.999 {
+                return Err(format!(
+                    "job {} JCT {jct} below fastest runtime {fastest}",
+                    oj.job.id));
+            }
+        }
+        let bound = arrival_floor.max(min_area_total / g_total);
+        if r.makespan_s < bound * 0.999 {
+            return Err(format!(
+                "makespan {} below physical floor {bound}", r.makespan_s));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_saturn_replay_is_deterministic() {
+    forall(56, 5, &RandomTrace, |&(seed, mj, bursty)| {
+        let trace = build_trace(seed, mj, bursty);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        let run = || {
+            run_trace(&trace, Some(&rungs), &profiles, &cluster,
+                      "online-saturn", SolverMode::Joint)
+                .0
+        };
+        let (a, b) = (run(), run());
+        if a.finish_times != b.finish_times || a.jct_s != b.jct_s
+            || a.early_stopped != b.early_stopped
+            || a.launches != b.launches {
+            return Err("online-saturn replay diverged".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,210 @@
+//! Offline in-repo substitute for the `anyhow` crate (the build farm has
+//! no crates.io access — see DESIGN.md §2). Implements the subset the
+//! repo uses: `Result`/`Error`, the `anyhow!`/`bail!` macros, and the
+//! `Context` extension trait, with `{:#}` printing the full cause chain.
+//!
+//! The cause chain is stored as rendered strings (outermost message plus
+//! causes from outer to inner), which keeps `Error: Send + Sync` for free
+//! and avoids trait-object juggling; nothing in this repo downcasts.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A rendered error chain: `msg` is the outermost context, `causes` the
+/// remaining chain from outer to inner.
+pub struct Error {
+    msg: String,
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), causes: Vec::new() }
+    }
+
+    /// Construct from a standard error, capturing its source chain.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut causes = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = error.source();
+        while let Some(s) = cur {
+            causes.push(s.to_string());
+            cur = s.source();
+        }
+        Error { msg: error.to_string(), causes }
+    }
+
+    /// Wrap this error in one more layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        let inner = std::mem::replace(&mut self.msg, context.to_string());
+        self.causes.insert(0, inner);
+        self
+    }
+
+    /// The cause chain from outermost message inward (diagnostics).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str())
+            .chain(self.causes.iter().map(|s| s.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for c in &self.causes {
+            write!(f, "\n\nCaused by:\n    {c}")?;
+        }
+        Ok(())
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what keeps the blanket `From` below coherent (same trick as real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Sealed conversion helper so `Context` works both on standard errors
+    /// and on `anyhow::Result` itself (mirrors anyhow's `ext::StdError`).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// `Result` extension adding human context to the error chain.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| ext::IntoError::into_error(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::IntoError::into_error(e).context(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let r: Result<()> = Err(anyhow!("base {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: base 7");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn bail_and_with_context() {
+        fn f(trigger: bool) -> Result<u32> {
+            if trigger {
+                bail!("tripped at {}", 42);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        let e = f(true).with_context(|| "calling f").unwrap_err();
+        assert_eq!(format!("{e:#}"), "calling f: tripped at 42");
+    }
+}

@@ -1,0 +1,192 @@
+//! Offline in-repo substitute for the `log` facade crate (the build farm
+//! has no crates.io access — see DESIGN.md §2). Implements the subset the
+//! repo uses: the five level macros, `Log`/`Record`/`Metadata`, and the
+//! global `set_logger`/`set_max_level` plumbing.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+#[derive(Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> fmt::Arguments<'a> {
+        self.args
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: filter by the global level and dispatch to the logger.
+#[doc(hidden)]
+pub fn __log<'a>(level: Level, target: &'a str, args: fmt::Arguments<'a>) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+
+        fn log(&self, record: &Record) {
+            let line = format!("[{:?} {}] {}", record.level(),
+                               record.target(), record.args());
+            assert!(line.contains("log"));
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_filter_and_dispatch() {
+        static C: Counter = Counter;
+        let _ = set_logger(&C);
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered {}", 2);
+        let hits = HITS.load(Ordering::Relaxed);
+        assert!(hits >= 1, "info! did not reach the logger");
+        error!("also logged");
+        assert!(HITS.load(Ordering::Relaxed) > hits);
+    }
+}

@@ -1,0 +1,200 @@
+//! API-compatible stub of the PJRT-backed `xla` bindings used by
+//! `saturn::runtime` (the build farm has no crates.io access and no PJRT
+//! plugin — see DESIGN.md §2 and §7).
+//!
+//! Host-side `Literal` containers are fully functional (construct,
+//! reshape, read back), so checkpoint and data-path code round-trips.
+//! Everything that would need a real PJRT client (`PjRtClient::cpu`,
+//! compilation, execution) returns an "unavailable" error; runtime tests
+//! detect this and skip. Swap this crate for the real bindings in
+//! `rust/Cargo.toml` to run the AOT artifacts.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error {
+        msg: "PJRT backend unavailable: built against the in-repo xla stub \
+              (rust/vendor/xla); point rust/Cargo.toml at the real PJRT \
+              bindings and run `make artifacts` to execute HLO"
+            .to_string(),
+    }
+}
+
+/// Elements a `Literal` can hold. Values are stored widened to f64; the
+/// repo only round-trips f32/i32 host buffers, where this is lossless.
+pub trait NativeType: Copy + 'static {
+    fn to_f64(self) -> f64;
+    fn from_f64(x: f64) -> Self;
+}
+
+macro_rules! native {
+    ($($t:ty),*) => {
+        $(impl NativeType for $t {
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+
+            fn from_f64(x: f64) -> Self {
+                x as Self
+            }
+        })*
+    };
+}
+
+native!(f32, f64, i8, i16, i32, i64, u8, u16, u32, u64);
+
+/// Host-side tensor of widened elements + dims (stub, but functional).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: vec![v.to_f64()], dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            data: v.iter().map(|x| x.to_f64()).collect(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error {
+                msg: format!("reshape {:?} -> {dims:?}: element count mismatch",
+                             self.dims),
+            });
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.data
+            .first()
+            .map(|&x| T::from_f64(x))
+            .ok_or_else(|| Error { msg: "empty literal".to_string() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        let _ = proto;
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation)
+        -> Result<PjRtLoadedExecutable> {
+        let _ = computation;
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(&self, args: &[L])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.5f32, -2.0, 3.25]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, -2.0, 3.25]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.5);
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0i32; 12]);
+        assert!(l.reshape(&[3, 4]).is_ok());
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
