@@ -54,7 +54,9 @@ fn main() {
             lp
         })
         .collect();
-    let stats = bencher.run_fn("simplex x50 (12 vars, 22 rows)", || {
+    // 10 rows + 12 first-class variable bounds (bounds are not rows
+    // since the revised-simplex rebuild)
+    let stats = bencher.run_fn("simplex x50 (12 vars, 10 rows)", || {
         for lp in &problems {
             std::hint::black_box(saturn::solver::lp::solve(lp));
         }

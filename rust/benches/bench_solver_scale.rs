@@ -1,56 +1,189 @@
-//! Bench E9: solver scalability — MILP (Joint) vs greedy Heuristic as the
-//! multi-job grows. Supports the paper's premise that solving is cheap
-//! enough to re-run under introspection.
+//! Bench E9: solver scalability — the rebuilt MILP (bounded-variable
+//! revised simplex + warm-basis branch-and-bound) vs the greedy
+//! heuristic AND vs the preserved seed solver (dense tableau, bounds as
+//! rows, cold node solves), plus the rolling-horizon scale-out to 256
+//! concurrent jobs. Supports the paper's premise that the joint solve is
+//! cheap enough to re-run on every introspection/arrival event.
+//!
+//! Emits a machine-readable perf record to `BENCH_solver_scale.json`
+//! (override with `SATURN_BENCH_OUT`).
 //!
 //! Run: `cargo bench --bench bench_solver_scale`
 
-use saturn::bench::{print_header, Bencher};
+use saturn::bench::{fmt_s, print_header, print_stats, Bencher};
 use saturn::cluster::ClusterSpec;
 use saturn::parallelism::default_library;
-use saturn::saturn::solver::{solve_joint, SolverMode};
-use saturn::trials::profile_analytic;
+use saturn::saturn::solver::{plan_selection_probe, solve_joint,
+                             SolverMode, SolverStats};
+use saturn::solver::milp::MilpEngine;
+use saturn::trials::{profile_analytic, ProfileTable};
+use saturn::util::json::Json;
 use saturn::workload::toy_workload;
+
+fn remaining(jobs: &[saturn::workload::Job]) -> Vec<(usize, u64)> {
+    jobs.iter().map(|j| (j.id, j.total_steps())).collect()
+}
+
+fn setup(n: usize, cluster: &ClusterSpec)
+    -> (Vec<(usize, u64)>, ProfileTable) {
+    let jobs = toy_workload(n);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, cluster);
+    (remaining(&jobs), profiles)
+}
 
 fn main() {
     let bencher = Bencher::from_env();
     let cluster = ClusterSpec::p4d(2);
-    let lib = default_library();
+    let fast = std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1");
 
     print_header("joint MILP vs greedy heuristic (solve wall time)");
+    let mut sizes_json: Vec<Json> = Vec::new();
     for n in [4usize, 8, 12, 24, 48] {
-        let jobs = toy_workload(n);
-        let profiles = profile_analytic(&jobs, &lib, &cluster);
-        let remaining: Vec<(usize, u64)> =
-            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (remaining, profiles) = setup(n, &cluster);
 
         let mut quality = (0.0, 0.0);
+        let mut last_stats = SolverStats::default();
         let s = bencher.run_fn(&format!("joint/jobs={n}"), || {
-            let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
-                                        SolverMode::Joint);
+            let (plan, st) = solve_joint(&remaining, &profiles, &cluster,
+                                         SolverMode::Joint);
             quality.0 = plan.predicted_makespan_s;
+            last_stats = st;
         });
         saturn::bench::print_stats(&s);
+        let joint_wall = s.mean_s;
         let s = bencher.run_fn(&format!("greedy/jobs={n}"), || {
             let (plan, _) = solve_joint(&remaining, &profiles, &cluster,
                                         SolverMode::Heuristic);
             quality.1 = plan.predicted_makespan_s;
         });
         saturn::bench::print_stats(&s);
-        println!("{:<44} joint {:.0}s vs greedy {:.0}s ({:+.1}%)",
+        println!("{:<44} joint {:.0}s vs greedy {:.0}s ({:+.1}%)  \
+                  [{} nodes, {} pivots, warm {:.0}%]",
                  format!("  plan quality/jobs={n}"), quality.0, quality.1,
-                 100.0 * (quality.1 - quality.0) / quality.0.max(1e-9));
+                 100.0 * (quality.1 - quality.0) / quality.0.max(1e-9),
+                 last_stats.milp_nodes, last_stats.lp_pivots,
+                 100.0 * last_stats.warm_hit_rate());
+        sizes_json.push(Json::obj(vec![
+            ("jobs", Json::num(n as f64)),
+            ("joint_wall_s", Json::num(joint_wall)),
+            ("greedy_wall_s", Json::num(s.mean_s)),
+            ("joint_makespan_s", Json::num(quality.0)),
+            ("greedy_makespan_s", Json::num(quality.1)),
+            ("milp_nodes", Json::num(last_stats.milp_nodes as f64)),
+            ("lp_pivots", Json::num(last_stats.lp_pivots as f64)),
+            ("warm_hit_rate", Json::num(last_stats.warm_hit_rate())),
+        ]));
+    }
+
+    // ------------------------------------------------------------------
+    // seed engine vs revised engine at matched (1e-6) objectives
+    // ------------------------------------------------------------------
+    print_header("revised vs SEED dense engine (plan-selection MILP, n=48)");
+    let seed_n = 48usize;
+    let (remaining48, profiles48) = setup(seed_n, &cluster);
+    let reps = if fast { 1 } else { 3 };
+    let mut revised_wall = f64::INFINITY;
+    let mut seed_wall = f64::INFINITY;
+    let mut revised_obj = 0.0;
+    let mut seed_obj = 0.0;
+    for _ in 0..reps {
+        let (obj, st) = plan_selection_probe(&remaining48, &profiles48,
+                                             &cluster, MilpEngine::Revised)
+            .expect("revised probe solved");
+        revised_obj = obj;
+        revised_wall = revised_wall.min(st.wall_s);
+        let (obj, st) = plan_selection_probe(&remaining48, &profiles48,
+                                             &cluster,
+                                             MilpEngine::DenseReference)
+            .expect("seed probe solved");
+        seed_obj = obj;
+        seed_wall = seed_wall.min(st.wall_s);
+    }
+    let speedup = seed_wall / revised_wall.max(1e-12);
+    let obj_delta = (revised_obj - seed_obj).abs()
+        / seed_obj.abs().max(1.0);
+    println!("{:<44} {:>10}", "seed dense engine", fmt_s(seed_wall));
+    println!("{:<44} {:>10}", "revised engine", fmt_s(revised_wall));
+    println!("revised speedup over seed: {speedup:.1}x wall \
+              (objective {revised_obj:.3}s vs {seed_obj:.3}s, \
+              rel delta {obj_delta:.2e})");
+    assert!(obj_delta <= 1e-6,
+            "engines disagree on the optimum: {revised_obj} vs {seed_obj}");
+
+    // ------------------------------------------------------------------
+    // rolling-horizon scale-out
+    // ------------------------------------------------------------------
+    print_header("rolling-horizon joint solve (window 32 / overlap 8)");
+    let big_cluster = ClusterSpec::p4d(8);
+    let mut rolling_json: Vec<Json> = Vec::new();
+    for n in [96usize, 192, 256] {
+        let (remaining, profiles) = setup(n, &big_cluster);
+        let mut quality = (0.0, 0.0);
+        let mut last_stats = SolverStats::default();
+        let s = bencher.run_fn(&format!("rolling/jobs={n}"), || {
+            let (plan, st) = solve_joint(&remaining, &profiles, &big_cluster,
+                                         SolverMode::rolling_default());
+            quality.0 = plan.predicted_makespan_s;
+            last_stats = st;
+        });
+        print_stats(&s);
+        let rolling_wall = s.mean_s;
+        let s = bencher.run_fn(&format!("greedy/jobs={n}"), || {
+            let (plan, _) = solve_joint(&remaining, &profiles, &big_cluster,
+                                        SolverMode::Heuristic);
+            quality.1 = plan.predicted_makespan_s;
+        });
+        print_stats(&s);
+        println!("{:<44} rolling {:.0}s vs greedy {:.0}s ({:+.1}%)  \
+                  [{} windows, {} nodes, warm {:.0}%]{}",
+                 format!("  plan quality/jobs={n}"), quality.0, quality.1,
+                 100.0 * (quality.1 - quality.0) / quality.0.max(1e-9),
+                 last_stats.windows, last_stats.milp_nodes,
+                 100.0 * last_stats.warm_hit_rate(),
+                 if rolling_wall < 1.0 { "" } else { "  ** >1s **" });
+        rolling_json.push(Json::obj(vec![
+            ("jobs", Json::num(n as f64)),
+            ("wall_s", Json::num(rolling_wall)),
+            ("greedy_wall_s", Json::num(s.mean_s)),
+            ("makespan_s", Json::num(quality.0)),
+            ("greedy_makespan_s", Json::num(quality.1)),
+            ("windows", Json::num(last_stats.windows as f64)),
+            ("milp_nodes", Json::num(last_stats.milp_nodes as f64)),
+            ("warm_hit_rate", Json::num(last_stats.warm_hit_rate())),
+            ("sub_second", Json::Bool(rolling_wall < 1.0)),
+        ]));
     }
 
     print_header("exact time-indexed MILP (small instances only)");
     for n in [3usize, 4] {
-        let jobs = toy_workload(n);
-        let profiles = profile_analytic(&jobs, &lib, &cluster);
-        let remaining: Vec<(usize, u64)> =
-            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (remaining, profiles) = setup(n, &cluster);
         let s = bencher.run_fn(&format!("exact-slots/jobs={n}"), || {
             let _ = solve_joint(&remaining, &profiles, &cluster,
                                 SolverMode::ExactSlots { slots: 6 });
         });
         saturn::bench::print_stats(&s);
     }
+
+    // machine-readable perf record
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_solver_scale.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("solver_scale")),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("rolling_gpus", Json::num(big_cluster.total_gpus() as f64)),
+        ("sizes", Json::arr(sizes_json.into_iter())),
+        ("rolling", Json::arr(rolling_json.into_iter())),
+        ("seed_comparison", Json::obj(vec![
+            ("jobs", Json::num(seed_n as f64)),
+            ("seed_wall_s", Json::num(seed_wall)),
+            ("revised_wall_s", Json::num(revised_wall)),
+            ("speedup", Json::num(speedup)),
+            ("seed_objective_s", Json::num(seed_obj)),
+            ("revised_objective_s", Json::num(revised_obj)),
+            ("objective_rel_delta", Json::num(obj_delta)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("\nwrote {out}");
 }

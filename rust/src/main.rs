@@ -38,11 +38,13 @@ fn main() -> Result<()> {
                       (reproduction)\n");
             println!("usage: saturn <command> [--flags]\n");
             println!("  table2    [--workload wikitext|imagenet|all] [--seed N]");
-            println!("  plan      [--workload ...] [--nodes N] [--mode joint|greedy]");
+            println!("  plan      [--workload ...] [--nodes N]");
+            println!("            [--mode joint|greedy|rolling]");
             println!("  online    [--seed N] [--multijobs N] [--rate-per-hour X]");
             println!("            [--burst N] [--tenants N] [--rungs 0.25,0.5]");
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
-            println!("            [--nodes N] [--mode joint|greedy] [--json PATH]");
+            println!("            [--nodes N] [--mode joint|greedy|rolling]");
+            println!("            [--json PATH]");
             println!("  workload  [--workload ...]");
             println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
             println!("  info");
@@ -71,6 +73,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let workload = args.str_or("workload", "wikitext");
     let mode = match args.str_or("mode", "joint").as_str() {
         "greedy" => SolverMode::Heuristic,
+        "rolling" => SolverMode::rolling_default(),
         _ => SolverMode::Joint,
     };
     let jobs = exp::workload_by_name(&workload);
@@ -90,8 +93,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     println!("\npredicted makespan: {:.2} h (lower bound {:.2} h)",
              plan.predicted_makespan_s / 3600.0, plan.lower_bound_s / 3600.0);
-    println!("solver: {:.1} ms, {} B&B nodes, optimal={}",
-             stats.wall_s * 1e3, stats.milp_nodes, stats.proved_optimal);
+    println!("solver: {:.1} ms, {} B&B nodes, {} pivots, warm-basis \
+              {:.0}%, {} window(s), optimal={}",
+             stats.wall_s * 1e3, stats.milp_nodes, stats.lp_pivots,
+             100.0 * stats.warm_hit_rate(), stats.windows.max(1),
+             stats.proved_optimal);
     Ok(())
 }
 
@@ -108,6 +114,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     let kill_fraction = args.f64_or("kill-fraction", 0.5);
     let mode = match args.str_or("mode", "joint").as_str() {
         "greedy" => SolverMode::Heuristic,
+        "rolling" => SolverMode::rolling_default(),
         _ => SolverMode::Joint,
     };
     let process = if burst > 0 {

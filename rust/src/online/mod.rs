@@ -45,6 +45,11 @@ pub struct OnlineMetrics {
     pub solves: Option<usize>,
     /// Warm-started re-solves among them (Saturn only).
     pub warm_solves: Option<usize>,
+    /// Fraction of branch-and-bound node LPs served from a parent basis
+    /// via dual simplex, across the run (Saturn only).
+    pub warm_hit_rate: Option<f64>,
+    /// Total simplex pivots across every re-solve (Saturn only).
+    pub lp_pivots: Option<usize>,
 }
 
 impl OnlineMetrics {
@@ -70,6 +75,14 @@ impl OnlineMetrics {
                 Some(s) => Json::num(s as f64),
                 None => Json::Null,
             }),
+            ("warm_hit_rate", match self.warm_hit_rate {
+                Some(r) => Json::num(r),
+                None => Json::Null,
+            }),
+            ("lp_pivots", match self.lp_pivots {
+                Some(p) => Json::num(p as f64),
+                None => Json::Null,
+            }),
         ])
     }
 }
@@ -88,25 +101,27 @@ pub fn run_trace(trace: &Trace, rungs: Option<&RungConfig>,
                  system: &str, mode: SolverMode)
     -> (OnlineSimResult, OnlineMetrics) {
     let cfg = SimConfig::default();
-    let (result, sys, solves, warm) = match system {
+    // Saturn-only diagnostics: (solves, warm solves, basis hit rate, pivots)
+    let (result, sys, solver_probe) = match system {
         "online-current-practice" => {
             let mut p = OnlineCurrentPractice;
             let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
                                     &mut p, &cfg);
-            (r, ONLINE_SYSTEMS[0], None, None)
+            (r, ONLINE_SYSTEMS[0], None)
         }
         "online-optimus" => {
             let mut p = OnlineOptimus::default();
             let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
                                     &mut p, &cfg);
-            (r, ONLINE_SYSTEMS[1], None, None)
+            (r, ONLINE_SYSTEMS[1], None)
         }
         "online-saturn" => {
             let mut p = OnlineSaturn::new(mode);
             let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
                                     &mut p, &cfg);
-            let (s, w) = (p.solves(), p.warm_solves());
-            (r, ONLINE_SYSTEMS[2], Some(s), Some(w))
+            let probe = (p.solves(), p.warm_solves(), p.warm_hit_rate(),
+                         p.total_stats.lp_pivots);
+            (r, ONLINE_SYSTEMS[2], Some(probe))
         }
         other => panic!("unknown online system '{other}' \
                          (online-current-practice|online-optimus|online-saturn)"),
@@ -136,8 +151,10 @@ pub fn run_trace(trace: &Trace, rungs: Option<&RungConfig>,
         preemptions: result.preemptions,
         migrations: result.migrations,
         decision_s: result.policy_decision_s,
-        solves,
-        warm_solves: warm,
+        solves: solver_probe.map(|p| p.0),
+        warm_solves: solver_probe.map(|p| p.1),
+        warm_hit_rate: solver_probe.map(|p| p.2),
+        lp_pivots: solver_probe.map(|p| p.3),
     };
     (result, metrics)
 }
@@ -256,5 +273,9 @@ mod tests {
         assert_eq!(parsed.get("system").unwrap().as_str(),
                    Some("online-saturn"));
         assert!(parsed.get("avg_jct_s").unwrap().as_f64().unwrap() > 0.0);
+        // the solver-stat plumbing: branch-and-bound warm-basis hit rate
+        // must be present and non-zero for the saturn system
+        assert!(parsed.get("warm_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(parsed.get("lp_pivots").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -27,10 +27,18 @@ pub struct OnlineSaturn {
     /// Warm-start re-solves from the previous plan (ablation knob; the
     /// bench compares warm vs cold on identical events).
     pub warm_start: bool,
+    /// When the unfinished set outgrows this many jobs, a `Joint` policy
+    /// transparently switches that re-solve to the rolling-horizon
+    /// decomposition (`SolverMode::rolling_default`) so event-rate
+    /// re-solving stays interactive at 100+ concurrent jobs.
+    pub rolling_threshold: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
     decision_s: f64,
     pub last_stats: SolverStats,
+    /// Accumulated solver work across every re-solve of the run
+    /// (nodes/pivots/warm-basis hit rate; wall_s sums solve time).
+    pub total_stats: SolverStats,
     solves: usize,
     warm_solves: usize,
 }
@@ -42,10 +50,12 @@ impl OnlineSaturn {
             introspect_every_s: Some(3600.0),
             migration_threshold: 0.15,
             warm_start: true,
+            rolling_threshold: 64,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
             decision_s: 0.0,
             last_stats: SolverStats::default(),
+            total_stats: SolverStats::default(),
             solves: 0,
             warm_solves: 0,
         }
@@ -64,6 +74,12 @@ impl OnlineSaturn {
     /// How many of those re-solves were seeded from the previous plan.
     pub fn warm_solves(&self) -> usize {
         self.warm_solves
+    }
+
+    /// Fraction of branch-and-bound node LPs served from a parent basis
+    /// via the dual simplex, across every re-solve of the run.
+    pub fn warm_hit_rate(&self) -> f64 {
+        self.total_stats.warm_hit_rate()
     }
 
     /// Launch pending jobs from the cached plan: tenant priority first,
@@ -124,14 +140,29 @@ impl Policy for OnlineSaturn {
         }
 
         let warm = if self.warm_start { self.cached.as_ref() } else { None };
+        // large unfinished sets decompose into rolling windows so the
+        // event-rate re-solve stays sub-second (ROADMAP: scale past ~100)
+        let mode = if self.mode == SolverMode::Joint
+            && remaining.len() > self.rolling_threshold
+        {
+            SolverMode::rolling_default()
+        } else {
+            self.mode
+        };
         let (mut plan, stats) = solve_joint_warm(&remaining, ctx.profiles,
-                                                 ctx.cluster, self.mode, 1.0,
+                                                 ctx.cluster, mode, 1.0,
                                                  warm);
         apply_migration_hysteresis(&mut plan, ctx, &remaining,
                                    self.migration_threshold);
         if stats.warm_used {
             self.warm_solves += 1;
         }
+        self.total_stats.milp_nodes += stats.milp_nodes;
+        self.total_stats.lp_pivots += stats.lp_pivots;
+        self.total_stats.warm_hits += stats.warm_hits;
+        self.total_stats.warm_misses += stats.warm_misses;
+        self.total_stats.windows += stats.windows;
+        self.total_stats.wall_s += stats.wall_s;
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;
@@ -201,6 +232,20 @@ mod tests {
         assert!(policy.solves() >= 2);
         assert_eq!(policy.warm_solves(), policy.solves() - 1,
                    "every re-solve after the first must be warm-started");
+    }
+
+    #[test]
+    fn online_resolves_report_warm_basis_hit_rate() {
+        let (trace, profiles, cluster) = setup(6, 4);
+        let mut policy = OnlineSaturn::paper_default();
+        let _ = simulate_online(&trace.jobs, Some(&RungConfig::halving()),
+                                &profiles, &cluster, &mut policy,
+                                &SimConfig::default());
+        assert!(policy.solves() >= 1);
+        assert!(policy.warm_hit_rate() > 0.0,
+                "online re-solves never reused a parent basis");
+        assert!(policy.total_stats.lp_pivots > 0);
+        assert!(policy.total_stats.milp_nodes > 0);
     }
 
     #[test]

@@ -34,8 +34,14 @@ use crate::cluster::ClusterSpec;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
 use crate::sim::placement::FreeState;
 use crate::solver::lp::{Cmp, Lp};
-use crate::solver::milp::{solve as milp_solve, MilpOptions, MilpResult};
+use crate::solver::milp::{solve as milp_solve, solve_with_stats,
+                          MilpEngine, MilpOptions, MilpResult};
 use crate::trials::ProfileTable;
+
+/// Above this many jobs the coordinate-descent schedule repair is skipped:
+/// each sweep re-simulates O(jobs x alternatives) list schedules, which
+/// dwarfs the MILP itself at rolling-horizon scale.
+const LOCAL_SEARCH_MAX_JOBS: usize = 48;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolverMode {
@@ -47,6 +53,20 @@ pub enum SolverMode {
     Heuristic,
     /// Time-indexed exact MILP; exponential, tests/small instances only.
     ExactSlots { slots: usize },
+    /// Rolling-horizon decomposition for 100+ concurrent jobs: order jobs
+    /// by dominance (longest min-GPU runtime first), solve the
+    /// plan-selection MILP over a `window`-job slice, commit everything
+    /// except the trailing `overlap` jobs, slide, repeat. Committed
+    /// windows feed the next solve as a makespan floor plus a GPU-area
+    /// offset, so the coupling the windows share is preserved.
+    RollingHorizon { window: usize, overlap: usize },
+}
+
+impl SolverMode {
+    /// The rolling default used when callers only know "lots of jobs".
+    pub fn rolling_default() -> SolverMode {
+        SolverMode::RollingHorizon { window: 32, overlap: 8 }
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -57,6 +77,34 @@ pub struct SolverStats {
     /// An incumbent seeded from a previous plan was handed to the MILP
     /// (online incremental re-solves; see `solve_joint_warm`).
     pub warm_used: bool,
+    /// Simplex pivots across every branch-and-bound node LP.
+    pub lp_pivots: usize,
+    /// Node LPs re-solved from the parent basis via dual simplex.
+    pub warm_hits: usize,
+    /// Node LPs that fell back to a cold two-phase solve.
+    pub warm_misses: usize,
+    /// Rolling-horizon windows solved (0 = single-shot formulation).
+    pub windows: usize,
+}
+
+impl SolverStats {
+    /// Fraction of node LPs served from a parent basis (dual-simplex
+    /// warm starts inside branch-and-bound).
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / total as f64
+        }
+    }
+
+    fn absorb(&mut self, st: &crate::solver::milp::MilpStats) {
+        self.milp_nodes += st.nodes;
+        self.lp_pivots += st.lp_pivots;
+        self.warm_hits += st.warm_hits;
+        self.warm_misses += st.warm_misses;
+    }
 }
 
 /// Inputs per unfinished job: (job_id, remaining_steps).
@@ -102,18 +150,7 @@ pub fn solve_joint_warm(
     let start = Instant::now();
     let kappa = lookahead.max(1.0);
     let mut stats = SolverStats::default();
-
-    let plans: Vec<(usize, Vec<(usize, u32, f64)>)> = jobs
-        .iter()
-        .map(|&(id, steps)| {
-            let ps = profiles
-                .pareto_plans(id)
-                .into_iter()
-                .map(|(tech, g, step)| (tech, g, step * steps as f64))
-                .collect::<Vec<_>>();
-            (id, ps)
-        })
-        .collect();
+    let plans = expand_plans(jobs, profiles);
 
     let choices = match mode {
         SolverMode::Heuristic => greedy_choice(&plans, cluster, kappa),
@@ -129,15 +166,95 @@ pub fn solve_joint_warm(
                 None => greedy_choice(&plans, cluster, kappa),
             }
         }
+        SolverMode::RollingHorizon { window, overlap } => {
+            match rolling_choice(&plans, cluster, kappa, warm, window,
+                                 overlap, &mut stats) {
+                Some(c) => c,
+                None => greedy_choice(&plans, cluster, kappa),
+            }
+        }
     };
 
     let mut plan = build_schedule(choices, cluster);
-    if kappa <= 1.0 + 1e-9 {
+    if kappa <= 1.0 + 1e-9 && plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS {
         // static plans: repair against the realized list schedule
         local_search(&mut plan, &plans, cluster);
     }
     stats.wall_s = start.elapsed().as_secs_f64();
     (plan, stats)
+}
+
+/// Per-job candidate plans (tech, gpus, total runtime) over the remaining
+/// steps — the search space every solver level shares.
+fn expand_plans(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+) -> Vec<(usize, Vec<(usize, u32, f64)>)> {
+    jobs.iter()
+        .map(|&(id, steps)| {
+            let ps = profiles
+                .pareto_plans(id)
+                .into_iter()
+                .map(|(tech, g, step)| (tech, g, step * steps as f64))
+                .collect::<Vec<_>>();
+            (id, ps)
+        })
+        .collect()
+}
+
+/// The SEED solver path, preserved verbatim for benchmarking: the dense
+/// tableau MILP (`MilpEngine::DenseReference` — bounds as rows, every
+/// node cold-solved from scratch) followed by the same list scheduling
+/// and local search. `bench_solver_scale` measures the revised path's
+/// speedup against this at matched plan quality; it is not meant for
+/// production use.
+pub fn solve_joint_reference(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+) -> (SaturnPlan, SolverStats) {
+    let start = Instant::now();
+    let mut stats = SolverStats::default();
+    let plans = expand_plans(jobs, profiles);
+    let g_total = cluster.total_gpus() as f64;
+    let choices = match plan_selection_with_engine(
+        &plans, g_total, 1.0, 0.0, 0.0, None, 20_000, 10.0, 0.01,
+        MilpEngine::DenseReference, &mut stats)
+    {
+        Some(c) => c,
+        None => greedy_choice(&plans, cluster, 1.0),
+    };
+    let mut plan = build_schedule(choices, cluster);
+    if plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS {
+        local_search(&mut plan, &plans, cluster);
+    }
+    stats.wall_s = start.elapsed().as_secs_f64();
+    (plan, stats)
+}
+
+/// Solve ONLY the level-1 plan-selection MILP (no list scheduling, no
+/// local search) with the chosen engine at a TIGHT 1e-6 gap, returning
+/// the proved objective `M`. Because both engines prove optimality, this
+/// is the apples-to-apples probe `bench_solver_scale` uses to show the
+/// revised engine's speedup at objective-identical results.
+pub fn plan_selection_probe(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    engine: MilpEngine,
+) -> Option<(f64, SolverStats)> {
+    let start = Instant::now();
+    let mut stats = SolverStats::default();
+    let plans = expand_plans(jobs, profiles);
+    let g_total = cluster.total_gpus() as f64;
+    let choices = plan_selection_with_engine(
+        &plans, g_total, 1.0, 0.0, 0.0, None, 200_000, 120.0, 1e-6,
+        engine, &mut stats)?;
+    let longest = choices.iter().map(|p| p.runtime_s).fold(0.0, f64::max);
+    let area: f64 =
+        choices.iter().map(|p| p.gpus as f64 * p.runtime_s).sum();
+    stats.wall_s = start.elapsed().as_secs_f64();
+    Some((longest.max(area / g_total), stats))
 }
 
 // ---------------------------------------------------------------------------
@@ -152,11 +269,51 @@ fn milp_choice(
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     let g_total = cluster.total_gpus() as f64;
+    plan_selection_milp(plans, g_total, kappa, 0.0, 0.0, warm,
+                        20_000, 10.0, stats)
+}
+
+/// The plan-selection MILP over one slice of jobs. `m_floor` and
+/// `fixed_area` carry the coupling from already-committed rolling-horizon
+/// windows: M may not undercut a committed job's runtime, and the GPU-area
+/// budget `G * M` is charged for committed work. Single-shot solves pass
+/// zeros. Returns one [`JobPlan`] per input job, in input order.
+#[allow(clippy::too_many_arguments)]
+fn plan_selection_milp(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    g_total: f64,
+    kappa: f64,
+    m_floor: f64,
+    fixed_area: f64,
+    warm: Option<&SaturnPlan>,
+    max_nodes: usize,
+    time_limit_s: f64,
+    stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
+    plan_selection_with_engine(plans, g_total, kappa, m_floor, fixed_area,
+                               warm, max_nodes, time_limit_s, 0.01,
+                               MilpEngine::Revised, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_selection_with_engine(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    g_total: f64,
+    kappa: f64,
+    m_floor: f64,
+    fixed_area: f64,
+    warm: Option<&SaturnPlan>,
+    max_nodes: usize,
+    time_limit_s: f64,
+    gap: f64,
+    engine: MilpEngine,
+    stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
     // variable layout: x_{j,c} ... , M (last)
     let mut var = 0usize;
     let mut index: Vec<Vec<usize>> = Vec::new();
     for (_, ps) in plans {
-        index.push((0..ps.len()).map(|c| { let v = var + c; v }).collect());
+        index.push((var..var + ps.len()).collect());
         var += ps.len();
     }
     let m_var = var;
@@ -164,6 +321,7 @@ fn milp_choice(
 
     let mut lp = Lp::new(n);
     lp.set_obj(m_var, 1.0);
+    lp.bound_ge(m_var, m_floor);
     // assignment + critical path per job
     for (ji, (_, ps)) in plans.iter().enumerate() {
         if ps.is_empty() {
@@ -179,7 +337,8 @@ fn milp_choice(
         cp.push((m_var, -1.0));
         lp.add(cp, Cmp::Le, 0.0);
     }
-    // area bound
+    // area bound, charged for work committed by earlier windows:
+    //   sum g t x - G M <= -fixed_area
     let mut area: Vec<(usize, f64)> = Vec::new();
     for (ji, (_, ps)) in plans.iter().enumerate() {
         for (c, p) in ps.iter().enumerate() {
@@ -187,8 +346,9 @@ fn milp_choice(
         }
     }
     area.push((m_var, -g_total));
-    lp.add(area, Cmp::Le, 0.0);
-    // binaries bounded by 1
+    lp.add(area, Cmp::Le, -fixed_area);
+    // binaries: first-class variable bounds, NOT rows — with the revised
+    // simplex this keeps the row count at 2*jobs + 1
     for vs in &index {
         for &v in vs {
             lp.bound_le(v, 1.0);
@@ -216,21 +376,31 @@ fn milp_choice(
             longest = longest.max(t / kappa);
             area_tot += g as f64 * t;
         }
-        x[m_var] = longest.max(area_tot / g_total);
+        x[m_var] = longest
+            .max((area_tot + fixed_area) / g_total)
+            .max(m_floor);
         x
     });
-    stats.warm_used = warm_x.is_some();
+    stats.warm_used = stats.warm_used || warm_x.is_some();
 
     let ints: Vec<usize> = index.iter().flatten().copied().collect();
+    // scope_map spawns scoped threads per node batch, so parallelism only
+    // pays once node LPs are ms-scale: big single-shot formulations.
+    // Rolling windows (<= ~230 vars, microsecond warm re-solves) would
+    // lose more to spawn/join than they gain — keep them serial.
+    let threads = if n >= 256 { 4 } else { 1 };
     let opts = MilpOptions {
-        gap: 0.01,
-        max_nodes: 20_000,
-        time_limit_s: 10.0,
+        gap,
+        max_nodes,
+        time_limit_s,
         warm_start: warm_x,
+        threads,
+        engine,
     };
-    match milp_solve(&lp, &ints, &opts) {
-        MilpResult::Solved { x, nodes, proved_optimal, .. } => {
-            stats.milp_nodes = nodes;
+    let (result, milp_stats) = solve_with_stats(&lp, &ints, &opts);
+    stats.absorb(&milp_stats);
+    match result {
+        MilpResult::Solved { x, proved_optimal, .. } => {
             stats.proved_optimal = proved_optimal;
             let mut out = Vec::new();
             for (ji, (id, ps)) in plans.iter().enumerate() {
@@ -244,6 +414,65 @@ fn milp_choice(
         }
         _ => None,
     }
+}
+
+/// Rolling-horizon decomposition: windows of `window` jobs over a
+/// dominance ordering (longest min-GPU runtime first), committing all but
+/// the trailing `overlap` jobs per solve. Each window re-optimizes the
+/// overlap jointly with the next slice, and inherits the committed
+/// makespan floor + GPU area, so window boundaries cannot starve or
+/// oversubscribe the cluster. Per-window MILPs get tight node/time
+/// budgets — the point is many small interactive solves, not one big one.
+fn rolling_choice(
+    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    cluster: &ClusterSpec,
+    kappa: f64,
+    warm: Option<&SaturnPlan>,
+    window: usize,
+    overlap: usize,
+    stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
+    let g_total = cluster.total_gpus() as f64;
+    let window = window.max(2);
+    let overlap = overlap.min(window - 1);
+    if plans.iter().any(|(_, ps)| ps.is_empty()) {
+        return None;
+    }
+    // dominance order: longest min-GPU runtime first (ties: job order, so
+    // replays are deterministic — sort_by is stable)
+    let mut order: Vec<usize> = (0..plans.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ta = plans[a].1.first().map(|p| p.2).unwrap_or(0.0);
+        let tb = plans[b].1.first().map(|p| p.2).unwrap_or(0.0);
+        tb.partial_cmp(&ta).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let mut chosen: Vec<Option<JobPlan>> = vec![None; plans.len()];
+    let mut fixed_area = 0.0f64;
+    let mut m_floor = 0.0f64;
+    let mut k = 0usize;
+    while k < order.len() {
+        let hi = (k + window).min(order.len());
+        let slice: Vec<(usize, Vec<(usize, u32, f64)>)> = order[k..hi]
+            .iter()
+            .map(|&ji| plans[ji].clone())
+            .collect();
+        let picks = plan_selection_milp(&slice, g_total, kappa, m_floor,
+                                        fixed_area, warm, 4_000, 2.0,
+                                        stats)?;
+        stats.windows += 1;
+        // commit everything except the overlap tail (the final window
+        // commits everything)
+        let commit = if hi == order.len() { hi - k } else { (hi - k).saturating_sub(overlap).max(1) };
+        for (offset, jp) in picks.into_iter().enumerate().take(commit) {
+            let ji = order[k + offset];
+            fixed_area += jp.gpus as f64 * jp.runtime_s;
+            m_floor = m_floor.max(jp.runtime_s / kappa);
+            chosen[ji] = Some(jp);
+        }
+        k += commit;
+    }
+    chosen.into_iter().collect()
 }
 
 /// Greedy: start every job at its smallest feasible plan, then spend the
@@ -370,7 +599,7 @@ fn exact_slot_choice(
         gap: 1e-3,
         max_nodes: 50_000,
         time_limit_s: 20.0,
-        warm_start: None,
+        ..Default::default()
     };
     match milp_solve(&lp, &ints, &opts) {
         MilpResult::Solved { x, nodes, proved_optimal, .. } => {
@@ -626,6 +855,108 @@ mod tests {
         assert!(stats.warm_used);
         assert_eq!(plan.choices.len(), rem.len() - 3);
         assert!(plan.predicted_makespan_s >= plan.lower_bound_s * 0.999);
+    }
+
+    #[test]
+    fn probe_engines_prove_identical_objectives() {
+        // the rebuilt solver must return objective-identical results to
+        // the seed dense path at a tight gap (tolerance 1e-6)
+        let jobs = toy_workload(8);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (a, _) = plan_selection_probe(&rem, &profiles, &cluster,
+                                          MilpEngine::Revised)
+            .expect("revised probe");
+        let (b, _) = plan_selection_probe(&rem, &profiles, &cluster,
+                                          MilpEngine::DenseReference)
+            .expect("reference probe");
+        assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                "revised {a} vs seed {b}");
+    }
+
+    #[test]
+    fn seed_reference_path_still_plans_every_job() {
+        let (jobs, profiles, cluster) = setup(1);
+        let (plan, stats) =
+            solve_joint_reference(&remaining(&jobs), &profiles, &cluster);
+        assert_eq!(plan.choices.len(), 12);
+        assert!(plan.predicted_makespan_s >= plan.lower_bound_s * 0.999);
+        assert!(stats.warm_hits == 0,
+                "the seed path must not warm-start node LPs");
+    }
+
+    #[test]
+    fn solver_stats_report_warm_basis_reuse() {
+        // the branch-and-bound must re-solve child nodes from parent
+        // bases: a non-zero warm-start hit rate plus pivot accounting
+        let (jobs, profiles, cluster) = setup(1);
+        let (_, stats) = solve_joint(&remaining(&jobs), &profiles, &cluster,
+                                     SolverMode::Joint);
+        assert!(stats.warm_hits > 0, "no warm-basis node solves");
+        assert!(stats.warm_hit_rate() > 0.0);
+        assert!(stats.lp_pivots > 0);
+        assert_eq!(stats.windows, 0, "single-shot solve has no windows");
+    }
+
+    #[test]
+    fn rolling_horizon_plans_every_job_and_respects_bounds() {
+        let jobs = toy_workload(40);
+        let cluster = ClusterSpec::p4d(2);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (plan, stats) = solve_joint(
+            &rem, &profiles, &cluster,
+            SolverMode::RollingHorizon { window: 16, overlap: 4 });
+        assert_eq!(plan.choices.len(), 40);
+        assert!(stats.windows >= 2, "expected several windows, got {}",
+                stats.windows);
+        assert!(plan.predicted_makespan_s >= plan.lower_bound_s - 1e-6);
+        assert!(plan.predicted_makespan_s
+                >= plan.area() / cluster.total_gpus() as f64 - 1e-6);
+    }
+
+    #[test]
+    fn rolling_horizon_quality_tracks_joint_on_medium_instances() {
+        let jobs = toy_workload(24);
+        let cluster = ClusterSpec::p4d(2);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (joint, _) = solve_joint(&rem, &profiles, &cluster,
+                                     SolverMode::Joint);
+        let (rolling, _) = solve_joint(
+            &rem, &profiles, &cluster,
+            SolverMode::RollingHorizon { window: 8, overlap: 2 });
+        // windows lose some cross-window packing, but the committed-area
+        // coupling keeps them in the same regime
+        assert!(rolling.predicted_makespan_s
+                <= joint.predicted_makespan_s * 1.35 + 1.0,
+                "rolling {} vs joint {}", rolling.predicted_makespan_s,
+                joint.predicted_makespan_s);
+    }
+
+    #[test]
+    fn rolling_horizon_replays_deterministically() {
+        let jobs = toy_workload(30);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let run = || solve_joint(&rem, &profiles, &cluster,
+                                 SolverMode::rolling_default()).0;
+        let (a, b) = (run(), run());
+        assert_eq!(a.choices.len(), b.choices.len());
+        for (pa, pb) in a.choices.iter().zip(&b.choices) {
+            assert_eq!((pa.job_id, pa.tech, pa.gpus), (pb.job_id, pb.tech, pb.gpus));
+        }
+        assert_eq!(a.predicted_makespan_s, b.predicted_makespan_s);
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Two-phase dense-tableau primal simplex — the seed implementation,
+//! kept as the reference oracle for `solver::lp`'s revised simplex.
+//!
+//! `tests/prop_solver.rs` holds the two solvers to identical objectives
+//! on random LPs, `benches/bench_solver_scale.rs` times the seed MILP
+//! path (`MilpEngine::DenseReference`) against the rebuilt one, and the
+//! unit tests here pin the historical behaviour. First-class variable
+//! bounds on [`Lp`] are materialized as constraint rows before building
+//! the tableau — exactly the formulation the seed forced on every
+//! caller, which is what makes this the honest "before" baseline.
+
+use crate::solver::lp::{Cmp, Lp, LpResult, EPS};
+
+/// Diagnostics for one dense solve.
+#[derive(Debug, Clone, Default)]
+pub struct DenseInfo {
+    /// Total simplex pivots across both phases.
+    pub pivots: usize,
+    /// The iteration cap fired before convergence: the reported point is
+    /// the current basic solution, not a certified optimum. Also logged
+    /// via `log::warn!`.
+    pub capped: bool,
+}
+
+/// Solve with the two-phase dense tableau simplex.
+pub fn solve(lp: &Lp) -> LpResult {
+    solve_with_info(lp).0
+}
+
+/// Solve, reporting pivot count and whether the iteration cap fired.
+pub fn solve_with_info(lp: &Lp) -> (LpResult, DenseInfo) {
+    // The dense tableau knows only `x >= 0` plus rows: materialize the
+    // first-class bounds (the seed carried them as rows all along).
+    let mut full = lp.clone();
+    for j in 0..lp.n {
+        debug_assert!(lp.lower[j] >= 0.0, "dense reference requires x >= 0");
+        if lp.lower[j] > 0.0 {
+            full.add(vec![(j, 1.0)], Cmp::Ge, lp.lower[j]);
+        }
+        if lp.upper[j].is_finite() {
+            full.add(vec![(j, 1.0)], Cmp::Le, lp.upper[j]);
+        }
+    }
+    let mut t = Tableau::build(&full);
+    let result = t.solve();
+    (result, DenseInfo { pivots: t.pivots, capped: t.capped })
+}
+
+struct Tableau {
+    /// rows m x cols (n + slacks + artificials + 1 rhs)
+    a: Vec<Vec<f64>>,
+    m: usize,
+    cols: usize, // total structural+slack+artificial columns (excl. rhs)
+    n: usize,    // original variables
+    basis: Vec<usize>,
+    /// `is_artificial[j]` for every column (O(1) membership — the seed
+    /// scanned a `Vec` per column here).
+    is_artificial: Vec<bool>,
+    any_artificial: bool,
+    obj: Vec<f64>, // original objective padded to `cols`
+    pivots: usize,
+    capped: bool,
+}
+
+impl Tableau {
+    fn build(lp: &Lp) -> Tableau {
+        let m = lp.constraints.len();
+        // Count slack columns (one per inequality) and artificials.
+        let mut n_slack = 0;
+        for c in &lp.constraints {
+            if c.cmp != Cmp::Eq {
+                n_slack += 1;
+            }
+        }
+        // worst case: one artificial per row
+        let cols = lp.n + n_slack + m;
+        let mut a = vec![vec![0.0; cols + 1]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut is_artificial = vec![false; cols];
+        let mut any_artificial = false;
+        let mut slack_idx = lp.n;
+        let mut art_idx = lp.n + n_slack;
+
+        for (i, c) in lp.constraints.iter().enumerate() {
+            let mut rhs = c.rhs;
+            let mut sign = 1.0;
+            if rhs < 0.0 {
+                // normalize rhs >= 0 by flipping the row
+                rhs = -rhs;
+                sign = -1.0;
+            }
+            for &(j, v) in &c.coeffs {
+                a[i][j] += sign * v;
+            }
+            a[i][cols] = rhs;
+            let cmp = match (c.cmp, sign < 0.0) {
+                (Cmp::Le, false) | (Cmp::Ge, true) => Cmp::Le,
+                (Cmp::Ge, false) | (Cmp::Le, true) => Cmp::Ge,
+                (Cmp::Eq, _) => Cmp::Eq,
+            };
+            match cmp {
+                Cmp::Le => {
+                    a[i][slack_idx] = 1.0;
+                    basis[i] = slack_idx;
+                    slack_idx += 1;
+                }
+                Cmp::Ge => {
+                    a[i][slack_idx] = -1.0; // surplus
+                    slack_idx += 1;
+                    a[i][art_idx] = 1.0;
+                    basis[i] = art_idx;
+                    is_artificial[art_idx] = true;
+                    any_artificial = true;
+                    art_idx += 1;
+                }
+                Cmp::Eq => {
+                    a[i][art_idx] = 1.0;
+                    basis[i] = art_idx;
+                    is_artificial[art_idx] = true;
+                    any_artificial = true;
+                    art_idx += 1;
+                }
+            }
+        }
+
+        let mut obj = vec![0.0; cols];
+        obj[..lp.n].copy_from_slice(&lp.objective);
+        Tableau {
+            a,
+            m,
+            cols,
+            n: lp.n,
+            basis,
+            is_artificial,
+            any_artificial,
+            obj,
+            pivots: 0,
+            capped: false,
+        }
+    }
+
+    fn solve(&mut self) -> LpResult {
+        // Phase 1: minimize sum of artificials.
+        if self.any_artificial {
+            let mut phase1 = vec![0.0; self.cols];
+            for (j, &art) in self.is_artificial.iter().enumerate() {
+                if art {
+                    phase1[j] = 1.0;
+                }
+            }
+            match self.run_simplex(&phase1) {
+                SimplexOutcome::Optimal(obj) => {
+                    if obj > 1e-6 {
+                        return LpResult::Infeasible;
+                    }
+                }
+                SimplexOutcome::Unbounded => return LpResult::Infeasible,
+            }
+            // Drive remaining artificials out of the basis if possible.
+            for i in 0..self.m {
+                if self.is_artificial[self.basis[i]] {
+                    let pivot_col = (0..self.cols).find(|&j| {
+                        !self.is_artificial[j] && self.a[i][j].abs() > EPS
+                    });
+                    if let Some(j) = pivot_col {
+                        self.pivot(i, j);
+                    }
+                    // else: redundant row; artificial stays basic at 0.
+                }
+            }
+            // Freeze artificial columns at zero for phase 2.
+            for j in 0..self.cols {
+                if self.is_artificial[j] {
+                    for row in self.a.iter_mut() {
+                        row[j] = 0.0;
+                    }
+                }
+            }
+        }
+
+        // Phase 2: original objective.
+        let obj = self.obj.clone();
+        match self.run_simplex(&obj) {
+            SimplexOutcome::Optimal(objective) => {
+                let mut x = vec![0.0; self.n];
+                for i in 0..self.m {
+                    let b = self.basis[i];
+                    if b < self.n {
+                        x[b] = self.a[i][self.cols];
+                    }
+                }
+                LpResult::Optimal { x, objective }
+            }
+            SimplexOutcome::Unbounded => LpResult::Unbounded,
+        }
+    }
+
+    /// Reduced-cost simplex loop on objective `c`; returns optimal value.
+    fn run_simplex(&mut self, c: &[f64]) -> SimplexOutcome {
+        let max_iters = 200 * (self.m + self.cols);
+        for iter in 0..max_iters {
+            // reduced costs: z_j = c_j - c_B' B^-1 A_j (computed row-wise)
+            let mut reduced = c.to_vec();
+            for i in 0..self.m {
+                let cb = c[self.basis[i]];
+                if cb.abs() > EPS {
+                    for j in 0..self.cols {
+                        reduced[j] -= cb * self.a[i][j];
+                    }
+                }
+            }
+            // entering column: Dantzig normally, Bland past a burn-in to
+            // guarantee termination under degeneracy.
+            let entering = if iter < max_iters / 2 {
+                let mut best = None;
+                let mut best_val = -EPS;
+                for (j, &r) in reduced.iter().enumerate() {
+                    if r < best_val {
+                        best_val = r;
+                        best = Some(j);
+                    }
+                }
+                best
+            } else {
+                reduced.iter().position(|&r| r < -EPS)
+            };
+            let Some(e) = entering else {
+                // optimal; objective = c_B' b
+                let mut obj = 0.0;
+                for i in 0..self.m {
+                    obj += c[self.basis[i]] * self.a[i][self.cols];
+                }
+                return SimplexOutcome::Optimal(obj);
+            };
+            // ratio test (Bland tie-break on basis index)
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..self.m {
+                if self.a[i][e] > EPS {
+                    let ratio = self.a[i][self.cols] / self.a[i][e];
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && leave
+                                .map_or(true, |l| self.basis[i] < self.basis[l]))
+                    {
+                        best_ratio = ratio;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(l) = leave else {
+                return SimplexOutcome::Unbounded;
+            };
+            self.pivot(l, e);
+        }
+        // Iteration cap: surface it instead of silently reporting the
+        // current point as optimal (callers check `DenseInfo::capped`).
+        self.capped = true;
+        log::warn!(
+            "dense simplex hit the iteration cap ({max_iters} iters, m={} \
+             cols={}); reporting the current basic point",
+            self.m, self.cols);
+        let mut obj = 0.0;
+        for i in 0..self.m {
+            obj += c[self.basis[i]] * self.a[i][self.cols];
+        }
+        SimplexOutcome::Optimal(obj)
+    }
+
+    fn pivot(&mut self, row: usize, col: usize) {
+        let pv = self.a[row][col];
+        debug_assert!(pv.abs() > EPS);
+        let inv = 1.0 / pv;
+        for v in self.a[row].iter_mut() {
+            *v *= inv;
+        }
+        let pivot_row = self.a[row].clone();
+        for (i, r) in self.a.iter_mut().enumerate() {
+            if i != row && r[col].abs() > EPS {
+                let factor = r[col];
+                for (v, pv) in r.iter_mut().zip(&pivot_row) {
+                    *v -= factor * pv;
+                }
+            }
+        }
+        self.basis[row] = col;
+        self.pivots += 1;
+    }
+}
+
+enum SimplexOutcome {
+    Optimal(f64),
+    Unbounded,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn matches_seed_behaviour_on_classic_instances() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> -36 in min form
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -3.0);
+        lp.set_obj(1, -5.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 4.0);
+        lp.add(vec![(1, 2.0)], Cmp::Le, 12.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let res = solve(&lp);
+        let (x, obj) = res.optimal().expect("optimal");
+        assert_close(obj, -36.0);
+        assert_close(x[0], 2.0);
+        assert_close(x[1], 6.0);
+    }
+
+    #[test]
+    fn first_class_bounds_are_materialized() {
+        // bounds set via the Lp API (variable bounds) must still bind here
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -1.0);
+        lp.set_obj(1, -1.0);
+        lp.set_bounds(0, 1.0, 3.0);
+        lp.bound_le(1, 4.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 10.0);
+        let res = solve(&lp);
+        let (x, obj) = res.optimal().expect("optimal");
+        assert_close(obj, -7.0);
+        assert_close(x[0], 3.0);
+        assert_close(x[1], 4.0);
+    }
+
+    #[test]
+    fn infeasible_and_unbounded_detected() {
+        let mut lp = Lp::new(1);
+        lp.bound_ge(0, 5.0);
+        lp.bound_le(0, 3.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+
+        let mut lp = Lp::new(1);
+        lp.set_obj(0, -1.0);
+        assert_eq!(solve(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y <= -2  (i.e. y >= x + 2), min y -> x=0, y=2
+        let mut lp = Lp::new(2);
+        lp.set_obj(1, 1.0);
+        lp.add(vec![(0, 1.0), (1, -1.0)], Cmp::Le, -2.0);
+        let res = solve(&lp);
+        let (x, obj) = res.optimal().expect("optimal");
+        assert_close(obj, 2.0);
+        assert_close(x[1], 2.0);
+    }
+
+    #[test]
+    fn pivots_reported_and_cap_untripped_on_small_lps() {
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -1.0);
+        lp.set_obj(1, -2.0);
+        lp.bound_le(0, 1.0);
+        lp.bound_le(1, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 1.5);
+        let (res, info) = solve_with_info(&lp);
+        assert!(res.optimal().is_some());
+        assert!(!info.capped);
+        assert!(info.pivots > 0);
+    }
+}

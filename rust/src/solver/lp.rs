@@ -1,14 +1,31 @@
-//! Two-phase primal simplex LP solver (substrate: the paper uses Gurobi).
+//! Bounded-variable revised simplex LP solver (substrate: the paper uses
+//! Gurobi).
 //!
-//! Solves   min c'x   s.t.  Ax {<=,>=,=} b,  x >= 0
-//! via the standard dense tableau with Bland's anti-cycling rule. Problem
-//! sizes in Saturn's joint MILP are modest (hundreds of columns), so a
-//! dense tableau is simple and fast enough; `solver/milp.rs` adds
-//! branch-and-bound on top.
+//! Solves   min c'x   s.t.  Ax {<=,>=,=} b,  l <= x <= u
+//! with per-variable bounds held OUT of the constraint matrix: rows are
+//! converted to equalities with one slack column each, and the simplex
+//! works on the basis inverse (`B^-1`) over sparse columns instead of a
+//! dense tableau. That keeps the row count at m (constraints only) —
+//! the seed solver carried every bound as an extra row, which tripled
+//! the tableau for Saturn's 0/1 plan-selection MILPs.
 //!
-//! Numerical conventions: all comparisons use `EPS = 1e-9`; callers should
-//! scale coefficients to O(1)-O(1e3) (the Saturn solver normalizes runtimes
-//! to slot units before formulating).
+//! Two entry styles:
+//!  * [`solve`] / [`solve_with_info`] — one-shot cold solve of an [`Lp`]
+//!    (two-phase: artificial phase 1 only for rows whose slack start is
+//!    infeasible, then primal phase 2).
+//!  * [`Simplex`] — a reusable factorization of the constraint matrix.
+//!    `solve_cold` takes a bounds vector, so branch-and-bound re-solves
+//!    the SAME matrix under different bounds without rebuilding or
+//!    cloning anything; `solve_warm` re-solves after a bound change from
+//!    a parent [`Basis`] via the dual simplex, typically in a handful of
+//!    pivots (`solver::milp` warm-starts every child node this way).
+//!
+//! Numerical conventions: all comparisons use `EPS = 1e-9`; callers
+//! should scale coefficients to O(1)-O(1e3) (the Saturn solver
+//! normalizes runtimes to slot units before formulating). The seed
+//! dense-tableau implementation survives as `solver::dense` — the
+//! property suite (`tests/prop_solver.rs`) holds the two to the same
+//! objectives on random LPs.
 
 pub const EPS: f64 = 1e-9;
 
@@ -27,17 +44,28 @@ pub struct Constraint {
     pub rhs: f64,
 }
 
-/// LP in "min" orientation. Variables are indexed 0..n and implicitly >= 0.
+/// LP in "min" orientation. Variables are indexed 0..n with first-class
+/// bounds `lower <= x <= upper` (default `[0, +inf)`).
 #[derive(Debug, Clone, Default)]
 pub struct Lp {
     pub n: usize,
     pub objective: Vec<f64>, // length n, minimize
     pub constraints: Vec<Constraint>,
+    /// Per-variable lower bounds (length n, default 0).
+    pub lower: Vec<f64>,
+    /// Per-variable upper bounds (length n, default +inf).
+    pub upper: Vec<f64>,
 }
 
 impl Lp {
     pub fn new(n: usize) -> Self {
-        Lp { n, objective: vec![0.0; n], constraints: Vec::new() }
+        Lp {
+            n,
+            objective: vec![0.0; n],
+            constraints: Vec::new(),
+            lower: vec![0.0; n],
+            upper: vec![f64::INFINITY; n],
+        }
     }
 
     pub fn set_obj(&mut self, var: usize, coeff: f64) {
@@ -49,14 +77,20 @@ impl Lp {
         self.constraints.push(Constraint { coeffs, cmp, rhs });
     }
 
-    /// Convenience: upper bound `x_j <= ub`.
+    /// Tighten the upper bound `x_j <= ub` (a variable bound, not a row).
     pub fn bound_le(&mut self, var: usize, ub: f64) {
-        self.add(vec![(var, 1.0)], Cmp::Le, ub);
+        self.upper[var] = self.upper[var].min(ub);
     }
 
-    /// Convenience: lower bound `x_j >= lb`.
+    /// Tighten the lower bound `x_j >= lb` (a variable bound, not a row).
     pub fn bound_ge(&mut self, var: usize, lb: f64) {
-        self.add(vec![(var, 1.0)], Cmp::Ge, lb);
+        self.lower[var] = self.lower[var].max(lb);
+    }
+
+    /// Set both bounds of a variable outright.
+    pub fn set_bounds(&mut self, var: usize, lb: f64, ub: f64) {
+        self.lower[var] = lb;
+        self.upper[var] = ub;
     }
 }
 
@@ -76,229 +110,741 @@ impl LpResult {
     }
 }
 
-/// Solve with the two-phase dense tableau simplex.
+/// A simplex basis: which column is basic in each row, and which bound
+/// every nonbasic column sits at. Returned by [`Simplex::solve_cold`] and
+/// accepted by [`Simplex::solve_warm`] — the warm-start currency of the
+/// MILP's branch-and-bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Basis {
+    /// Length m: column index (structural `0..n` or slack `n..n+m`)
+    /// basic in each row.
+    pub basic: Vec<usize>,
+    /// Length n+m: nonbasic columns at their upper (vs lower) bound.
+    pub at_upper: Vec<bool>,
+}
+
+/// Per-solve diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct LpInfo {
+    /// Basis changes performed (phase 1 + phase 2, or dual + cleanup).
+    pub pivots: usize,
+    /// The iteration cap fired before convergence: the reported point is
+    /// feasible but possibly suboptimal. Also logged via `log::warn!`.
+    pub capped: bool,
+}
+
+/// One solve's complete outcome.
+#[derive(Debug, Clone)]
+pub struct Solved {
+    pub result: LpResult,
+    /// Final basis for warm restarts; `None` when the result is not
+    /// optimal or a redundant row kept an artificial column basic.
+    pub basis: Option<Basis>,
+    pub info: LpInfo,
+}
+
+/// One-shot cold solve (compat entry point).
 pub fn solve(lp: &Lp) -> LpResult {
-    Tableau::build(lp).solve()
+    solve_with_info(lp).0
 }
 
-struct Tableau {
-    /// rows m x cols (n + slacks + artificials + 1 rhs)
-    a: Vec<Vec<f64>>,
+/// One-shot cold solve returning pivot count / cap diagnostics.
+pub fn solve_with_info(lp: &Lp) -> (LpResult, LpInfo) {
+    let sx = Simplex::new(lp);
+    let s = sx.solve_cold(&lp.lower, &lp.upper);
+    (s.result, s.info)
+}
+
+// ---------------------------------------------------------------------------
+// Reusable factorization: constraint matrix in standard form
+// ---------------------------------------------------------------------------
+
+/// The constraint matrix of an [`Lp`] in standard form `Ax + Is = b`,
+/// stored as sparse columns, reusable across many bound vectors. Column
+/// layout: structural `0..n`, slack `n..n+m` (Le: `s in [0,inf)`,
+/// Ge: `s in (-inf,0]`, Eq: `s = 0`).
+#[derive(Debug, Clone)]
+pub struct Simplex {
+    n: usize,
     m: usize,
-    cols: usize, // total structural+slack+artificial columns (excl. rhs)
-    n: usize,    // original variables
-    basis: Vec<usize>,
-    artificials: Vec<usize>,
-    obj: Vec<f64>, // original objective padded to `cols`
+    total: usize,
+    /// Sparse columns, length `total` (structural then slack).
+    cols: Vec<Vec<(usize, f64)>>,
+    rhs: Vec<f64>,
+    /// Objective padded to `total` (slacks cost 0).
+    c: Vec<f64>,
+    slack_lb: Vec<f64>,
+    slack_ub: Vec<f64>,
 }
 
-impl Tableau {
-    fn build(lp: &Lp) -> Tableau {
+impl Simplex {
+    pub fn new(lp: &Lp) -> Simplex {
+        let n = lp.n;
         let m = lp.constraints.len();
-        // Count slack columns (one per inequality) and artificials.
-        let mut n_slack = 0;
-        for c in &lp.constraints {
-            if c.cmp != Cmp::Eq {
-                n_slack += 1;
+        let total = n + m;
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); total];
+        let mut rhs = Vec::with_capacity(m);
+        let mut slack_lb = Vec::with_capacity(m);
+        let mut slack_ub = Vec::with_capacity(m);
+        let mut row_acc: Vec<f64> = vec![0.0; n];
+        for (i, cstr) in lp.constraints.iter().enumerate() {
+            // coalesce duplicate variable entries within the row
+            for &(j, v) in &cstr.coeffs {
+                row_acc[j] += v;
             }
-        }
-        // worst case: one artificial per row
-        let cols = lp.n + n_slack + m;
-        let mut a = vec![vec![0.0; cols + 1]; m];
-        let mut basis = vec![usize::MAX; m];
-        let mut artificials = Vec::new();
-        let mut slack_idx = lp.n;
-        let mut art_idx = lp.n + n_slack;
-
-        for (i, c) in lp.constraints.iter().enumerate() {
-            let mut rhs = c.rhs;
-            let mut sign = 1.0;
-            if rhs < 0.0 {
-                // normalize rhs >= 0 by flipping the row
-                rhs = -rhs;
-                sign = -1.0;
+            for &(j, _) in &cstr.coeffs {
+                if row_acc[j] != 0.0 {
+                    cols[j].push((i, row_acc[j]));
+                    row_acc[j] = 0.0;
+                }
             }
-            for &(j, v) in &c.coeffs {
-                a[i][j] += sign * v;
-            }
-            a[i][cols] = rhs;
-            let cmp = match (c.cmp, sign < 0.0) {
-                (Cmp::Le, false) | (Cmp::Ge, true) => Cmp::Le,
-                (Cmp::Ge, false) | (Cmp::Le, true) => Cmp::Ge,
-                (Cmp::Eq, _) => Cmp::Eq,
+            cols[n + i].push((i, 1.0));
+            rhs.push(cstr.rhs);
+            let (lo, hi) = match cstr.cmp {
+                Cmp::Le => (0.0, f64::INFINITY),
+                Cmp::Ge => (f64::NEG_INFINITY, 0.0),
+                Cmp::Eq => (0.0, 0.0),
             };
-            match cmp {
-                Cmp::Le => {
-                    a[i][slack_idx] = 1.0;
-                    basis[i] = slack_idx;
-                    slack_idx += 1;
-                }
-                Cmp::Ge => {
-                    a[i][slack_idx] = -1.0; // surplus
-                    slack_idx += 1;
-                    a[i][art_idx] = 1.0;
-                    basis[i] = art_idx;
-                    artificials.push(art_idx);
-                    art_idx += 1;
-                }
-                Cmp::Eq => {
-                    a[i][art_idx] = 1.0;
-                    basis[i] = art_idx;
-                    artificials.push(art_idx);
-                    art_idx += 1;
-                }
-            }
+            slack_lb.push(lo);
+            slack_ub.push(hi);
         }
-
-        let mut obj = vec![0.0; cols];
-        obj[..lp.n].copy_from_slice(&lp.objective);
-        Tableau { a, m, cols, n: lp.n, basis, artificials, obj }
+        let mut c = vec![0.0; total];
+        c[..n].copy_from_slice(&lp.objective);
+        Simplex { n, m, total, cols, rhs, c, slack_lb, slack_ub }
     }
 
-    fn solve(mut self) -> LpResult {
-        // Phase 1: minimize sum of artificials.
-        if !self.artificials.is_empty() {
-            let mut phase1 = vec![0.0; self.cols];
-            for &j in &self.artificials {
-                phase1[j] = 1.0;
-            }
-            match self.run_simplex(&phase1) {
-                SimplexOutcome::Optimal(obj) => {
-                    if obj > 1e-6 {
-                        return LpResult::Infeasible;
-                    }
-                }
-                SimplexOutcome::Unbounded => return LpResult::Infeasible,
-            }
-            // Drive remaining artificials out of the basis if possible.
-            for i in 0..self.m {
-                if self.artificials.contains(&self.basis[i]) {
-                    let pivot_col = (0..self.n + self.cols - self.n)
-                        .take(self.cols)
-                        .find(|&j| {
-                            !self.artificials.contains(&j)
-                                && self.a[i][j].abs() > EPS
-                        });
-                    if let Some(j) = pivot_col {
-                        self.pivot(i, j);
-                    }
-                    // else: redundant row; artificial stays basic at 0.
-                }
-            }
-            // Freeze artificial columns at zero for phase 2.
-            for &j in &self.artificials.clone() {
-                for row in self.a.iter_mut() {
-                    row[j] = 0.0;
-                }
-            }
-        }
-
-        // Phase 2: original objective.
-        let obj = self.obj.clone();
-        match self.run_simplex(&obj) {
-            SimplexOutcome::Optimal(objective) => {
-                let mut x = vec![0.0; self.n];
-                for i in 0..self.m {
-                    let b = self.basis[i];
-                    if b < self.n {
-                        x[b] = self.a[i][self.cols];
-                    }
-                }
-                LpResult::Optimal { x, objective }
-            }
-            SimplexOutcome::Unbounded => LpResult::Unbounded,
-        }
+    pub fn num_vars(&self) -> usize {
+        self.n
     }
 
-    /// Reduced-cost simplex loop on objective `c`; returns optimal value.
-    fn run_simplex(&mut self, c: &[f64]) -> SimplexOutcome {
-        let max_iters = 200 * (self.m + self.cols);
-        for iter in 0..max_iters {
-            // reduced costs: z_j = c_j - c_B' B^-1 A_j (computed row-wise)
-            let mut reduced = c.to_vec();
-            for i in 0..self.m {
-                let cb = c[self.basis[i]];
-                if cb.abs() > EPS {
-                    for j in 0..self.cols {
-                        reduced[j] -= cb * self.a[i][j];
-                    }
-                }
-            }
-            // entering column: Dantzig normally, Bland past a burn-in to
-            // guarantee termination under degeneracy.
-            let entering = if iter < max_iters / 2 {
-                let mut best = None;
-                let mut best_val = -EPS;
-                for (j, &r) in reduced.iter().enumerate() {
-                    if r < best_val {
-                        best_val = r;
-                        best = Some(j);
-                    }
-                }
-                best
-            } else {
-                reduced.iter().position(|&r| r < -EPS)
-            };
-            let Some(e) = entering else {
-                // optimal; objective = c_B' b
-                let mut obj = 0.0;
-                for i in 0..self.m {
-                    obj += c[self.basis[i]] * self.a[i][self.cols];
-                }
-                return SimplexOutcome::Optimal(obj);
-            };
-            // ratio test (Bland tie-break on basis index)
-            let mut leave: Option<usize> = None;
-            let mut best_ratio = f64::INFINITY;
-            for i in 0..self.m {
-                if self.a[i][e] > EPS {
-                    let ratio = self.a[i][self.cols] / self.a[i][e];
-                    if ratio < best_ratio - EPS
-                        || (ratio < best_ratio + EPS
-                            && leave.map_or(true, |l| self.basis[i] < self.basis[l]))
-                    {
-                        best_ratio = ratio;
-                        leave = Some(i);
-                    }
-                }
-            }
-            let Some(l) = leave else {
-                return SimplexOutcome::Unbounded;
-            };
-            self.pivot(l, e);
-        }
-        // Iteration cap: treat as optimal-at-current-point; callers in this
-        // repo only hit this on pathological random inputs.
-        let mut obj = 0.0;
-        for i in 0..self.m {
-            obj += c[self.basis[i]] * self.a[i][self.cols];
-        }
-        SimplexOutcome::Optimal(obj)
+    pub fn num_rows(&self) -> usize {
+        self.m
     }
 
-    fn pivot(&mut self, row: usize, col: usize) {
-        let pv = self.a[row][col];
-        debug_assert!(pv.abs() > EPS);
-        let inv = 1.0 / pv;
-        for v in self.a[row].iter_mut() {
-            *v *= inv;
+    /// Two-phase primal solve under the given structural bounds
+    /// (lengths n). Artificial columns are introduced only for rows whose
+    /// slack start violates its bound.
+    pub fn solve_cold(&self, lower: &[f64], upper: &[f64]) -> Solved {
+        let mut st = State::new(self, lower, upper);
+        st.solve_cold()
+    }
+
+    /// Dual-simplex re-solve from `basis` after bound changes; `None`
+    /// when the basis cannot be reused (singular refactorization, an
+    /// unbounded-side nonbasic, or a dual iteration cap) — callers fall
+    /// back to [`Simplex::solve_cold`].
+    pub fn solve_warm(&self, lower: &[f64], upper: &[f64], basis: &Basis)
+        -> Option<Solved> {
+        if basis.basic.len() != self.m || basis.at_upper.len() != self.total {
+            return None;
         }
-        let pivot_row = self.a[row].clone();
-        for (i, r) in self.a.iter_mut().enumerate() {
-            if i != row && r[col].abs() > EPS {
-                let factor = r[col];
-                for (v, pv) in r.iter_mut().zip(&pivot_row) {
-                    *v -= factor * pv;
-                }
-            }
-        }
-        self.basis[row] = col;
+        let mut st = State::new(self, lower, upper);
+        st.solve_warm(basis)
     }
 }
 
-enum SimplexOutcome {
+// ---------------------------------------------------------------------------
+// Per-solve state
+// ---------------------------------------------------------------------------
+
+enum Phase {
     Optimal(f64),
     Unbounded,
+}
+
+struct State<'a> {
+    sx: &'a Simplex,
+    /// Effective bounds, length `total` + artificials.
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    /// Artificial columns appended past `total`: (row, sign).
+    art: Vec<(usize, f64)>,
+    basic: Vec<usize>,
+    in_basis: Vec<bool>,
+    at_upper: Vec<bool>,
+    /// Dense basis inverse, row-major m x m.
+    binv: Vec<f64>,
+    xb: Vec<f64>,
+    pivots: usize,
+    capped: bool,
+}
+
+impl<'a> State<'a> {
+    fn new(sx: &'a Simplex, lower: &[f64], upper: &[f64]) -> State<'a> {
+        debug_assert_eq!(lower.len(), sx.n);
+        debug_assert_eq!(upper.len(), sx.n);
+        let mut lb = Vec::with_capacity(sx.total);
+        let mut ub = Vec::with_capacity(sx.total);
+        lb.extend_from_slice(lower);
+        ub.extend_from_slice(upper);
+        lb.extend_from_slice(&sx.slack_lb);
+        ub.extend_from_slice(&sx.slack_ub);
+        State {
+            sx,
+            lb,
+            ub,
+            art: Vec::new(),
+            basic: vec![usize::MAX; sx.m],
+            in_basis: vec![false; sx.total],
+            at_upper: vec![false; sx.total],
+            binv: vec![0.0; sx.m * sx.m],
+            xb: vec![0.0; sx.m],
+            pivots: 0,
+            capped: false,
+        }
+    }
+
+    fn ncols(&self) -> usize {
+        self.sx.total + self.art.len()
+    }
+
+    fn col(&self, j: usize) -> &[(usize, f64)] {
+        if j < self.sx.total {
+            &self.sx.cols[j]
+        } else {
+            std::slice::from_ref(&self.art[j - self.sx.total])
+        }
+    }
+
+    fn cost(&self, c: &[f64], j: usize) -> f64 {
+        if j < c.len() {
+            c[j]
+        } else {
+            0.0
+        }
+    }
+
+    fn nb_val(&self, j: usize) -> f64 {
+        if self.at_upper[j] {
+            self.ub[j]
+        } else {
+            self.lb[j]
+        }
+    }
+
+    fn max_iters(&self) -> usize {
+        200 * (self.sx.m + self.ncols())
+    }
+
+    /// w = B^-1 A_j.
+    fn ftran(&self, j: usize) -> Vec<f64> {
+        let m = self.sx.m;
+        let mut w = vec![0.0; m];
+        for &(r, v) in self.col(j) {
+            for i in 0..m {
+                let b = self.binv[i * m + r];
+                if b != 0.0 {
+                    w[i] += b * v;
+                }
+            }
+        }
+        w
+    }
+
+    /// y = c_B' B^-1.
+    fn duals(&self, c: &[f64]) -> Vec<f64> {
+        let m = self.sx.m;
+        let mut y = vec![0.0; m];
+        for i in 0..m {
+            let cb = self.cost(c, self.basic[i]);
+            if cb != 0.0 {
+                for r in 0..m {
+                    y[r] += cb * self.binv[i * m + r];
+                }
+            }
+        }
+        y
+    }
+
+    fn reduced(&self, c: &[f64], y: &[f64], j: usize) -> f64 {
+        let mut d = self.cost(c, j);
+        for &(r, v) in self.col(j) {
+            d -= y[r] * v;
+        }
+        d
+    }
+
+    /// xb = B^-1 (b - N x_N), from scratch.
+    fn recompute_xb(&mut self) {
+        let m = self.sx.m;
+        let mut bt = self.sx.rhs.clone();
+        for j in 0..self.ncols() {
+            if self.is_basic(j) {
+                continue;
+            }
+            let v = self.nb_val(j);
+            if v != 0.0 {
+                for &(r, a) in self.col(j) {
+                    bt[r] -= a * v;
+                }
+            }
+        }
+        for i in 0..m {
+            let mut s = 0.0;
+            for r in 0..m {
+                s += self.binv[i * m + r] * bt[r];
+            }
+            self.xb[i] = s;
+        }
+    }
+
+    fn is_basic(&self, j: usize) -> bool {
+        if j < self.sx.total {
+            self.in_basis[j]
+        } else {
+            self.basic.contains(&j)
+        }
+    }
+
+    fn set_basic(&mut self, row: usize, j: usize) {
+        let old = self.basic[row];
+        if old != usize::MAX && old < self.sx.total {
+            self.in_basis[old] = false;
+        }
+        self.basic[row] = j;
+        if j < self.sx.total {
+            self.in_basis[j] = true;
+        }
+    }
+
+    /// Replace the basic column of `row` with `enter`; `w = ftran(enter)`.
+    fn pivot_update(&mut self, row: usize, w: &[f64], enter: usize) {
+        let m = self.sx.m;
+        let inv = 1.0 / w[row];
+        for k in 0..m {
+            self.binv[row * m + k] *= inv;
+        }
+        for i in 0..m {
+            if i != row && w[i] != 0.0 {
+                let f = w[i];
+                for k in 0..m {
+                    self.binv[i * m + k] -= f * self.binv[row * m + k];
+                }
+            }
+        }
+        self.set_basic(row, enter);
+        self.pivots += 1;
+    }
+
+    fn objective_at(&self, c: &[f64]) -> f64 {
+        let mut obj = 0.0;
+        for i in 0..self.sx.m {
+            obj += self.cost(c, self.basic[i]) * self.xb[i];
+        }
+        for j in 0..self.ncols() {
+            if !self.is_basic(j) {
+                let cj = self.cost(c, j);
+                if cj != 0.0 {
+                    obj += cj * self.nb_val(j);
+                }
+            }
+        }
+        obj
+    }
+
+    /// Primal bounded-variable simplex on objective `c` from the current
+    /// (primal-feasible) basis. Dantzig pricing with a Bland fallback past
+    /// a burn-in to guarantee termination under degeneracy.
+    fn primal(&mut self, c: &[f64]) -> Phase {
+        let m = self.sx.m;
+        let max_iters = self.max_iters();
+        for iter in 0..max_iters {
+            let y = self.duals(c);
+            let bland = iter >= max_iters / 2;
+            let mut enter: Option<(usize, f64)> = None; // (col, dir)
+            let mut best_score = -EPS;
+            for j in 0..self.ncols() {
+                if self.is_basic(j) || self.ub[j] - self.lb[j] <= EPS {
+                    continue; // basic or fixed columns never enter
+                }
+                let d = self.reduced(c, &y, j);
+                let dir = if self.at_upper[j] { -1.0 } else { 1.0 };
+                let score = d * dir; // improving iff < -EPS
+                if score < -EPS {
+                    if bland {
+                        enter = Some((j, dir));
+                        break;
+                    }
+                    if score < best_score {
+                        best_score = score;
+                        enter = Some((j, dir));
+                    }
+                }
+            }
+            let Some((j, dir)) = enter else {
+                return Phase::Optimal(self.objective_at(c));
+            };
+            let w = self.ftran(j);
+            // ratio test: x_j moves by t*dir (t >= 0); x_B -= t*dir*w
+            let mut t_best = self.ub[j] - self.lb[j]; // bound-flip limit
+            let mut leave: Option<usize> = None;
+            let mut leave_to_upper = false;
+            for i in 0..m {
+                let delta = -dir * w[i]; // d(x_Bi)/dt
+                let bi = self.basic[i];
+                let (t, to_upper) = if delta < -EPS
+                    && self.lb[bi] > f64::NEG_INFINITY
+                {
+                    ((self.xb[i] - self.lb[bi]) / (-delta), false)
+                } else if delta > EPS && self.ub[bi] < f64::INFINITY {
+                    ((self.ub[bi] - self.xb[i]) / delta, true)
+                } else {
+                    continue;
+                };
+                // Bland-style tie-break on basis index against cycling
+                let take = match leave {
+                    None => t < t_best + EPS,
+                    Some(l) => {
+                        t < t_best - EPS
+                            || (t < t_best + EPS && bi < self.basic[l])
+                    }
+                };
+                if take {
+                    t_best = t.min(t_best);
+                    leave = Some(i);
+                    leave_to_upper = to_upper;
+                }
+            }
+            if t_best.is_infinite() {
+                return Phase::Unbounded;
+            }
+            let t = t_best.max(0.0);
+            match leave {
+                None => {
+                    // bound flip: no basis change
+                    for i in 0..m {
+                        self.xb[i] -= t * dir * w[i];
+                    }
+                    self.at_upper[j] = !self.at_upper[j];
+                }
+                Some(r) => {
+                    let enter_val = self.nb_val(j) + dir * t;
+                    let lv = self.basic[r];
+                    for i in 0..m {
+                        if i != r {
+                            self.xb[i] -= t * dir * w[i];
+                        }
+                    }
+                    self.xb[r] = enter_val;
+                    self.at_upper[lv] = leave_to_upper;
+                    self.pivot_update(r, &w, j);
+                }
+            }
+        }
+        // Iteration cap: feasible but possibly suboptimal point.
+        self.capped = true;
+        log::warn!(
+            "simplex hit the iteration cap ({} iters, m={} cols={}); \
+             reporting the current feasible point",
+            self.max_iters(), self.sx.m, self.ncols());
+        Phase::Optimal(self.objective_at(c))
+    }
+
+    fn extract_x(&self) -> Vec<f64> {
+        let mut x = vec![0.0; self.sx.n];
+        for j in 0..self.sx.n {
+            x[j] = self.nb_val(j);
+        }
+        for (i, &b) in self.basic.iter().enumerate() {
+            if b < self.sx.n {
+                x[b] = self.xb[i];
+            }
+        }
+        x
+    }
+
+    fn snapshot(&self) -> Option<Basis> {
+        if self.basic.iter().any(|&b| b >= self.sx.total) {
+            return None; // redundant row kept an artificial basic
+        }
+        Some(Basis {
+            basic: self.basic.clone(),
+            at_upper: self.at_upper[..self.sx.total].to_vec(),
+        })
+    }
+
+    fn finish(&self, result: LpResult, basis: Option<Basis>) -> Solved {
+        Solved {
+            result,
+            basis,
+            info: LpInfo { pivots: self.pivots, capped: self.capped },
+        }
+    }
+
+    // -- cold solve: artificial phase 1 + primal phase 2 -----------------
+
+    fn solve_cold(&mut self) -> Solved {
+        let (n, m, total) = (self.sx.n, self.sx.m, self.sx.total);
+        for j in 0..total {
+            if self.lb[j] > self.ub[j] + 1e-9 {
+                return self.finish(LpResult::Infeasible, None);
+            }
+        }
+        // nonbasic start: every column at its finite bound
+        for j in 0..total {
+            debug_assert!(
+                self.lb[j].is_finite() || self.ub[j].is_finite(),
+                "free variables are unsupported"
+            );
+            self.at_upper[j] = self.lb[j] == f64::NEG_INFINITY;
+        }
+        // residuals with every column nonbasic
+        let mut resid = self.sx.rhs.clone();
+        for j in 0..total {
+            let v = self.nb_val(j);
+            if v != 0.0 {
+                for &(r, a) in self.col(j) {
+                    resid[r] -= a * v;
+                }
+            }
+        }
+        // per row: slack basic when its start value is feasible, else an
+        // artificial carries the residual through phase 1
+        for i in 0..m {
+            // if the slack were basic its value would absorb the residual
+            let s_val = resid[i] + self.nb_val(n + i);
+            if self.sx.slack_lb[i] - 1e-9 <= s_val
+                && s_val <= self.sx.slack_ub[i] + 1e-9
+            {
+                self.set_basic(i, n + i);
+                self.binv[i * m + i] = 1.0;
+                self.xb[i] = s_val;
+            } else {
+                let sign = if s_val >= 0.0 { 1.0 } else { -1.0 };
+                self.art.push((i, sign));
+                let aj = total + self.art.len() - 1;
+                self.lb.push(0.0);
+                self.ub.push(f64::INFINITY);
+                self.at_upper.push(false);
+                self.set_basic(i, aj);
+                self.binv[i * m + i] = sign;
+                self.xb[i] = s_val.abs();
+            }
+        }
+        if !self.art.is_empty() {
+            let mut c1 = vec![0.0; self.ncols()];
+            for k in total..self.ncols() {
+                c1[k] = 1.0;
+            }
+            match self.primal(&c1) {
+                Phase::Unbounded => {
+                    return self.finish(LpResult::Infeasible, None)
+                }
+                Phase::Optimal(obj) => {
+                    if obj > 1e-6 {
+                        return self.finish(LpResult::Infeasible, None);
+                    }
+                }
+            }
+            // freeze artificials at zero, then pivot basic ones out where
+            // the row allows it (degenerate swaps at value 0)
+            for k in total..self.ncols() {
+                self.ub[k] = 0.0;
+            }
+            for i in 0..m {
+                if self.basic[i] < total {
+                    continue;
+                }
+                let row_of = i * m;
+                let mut entering = None;
+                for j in 0..total {
+                    if self.in_basis[j] {
+                        continue;
+                    }
+                    let mut a = 0.0;
+                    for &(r, v) in self.col(j) {
+                        a += self.binv[row_of + r] * v;
+                    }
+                    if a.abs() > 1e-7 {
+                        entering = Some(j);
+                        break;
+                    }
+                }
+                if let Some(j) = entering {
+                    let w = self.ftran(j);
+                    self.pivot_update(i, &w, j);
+                    self.recompute_xb();
+                }
+                // else: redundant row; the artificial stays basic at 0 and
+                // the final basis is not snapshot-able.
+            }
+        }
+        let c = self.sx.c.clone();
+        match self.primal(&c) {
+            Phase::Unbounded => self.finish(LpResult::Unbounded, None),
+            Phase::Optimal(objective) => {
+                let x = self.extract_x();
+                let basis = self.snapshot();
+                self.finish(LpResult::Optimal { x, objective }, basis)
+            }
+        }
+    }
+
+    // -- warm solve: install basis, dual simplex, primal cleanup ---------
+
+    fn solve_warm(&mut self, basis: &Basis) -> Option<Solved> {
+        let (m, total) = (self.sx.m, self.sx.total);
+        for j in 0..total {
+            if self.lb[j] > self.ub[j] + 1e-9 {
+                return Some(self.finish(LpResult::Infeasible, None));
+            }
+        }
+        for (i, &b) in basis.basic.iter().enumerate() {
+            self.set_basic(i, b);
+        }
+        self.at_upper.copy_from_slice(&basis.at_upper);
+        // refactor B^-1 from scratch (O(m^3); m excludes bound rows, so
+        // this stays small — and every subsequent pivot is incremental)
+        self.binv = invert_basis(self.sx, &self.basic)?;
+        // a nonbasic column must rest on a finite bound; bound changes can
+        // have removed the side it sat on
+        for j in 0..total {
+            if self.in_basis[j] {
+                continue;
+            }
+            if self.at_upper[j] && self.ub[j] == f64::INFINITY {
+                if self.lb[j] == f64::NEG_INFINITY {
+                    return None;
+                }
+                self.at_upper[j] = false;
+            } else if !self.at_upper[j] && self.lb[j] == f64::NEG_INFINITY {
+                if self.ub[j] == f64::INFINITY {
+                    return None;
+                }
+                self.at_upper[j] = true;
+            }
+        }
+        self.recompute_xb();
+        let c = self.sx.c.clone();
+        let max_iters = self.max_iters();
+        for _ in 0..max_iters {
+            // leaving: the basic variable with the largest bound violation
+            let mut leave: Option<(usize, bool)> = None; // (row, below_lb)
+            let mut viol = 1e-7;
+            for i in 0..m {
+                let bi = self.basic[i];
+                if self.xb[i] < self.lb[bi] - viol {
+                    viol = self.lb[bi] - self.xb[i];
+                    leave = Some((i, true));
+                } else if self.xb[i] > self.ub[bi] + viol {
+                    viol = self.xb[i] - self.ub[bi];
+                    leave = Some((i, false));
+                }
+            }
+            let Some((r, below)) = leave else {
+                // primal feasible; the primal pass certifies optimality
+                // (usually zero pivots) and handles any dual-status drift
+                return match self.primal(&c) {
+                    Phase::Unbounded => {
+                        Some(self.finish(LpResult::Unbounded, None))
+                    }
+                    Phase::Optimal(objective) => {
+                        let x = self.extract_x();
+                        let basis = self.snapshot();
+                        Some(self.finish(
+                            LpResult::Optimal { x, objective }, basis))
+                    }
+                };
+            };
+            let y = self.duals(&c);
+            let row_of = r * m;
+            // entering: dual ratio test |d_j| / |alpha_j| over columns
+            // that can push x_Br back toward the violated bound
+            let mut enter: Option<usize> = None;
+            let mut best = f64::INFINITY;
+            for j in 0..total {
+                if self.in_basis[j] || self.ub[j] - self.lb[j] <= EPS {
+                    continue;
+                }
+                let mut a = 0.0;
+                for &(rr, v) in self.col(j) {
+                    a += self.binv[row_of + rr] * v;
+                }
+                let eligible = if below {
+                    (!self.at_upper[j] && a < -EPS)
+                        || (self.at_upper[j] && a > EPS)
+                } else {
+                    (!self.at_upper[j] && a > EPS)
+                        || (self.at_upper[j] && a < -EPS)
+                };
+                if !eligible {
+                    continue;
+                }
+                let d = self.reduced(&c, &y, j);
+                let ratio = d.abs() / a.abs();
+                // strictly-better only: j ascends, so the first index wins
+                // among (near-)ties — deterministic without a tie-break
+                if enter.is_none() || ratio < best - EPS {
+                    best = ratio.min(best);
+                    enter = Some(j);
+                }
+            }
+            let Some(j) = enter else {
+                // the violated row maxes out over the whole bound box:
+                // genuinely infeasible (no dual feasibility needed)
+                return Some(self.finish(LpResult::Infeasible, None));
+            };
+            let w = self.ftran(j);
+            if w[r].abs() <= EPS {
+                return None; // numerically unusable pivot; cold-solve
+            }
+            let lv = self.basic[r];
+            self.at_upper[lv] = !below; // leaves at the violated bound side
+            self.pivot_update(r, &w, j);
+            self.recompute_xb();
+        }
+        None // dual iteration cap: let the caller cold-solve
+    }
+}
+
+/// Dense inverse of the basis matrix via Gauss-Jordan with partial
+/// pivoting; `None` when singular.
+fn invert_basis(sx: &Simplex, basic: &[usize]) -> Option<Vec<f64>> {
+    let m = sx.m;
+    // augmented [B | I], row-major with width 2m
+    let w = 2 * m;
+    let mut a = vec![0.0; m * w];
+    for (i, &b) in basic.iter().enumerate() {
+        for &(r, v) in &sx.cols[b] {
+            a[r * w + i] = v;
+        }
+    }
+    for i in 0..m {
+        a[i * w + m + i] = 1.0;
+    }
+    for col in 0..m {
+        let mut p = None;
+        let mut best = 1e-10;
+        for i in col..m {
+            if a[i * w + col].abs() > best {
+                best = a[i * w + col].abs();
+                p = Some(i);
+            }
+        }
+        let p = p?;
+        if p != col {
+            for k in 0..w {
+                a.swap(col * w + k, p * w + k);
+            }
+        }
+        let pv = a[col * w + col];
+        for k in 0..w {
+            a[col * w + k] /= pv;
+        }
+        for i in 0..m {
+            if i != col && a[i * w + col] != 0.0 {
+                let f = a[i * w + col];
+                for k in 0..w {
+                    a[i * w + k] -= f * a[col * w + k];
+                }
+            }
+        }
+    }
+    let mut inv = vec![0.0; m * m];
+    for i in 0..m {
+        inv[i * m..(i + 1) * m].copy_from_slice(&a[i * w + m..i * w + 2 * m]);
+    }
+    Some(inv)
 }
 
 #[cfg(test)]
@@ -328,8 +874,7 @@ mod tests {
 
     #[test]
     fn ge_and_eq_constraints() {
-        // min x + 2y s.t. x + y = 10, x >= 3  -> x=10? No: y free to 0:
-        // x+y=10, minimize x+2y -> prefer all x: x=10, y=0 (x>=3 ok), obj 10
+        // min x + 2y s.t. x + y = 10, x >= 3 -> all x: x=10, y=0, obj 10
         let mut lp = Lp::new(2);
         lp.set_obj(0, 1.0);
         lp.set_obj(1, 2.0);
@@ -346,6 +891,16 @@ mod tests {
         let mut lp = Lp::new(1);
         lp.bound_ge(0, 5.0);
         lp.bound_le(0, 3.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn infeasible_rows_detected() {
+        // bound conflicts expressed as ROWS (not variable bounds) must
+        // still be caught — this exercises phase 1
+        let mut lp = Lp::new(1);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 5.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 3.0);
         assert_eq!(solve(&lp), LpResult::Infeasible);
     }
 
@@ -371,7 +926,7 @@ mod tests {
     }
 
     #[test]
-    fn negative_rhs_normalization() {
+    fn negative_rhs_handled() {
         // x - y <= -2  (i.e. y >= x + 2), min y -> x=0, y=2
         let mut lp = Lp::new(2);
         lp.set_obj(1, 1.0);
@@ -385,7 +940,7 @@ mod tests {
     #[test]
     fn transportation_problem() {
         // 2 plants (cap 20, 30) -> 2 cities (demand 25, 25); costs
-        // [[1,3],[2,1]]; optimum: p0->c0 20, p1->c0 5, p1->c1 25 = 20+10+25=55
+        // [[1,3],[2,1]]; optimum 55
         let mut lp = Lp::new(4); // x00 x01 x10 x11
         for (j, c) in [1.0, 3.0, 2.0, 1.0].iter().enumerate() {
             lp.set_obj(j, *c);
@@ -397,5 +952,112 @@ mod tests {
         let (_, obj) = solve(&lp).optimal().expect("optimal");
         assert_close(obj, 55.0);
     }
-}
 
+    #[test]
+    fn variable_bounds_respected_without_rows() {
+        // min -x - y s.t. x + y <= 10, 1 <= x <= 3, y <= 4 — all bounds
+        // first-class (row count must stay 1)
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -1.0);
+        lp.set_obj(1, -1.0);
+        lp.set_bounds(0, 1.0, 3.0);
+        lp.bound_le(1, 4.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 10.0);
+        assert_eq!(lp.constraints.len(), 1);
+        let res = solve(&lp);
+        let (x, obj) = res.optimal().expect("optimal");
+        assert_close(obj, -7.0);
+        assert_close(x[0], 3.0);
+        assert_close(x[1], 4.0);
+    }
+
+    #[test]
+    fn cold_solve_returns_reusable_basis() {
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -3.0);
+        lp.set_obj(1, -5.0);
+        lp.bound_le(0, 4.0);
+        lp.bound_le(1, 6.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let sx = Simplex::new(&lp);
+        let s = sx.solve_cold(&lp.lower, &lp.upper);
+        let (_, obj) = s.result.optimal().expect("optimal");
+        assert_close(obj, -36.0);
+        let basis = s.basis.expect("basis available");
+        // warm re-solve with identical bounds reproduces the optimum in
+        // zero (or near-zero) extra pivots
+        let warm = sx
+            .solve_warm(&lp.lower, &lp.upper, &basis)
+            .expect("basis reusable");
+        let (_, wobj) = warm.result.optimal().expect("optimal");
+        assert_close(wobj, obj);
+        assert!(warm.info.pivots <= 1, "warm pivots {}", warm.info.pivots);
+    }
+
+    #[test]
+    fn warm_resolve_after_bound_change_matches_cold() {
+        // knapsack relaxation, then branch-style bound tightenings
+        let mut lp = Lp::new(3);
+        for (j, v) in [10.0, 13.0, 7.0].iter().enumerate() {
+            lp.set_obj(j, -v);
+            lp.bound_le(j, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let sx = Simplex::new(&lp);
+        let root = sx.solve_cold(&lp.lower, &lp.upper);
+        let basis = root.basis.expect("root basis");
+        for (var, lo, hi) in
+            [(0, 0.0, 0.0), (0, 1.0, 1.0), (1, 0.0, 0.0), (2, 1.0, 1.0)]
+        {
+            let mut lower = lp.lower.clone();
+            let mut upper = lp.upper.clone();
+            lower[var] = lo;
+            upper[var] = hi;
+            let cold = sx.solve_cold(&lower, &upper);
+            let warm = sx
+                .solve_warm(&lower, &upper, &basis)
+                .expect("warm resolve usable");
+            match (&cold.result, &warm.result) {
+                (
+                    LpResult::Optimal { objective: a, .. },
+                    LpResult::Optimal { objective: b, .. },
+                ) => assert_close(*a, *b),
+                (a, b) => assert_eq!(a, b),
+            }
+        }
+    }
+
+    #[test]
+    fn warm_resolve_detects_infeasible_child() {
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, 1.0);
+        lp.bound_le(0, 5.0);
+        lp.bound_le(1, 5.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 4.0);
+        let sx = Simplex::new(&lp);
+        let root = sx.solve_cold(&lp.lower, &lp.upper);
+        let basis = root.basis.expect("root basis");
+        // force x0 >= 3 and x1 >= 3: violates x0 + x1 <= 4
+        let lower = vec![3.0, 3.0];
+        let upper = vec![5.0, 5.0];
+        let warm = sx.solve_warm(&lower, &upper, &basis).expect("usable");
+        assert_eq!(warm.result, LpResult::Infeasible);
+        let cold = sx.solve_cold(&lower, &upper);
+        assert_eq!(cold.result, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn pivot_counts_are_reported() {
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -1.0);
+        lp.set_obj(1, -2.0);
+        lp.bound_le(0, 1.0);
+        lp.bound_le(1, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 1.5);
+        let (res, info) = solve_with_info(&lp);
+        assert!(res.optimal().is_some());
+        assert!(!info.capped);
+        // bounded 2-var LP: a few pivots/flips at most
+        assert!(info.pivots <= 6, "pivots {}", info.pivots);
+    }
+}

@@ -1,15 +1,51 @@
 //! Branch-and-bound MILP solver on top of `solver::lp` (Gurobi stand-in).
 //!
-//! Depth-first with best-bound node ordering, incumbent pruning with a
-//! relative gap tolerance, most-fractional branching, and an optional
-//! rounding heuristic to seed the incumbent. Saturn's joint scheduling
-//! instances (<= ~1500 binaries) solve in well under a second; node and
-//! time limits make behaviour predictable beyond that.
+//! Rebuilt around the bounded-variable revised simplex:
+//!
+//!  * **Bound branching, zero cloning.** A node is just the list of
+//!    `(var, lb, ub)` overrides along its path; the constraint matrix is
+//!    factorized once ([`Simplex`]) and every node re-solves it under its
+//!    own bounds. The seed cloned the whole LP and appended bound *rows*
+//!    per node.
+//!  * **Warm-basis child solves.** Each node re-solves from its parent's
+//!    final [`Basis`] via the dual simplex — a single bound changed, so a
+//!    handful of pivots suffice. `MilpStats` reports the hit rate.
+//!  * **Pseudo-cost branching + best-bound node order.** Per-variable
+//!    up/down degradation estimates pick the branch variable; the
+//!    frontier is explored lowest-bound-first and the final
+//!    incumbent/bound gap is reported.
+//!  * **Deterministic sibling parallelism.** The frontier is processed
+//!    in fixed-size batches; batch LPs can be evaluated on
+//!    `util::threadpool::scope_map` worker threads, but batch
+//!    composition and the merge order never depend on `threads`, so the
+//!    incumbent (and node count) are identical for every thread count.
+//!
+//! `MilpEngine::DenseReference` preserves the seed algorithm (dense
+//! tableau, bounds-as-rows, cold solve per node) as an oracle and perf
+//! baseline; `tests/prop_solver.rs` holds the engines to identical
+//! objectives.
 
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::solver::lp::{solve as lp_solve, Cmp, Lp, LpResult};
+use crate::solver::dense;
+use crate::solver::lp::{Basis, Lp, LpResult, Simplex, Solved};
+use crate::util::threadpool::scope_map;
+
+/// Nodes per frontier batch. Fixed (NOT derived from `threads`) so that
+/// search order, node counts and the incumbent are thread-count
+/// independent.
+const BATCH: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MilpEngine {
+    /// Revised simplex + warm-basis dual re-solves (default).
+    Revised,
+    /// The seed path: dense tableau rebuilt from scratch per node with
+    /// branching bounds materialized as rows. Kept as oracle/baseline.
+    DenseReference,
+}
 
 #[derive(Debug, Clone)]
 pub struct MilpOptions {
@@ -18,10 +54,15 @@ pub struct MilpOptions {
     pub max_nodes: usize,
     pub time_limit_s: f64,
     /// Candidate solution seeding the incumbent (Gurobi's MIP start).
-    /// Validated against the constraints before use; an infeasible warm
-    /// start is silently ignored. Online re-solves pass the previous
+    /// Validated against constraints and bounds before use; an infeasible
+    /// warm start is silently ignored. Online re-solves pass the previous
     /// plan here so branch-and-bound prunes against it from node one.
     pub warm_start: Option<Vec<f64>>,
+    /// Worker threads for sibling-subtree LP evaluation (1 = serial).
+    /// Any value returns bit-identical results; >1 only changes wall
+    /// time.
+    pub threads: usize,
+    pub engine: MilpEngine,
 }
 
 impl Default for MilpOptions {
@@ -31,17 +72,64 @@ impl Default for MilpOptions {
             max_nodes: 200_000,
             time_limit_s: 30.0,
             warm_start: None,
+            threads: 1,
+            engine: MilpEngine::Revised,
+        }
+    }
+}
+
+/// Search diagnostics (all engines).
+#[derive(Debug, Clone, Default)]
+pub struct MilpStats {
+    /// Branch-and-bound nodes whose relaxation was solved.
+    pub nodes: usize,
+    /// Simplex pivots across every node LP.
+    pub lp_pivots: usize,
+    /// Node LPs re-solved from the parent basis via dual simplex.
+    pub warm_hits: usize,
+    /// Node LPs that fell back to a cold two-phase solve.
+    pub warm_misses: usize,
+    /// Node LPs that hit the simplex iteration cap (their objectives are
+    /// NOT trusted as bounds — see `solve_revised`).
+    pub capped_lps: usize,
+    /// Best lower bound on the optimum at termination.
+    pub best_bound: f64,
+    /// Relative incumbent/bound gap at termination (0 when proved).
+    pub gap: f64,
+}
+
+impl MilpStats {
+    /// Fraction of node LPs served from a parent basis.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / total as f64
         }
     }
 }
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum MilpResult {
-    /// Best integer-feasible solution found; `proved_optimal` is false if a
-    /// node/time limit stopped the search first.
-    Solved { x: Vec<f64>, objective: f64, proved_optimal: bool, nodes: usize },
+    /// Best integer-feasible solution found; `proved_optimal` is false if
+    /// a node/time limit stopped the search first (compare `objective`
+    /// against `best_bound` for the residual gap).
+    Solved {
+        x: Vec<f64>,
+        objective: f64,
+        proved_optimal: bool,
+        nodes: usize,
+        best_bound: f64,
+    },
+    /// The search tree was exhausted without an integer-feasible point:
+    /// PROVED infeasible.
     Infeasible,
     Unbounded,
+    /// A node/time limit fired before any incumbent was found. NOT a
+    /// feasibility verdict — the seed conflated this with `Infeasible`,
+    /// which made online re-solves treat timeouts as dead instances.
+    LimitReached { best_bound: f64, nodes: usize },
 }
 
 impl MilpResult {
@@ -53,14 +141,43 @@ impl MilpResult {
     }
 }
 
+/// Minimize `lp` with the variables in `integer_vars` restricted to Z.
+pub fn solve(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> MilpResult {
+    solve_with_stats(lp, integer_vars, opts).0
+}
+
+/// As [`solve`], also returning pivot/warm-start/bound diagnostics.
+pub fn solve_with_stats(
+    lp: &Lp,
+    integer_vars: &[usize],
+    opts: &MilpOptions,
+) -> (MilpResult, MilpStats) {
+    match opts.engine {
+        MilpEngine::Revised => solve_revised(lp, integer_vars, opts),
+        MilpEngine::DenseReference => solve_reference(lp, integer_vars, opts),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Revised engine
+// ---------------------------------------------------------------------------
+
 struct Node {
     bound: f64,
-    extra: Vec<(usize, Cmp, f64)>, // branching bounds (var, cmp, rhs)
+    seq: usize,
+    /// Accumulated (var, lb, ub) overrides along the path from the root.
+    over: Vec<(usize, f64, f64)>,
+    /// Parent's final basis for the dual-simplex warm start.
+    basis: Option<Arc<Basis>>,
+    parent_obj: f64,
+    /// (var, parent fractional part, up-branch) that created this node —
+    /// feeds the pseudo-cost update once the node's LP is solved.
+    branched: Option<(usize, f64, bool)>,
 }
 
 impl PartialEq for Node {
     fn eq(&self, other: &Self) -> bool {
-        self.bound == other.bound
+        self.bound == other.bound && self.seq == other.seq
     }
 }
 impl Eq for Node {}
@@ -71,59 +188,381 @@ impl PartialOrd for Node {
 }
 impl Ord for Node {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // BinaryHeap is a max-heap; we want the LOWEST bound first.
-        other.bound.partial_cmp(&self.bound).unwrap_or(std::cmp::Ordering::Equal)
+        // BinaryHeap is a max-heap; we want the LOWEST bound first, and
+        // FIFO (lowest seq) among ties for determinism.
+        match other.bound.partial_cmp(&self.bound) {
+            Some(std::cmp::Ordering::Equal) | None => other.seq.cmp(&self.seq),
+            Some(o) => o,
+        }
     }
 }
 
-/// Minimize `lp` with the variables in `integer_vars` restricted to Z.
-pub fn solve(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> MilpResult {
-    let start = Instant::now();
-    let root = relax_with(lp, &[]);
-    let root_bound = match root {
-        LpResult::Infeasible => return MilpResult::Infeasible,
-        LpResult::Unbounded => return MilpResult::Unbounded,
-        LpResult::Optimal { objective, .. } => objective,
-    };
+/// Per-variable pseudo-costs: average objective degradation per unit of
+/// fractionality, learned from solved child nodes.
+struct PseudoCosts {
+    up_sum: Vec<f64>,
+    up_n: Vec<usize>,
+    dn_sum: Vec<f64>,
+    dn_n: Vec<usize>,
+}
 
-    let mut heap = BinaryHeap::new();
-    heap.push(Node { bound: root_bound, extra: Vec::new() });
+impl PseudoCosts {
+    fn new(n: usize) -> Self {
+        PseudoCosts {
+            up_sum: vec![0.0; n],
+            up_n: vec![0; n],
+            dn_sum: vec![0.0; n],
+            dn_n: vec![0; n],
+        }
+    }
+
+    fn record(&mut self, j: usize, frac: f64, up: bool, degradation: f64) {
+        let d = degradation.max(0.0);
+        if up {
+            self.up_sum[j] += d / (1.0 - frac).max(1e-6);
+            self.up_n[j] += 1;
+        } else {
+            self.dn_sum[j] += d / frac.max(1e-6);
+            self.dn_n[j] += 1;
+        }
+    }
+
+    /// Product score (Achterberg's rule); unvisited directions default to
+    /// 1.0, which degrades to most-fractional branching.
+    fn score(&self, j: usize, frac: f64) -> f64 {
+        let dn = if self.dn_n[j] > 0 {
+            self.dn_sum[j] / self.dn_n[j] as f64
+        } else {
+            1.0
+        };
+        let up = if self.up_n[j] > 0 {
+            self.up_sum[j] / self.up_n[j] as f64
+        } else {
+            1.0
+        };
+        (dn * frac).max(1e-6) * (up * (1.0 - frac)).max(1e-6)
+    }
+}
+
+fn solve_revised(
+    lp: &Lp,
+    integer_vars: &[usize],
+    opts: &MilpOptions,
+) -> (MilpResult, MilpStats) {
+    let start = Instant::now();
+    let mut stats = MilpStats::default();
+    let sx = Simplex::new(lp);
+    let root = sx.solve_cold(&lp.lower, &lp.upper);
+    stats.lp_pivots += root.info.pivots;
+    let root_obj = match &root.result {
+        LpResult::Infeasible => {
+            stats.best_bound = f64::INFINITY;
+            return (MilpResult::Infeasible, stats);
+        }
+        LpResult::Unbounded => {
+            stats.best_bound = f64::NEG_INFINITY;
+            return (MilpResult::Unbounded, stats);
+        }
+        LpResult::Optimal { objective, .. } => *objective,
+    };
 
     let mut incumbent: Option<(Vec<f64>, f64)> =
         opts.warm_start.as_ref().and_then(|ws| {
             let x = round_ints(ws.clone(), integer_vars);
-            warm_objective(lp, &x).map(|obj| (x, obj))
+            feasible_objective(lp, &x).map(|obj| (x, obj))
         });
-    let mut nodes = 0usize;
-    let mut exhausted = true;
+    let mut pc = PseudoCosts::new(lp.n);
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0usize;
+    // the root re-solves warm from its own basis (a no-op dual pass),
+    // keeping the node loop uniform
+    heap.push(Node {
+        bound: root_obj,
+        seq,
+        over: Vec::new(),
+        basis: root.basis.map(Arc::new),
+        parent_obj: root_obj,
+        branched: None,
+    });
 
-    while let Some(node) = heap.pop() {
-        if nodes >= opts.max_nodes || start.elapsed().as_secs_f64() > opts.time_limit_s {
-            exhausted = false;
+    loop {
+        if stats.nodes >= opts.max_nodes
+            || start.elapsed().as_secs_f64() > opts.time_limit_s
+        {
             break;
         }
-        nodes += 1;
+        // assemble a fixed-size batch of still-interesting nodes
+        let mut batch: Vec<Node> = Vec::new();
+        while batch.len() < BATCH {
+            let Some(node) = heap.pop() else { break };
+            if let Some((_, best)) = &incumbent {
+                if node.bound >= best - opts.gap * best.abs().max(1.0) {
+                    continue;
+                }
+            }
+            batch.push(node);
+        }
+        if batch.is_empty() {
+            break;
+        }
+        // per-node effective bounds
+        let jobs: Vec<(Vec<f64>, Vec<f64>, Option<Arc<Basis>>)> = batch
+            .iter()
+            .map(|n| {
+                let mut lower = lp.lower.clone();
+                let mut upper = lp.upper.clone();
+                for &(j, lo, hi) in &n.over {
+                    lower[j] = lo;
+                    upper[j] = hi;
+                }
+                (lower, upper, n.basis.clone())
+            })
+            .collect();
+        // sibling-subtree LP evaluation — possibly on worker threads; the
+        // output order matches `batch` either way
+        let solved: Vec<(Solved, bool)> =
+            scope_map(opts.threads, jobs, |(lower, upper, basis)| {
+                match basis
+                    .as_deref()
+                    .and_then(|b| sx.solve_warm(&lower, &upper, b))
+                {
+                    Some(s) => (s, true),
+                    None => (sx.solve_cold(&lower, &upper), false),
+                }
+            });
+        // deterministic sequential merge, in batch order
+        for (node, (s, was_warm)) in batch.into_iter().zip(solved) {
+            stats.nodes += 1;
+            stats.lp_pivots += s.info.pivots;
+            if was_warm {
+                stats.warm_hits += 1;
+            } else {
+                stats.warm_misses += 1;
+            }
+            let LpResult::Optimal { x, objective } = s.result else {
+                continue; // infeasible subtree (unbounded cannot appear
+                          // after tightening bounds if the root was bounded)
+            };
+            // A capped node LP is feasible but possibly SUBOPTIMAL: its
+            // objective is an upper estimate, not a valid lower bound.
+            // Fall back to the inherited parent bound for every fathoming
+            // decision so the true optimum can never be pruned away.
+            let capped = s.info.capped;
+            if capped {
+                stats.capped_lps += 1;
+            }
+            let node_bound = if capped { node.bound } else { objective };
+            if let Some((j, frac, up)) = node.branched {
+                if !capped {
+                    pc.record(j, frac, up, objective - node.parent_obj);
+                }
+            }
+            if let Some((_, best)) = &incumbent {
+                if node_bound >= best - opts.gap * best.abs().max(1.0) {
+                    continue;
+                }
+            }
+            // pseudo-cost branching over fractional integer vars
+            let mut branch: Option<(usize, f64, f64)> = None; // (j, score, frac)
+            for &j in integer_vars {
+                let f = x[j] - x[j].floor();
+                if f > 1e-6 && f < 1.0 - 1e-6 {
+                    let score = pc.score(j, f);
+                    if branch.map_or(true, |(_, s, _)| score > s + 1e-12) {
+                        branch = Some((j, score, f));
+                    }
+                }
+            }
+            match branch {
+                None => {
+                    let better = incumbent
+                        .as_ref()
+                        .map_or(true, |(_, best)| objective < *best);
+                    if better {
+                        incumbent =
+                            Some((round_ints(x, integer_vars), objective));
+                    }
+                }
+                Some((j, _, frac)) => {
+                    let floor = x[j].floor();
+                    let basis = s.basis.map(Arc::new);
+                    let (cur_lo, cur_hi) = node
+                        .over
+                        .iter()
+                        .rev()
+                        .find(|&&(v, _, _)| v == j)
+                        .map(|&(_, lo, hi)| (lo, hi))
+                        .unwrap_or((lp.lower[j], lp.upper[j]));
+                    if floor >= cur_lo - 1e-9 {
+                        let mut over = node.over.clone();
+                        over.push((j, cur_lo, floor));
+                        seq += 1;
+                        heap.push(Node {
+                            bound: node_bound,
+                            seq,
+                            over,
+                            basis: basis.clone(),
+                            parent_obj: objective,
+                            branched: Some((j, frac, false)),
+                        });
+                    }
+                    if floor + 1.0 <= cur_hi + 1e-9 {
+                        let mut over = node.over.clone();
+                        over.push((j, floor + 1.0, cur_hi));
+                        seq += 1;
+                        heap.push(Node {
+                            bound: node_bound,
+                            seq,
+                            over,
+                            basis,
+                            parent_obj: objective,
+                            branched: Some((j, frac, true)),
+                        });
+                    }
+                }
+            }
+        }
+    }
 
-        // bound pruning
+    let proved = heap.is_empty();
+    let frontier = heap.peek().map(|n| n.bound);
+    let nodes = stats.nodes;
+    match incumbent {
+        Some((x, objective)) => {
+            let best_bound = frontier.unwrap_or(objective).min(objective);
+            stats.best_bound = best_bound;
+            stats.gap =
+                (objective - best_bound).abs() / objective.abs().max(1.0);
+            (
+                MilpResult::Solved {
+                    x,
+                    objective,
+                    proved_optimal: proved,
+                    nodes,
+                    best_bound,
+                },
+                stats,
+            )
+        }
+        None if proved => {
+            stats.best_bound = f64::INFINITY;
+            (MilpResult::Infeasible, stats)
+        }
+        None => {
+            let best_bound = frontier.unwrap_or(root_obj);
+            stats.best_bound = best_bound;
+            stats.gap = f64::INFINITY;
+            (MilpResult::LimitReached { best_bound, nodes }, stats)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seed reference engine
+// ---------------------------------------------------------------------------
+
+struct RefNode {
+    bound: f64,
+    seq: usize,
+    over: Vec<(usize, f64, f64)>,
+}
+
+impl PartialEq for RefNode {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.seq == other.seq
+    }
+}
+impl Eq for RefNode {}
+impl PartialOrd for RefNode {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RefNode {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match other.bound.partial_cmp(&self.bound) {
+            Some(std::cmp::Ordering::Equal) | None => other.seq.cmp(&self.seq),
+            Some(o) => o,
+        }
+    }
+}
+
+/// The seed algorithm, preserved: most-fractional branching, one dense
+/// tableau rebuilt from scratch per node (bounds land as rows), no warm
+/// starts. Slow by design — it is the "before" in `bench_solver_scale`.
+fn solve_reference(
+    lp: &Lp,
+    integer_vars: &[usize],
+    opts: &MilpOptions,
+) -> (MilpResult, MilpStats) {
+    let start = Instant::now();
+    let mut stats = MilpStats::default();
+    let relax = |over: &[(usize, f64, f64)], stats: &mut MilpStats| {
+        let (res, info) = if over.is_empty() {
+            dense::solve_with_info(lp)
+        } else {
+            let mut relaxed = lp.clone();
+            for &(j, lo, hi) in over {
+                relaxed.lower[j] = lo;
+                relaxed.upper[j] = hi;
+            }
+            dense::solve_with_info(&relaxed)
+        };
+        stats.lp_pivots += info.pivots;
+        stats.warm_misses += 1;
+        if info.capped {
+            stats.capped_lps += 1;
+        }
+        (res, info.capped)
+    };
+
+    let root_bound = match relax(&[], &mut stats).0 {
+        LpResult::Infeasible => {
+            stats.best_bound = f64::INFINITY;
+            return (MilpResult::Infeasible, stats);
+        }
+        LpResult::Unbounded => {
+            stats.best_bound = f64::NEG_INFINITY;
+            return (MilpResult::Unbounded, stats);
+        }
+        LpResult::Optimal { objective, .. } => objective,
+    };
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0usize;
+    heap.push(RefNode { bound: root_bound, seq, over: Vec::new() });
+    let mut incumbent: Option<(Vec<f64>, f64)> =
+        opts.warm_start.as_ref().and_then(|ws| {
+            let x = round_ints(ws.clone(), integer_vars);
+            feasible_objective(lp, &x).map(|obj| (x, obj))
+        });
+
+    while let Some(node) = heap.pop() {
+        if stats.nodes >= opts.max_nodes
+            || start.elapsed().as_secs_f64() > opts.time_limit_s
+        {
+            // push it back so the frontier bound survives for reporting
+            heap.push(node);
+            break;
+        }
         if let Some((_, best)) = &incumbent {
             if node.bound >= best - opts.gap * best.abs().max(1.0) {
                 continue;
             }
         }
-
-        let relaxed = relax_with(lp, &node.extra);
-        let (x, obj) = match relaxed {
-            LpResult::Optimal { x, objective } => (x, objective),
-            _ => continue, // infeasible subtree (unbounded cannot appear
-                           // after adding bounds if root was bounded)
+        stats.nodes += 1;
+        let (res, capped) = relax(&node.over, &mut stats);
+        let LpResult::Optimal { x, objective } = res else {
+            continue;
         };
+        // capped LP objectives are not valid bounds (see solve_revised)
+        let node_bound = if capped { node.bound } else { objective };
         if let Some((_, best)) = &incumbent {
-            if obj >= best - opts.gap * best.abs().max(1.0) {
+            if node_bound >= best - opts.gap * best.abs().max(1.0) {
                 continue;
             }
         }
-
-        // find most fractional integer var
+        // most fractional integer var (the seed rule)
         let mut branch_var = None;
         let mut best_frac = 0.0;
         for &j in integer_vars {
@@ -137,83 +576,104 @@ pub fn solve(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> MilpResult 
                 }
             }
         }
-
         match branch_var {
             None => {
-                // integer feasible
                 let better = incumbent
                     .as_ref()
-                    .map(|(_, best)| obj < *best)
+                    .map(|(_, best)| objective < *best)
                     .unwrap_or(true);
                 if better {
-                    incumbent = Some((round_ints(x, integer_vars), obj));
+                    incumbent = Some((round_ints(x, integer_vars), objective));
                 }
             }
             Some(j) => {
                 let floor = x[j].floor();
-                let mut left = node.extra.clone();
-                left.push((j, Cmp::Le, floor));
-                let mut right = node.extra;
-                right.push((j, Cmp::Ge, floor + 1.0));
-                heap.push(Node { bound: obj, extra: left });
-                heap.push(Node { bound: obj, extra: right });
+                let (cur_lo, cur_hi) = node
+                    .over
+                    .iter()
+                    .rev()
+                    .find(|&&(v, _, _)| v == j)
+                    .map(|&(_, lo, hi)| (lo, hi))
+                    .unwrap_or((lp.lower[j], lp.upper[j]));
+                if floor >= cur_lo - 1e-9 {
+                    let mut over = node.over.clone();
+                    over.push((j, cur_lo, floor));
+                    seq += 1;
+                    heap.push(RefNode { bound: node_bound, seq, over });
+                }
+                if floor + 1.0 <= cur_hi + 1e-9 {
+                    let mut over = node.over.clone();
+                    over.push((j, floor + 1.0, cur_hi));
+                    seq += 1;
+                    heap.push(RefNode { bound: node_bound, seq, over });
+                }
             }
         }
     }
 
+    let proved = heap.is_empty();
+    let frontier = heap.peek().map(|n| n.bound);
+    let nodes = stats.nodes;
     match incumbent {
-        Some((x, objective)) => MilpResult::Solved {
-            x,
-            objective,
-            proved_optimal: exhausted,
-            nodes,
-        },
+        Some((x, objective)) => {
+            let best_bound = frontier.unwrap_or(objective).min(objective);
+            stats.best_bound = best_bound;
+            stats.gap =
+                (objective - best_bound).abs() / objective.abs().max(1.0);
+            (
+                MilpResult::Solved {
+                    x,
+                    objective,
+                    proved_optimal: proved,
+                    nodes,
+                    best_bound,
+                },
+                stats,
+            )
+        }
+        None if proved => {
+            stats.best_bound = f64::INFINITY;
+            (MilpResult::Infeasible, stats)
+        }
         None => {
-            if exhausted {
-                MilpResult::Infeasible
-            } else {
-                // limits hit before any integer solution was found
-                MilpResult::Infeasible
-            }
+            let best_bound = frontier.unwrap_or(root_bound);
+            stats.best_bound = best_bound;
+            stats.gap = f64::INFINITY;
+            (MilpResult::LimitReached { best_bound, nodes }, stats)
         }
     }
 }
 
-/// Objective value of `x` if it satisfies every constraint of `lp` (the
-/// integer restriction is the caller's concern — `x` arrives pre-rounded);
-/// `None` when infeasible. Used to vet warm starts.
-fn warm_objective(lp: &Lp, x: &[f64]) -> Option<f64> {
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Objective value of `x` if it satisfies every constraint AND bound of
+/// `lp` (the integer restriction is the caller's concern — `x` arrives
+/// pre-rounded); `None` when infeasible. Used to vet warm starts.
+fn feasible_objective(lp: &Lp, x: &[f64]) -> Option<f64> {
     if x.len() != lp.n {
         return None;
     }
     let tol = 1e-6;
-    if x.iter().any(|&v| v < -tol) {
-        return None;
+    for j in 0..lp.n {
+        if x[j] < lp.lower[j] - tol || x[j] > lp.upper[j] + tol {
+            return None;
+        }
     }
     for c in &lp.constraints {
         let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
         let slack = tol * (1.0 + c.rhs.abs() + lhs.abs());
         let ok = match c.cmp {
-            Cmp::Le => lhs <= c.rhs + slack,
-            Cmp::Ge => lhs >= c.rhs - slack,
-            Cmp::Eq => (lhs - c.rhs).abs() <= slack,
+            crate::solver::lp::Cmp::Le => lhs <= c.rhs + slack,
+            crate::solver::lp::Cmp::Ge => lhs >= c.rhs - slack,
+            crate::solver::lp::Cmp::Eq => (lhs - c.rhs).abs() <= slack,
         };
         if !ok {
             return None;
         }
     }
     Some(x.iter().zip(&lp.objective).map(|(xi, ci)| xi * ci).sum())
-}
-
-fn relax_with(lp: &Lp, extra: &[(usize, Cmp, f64)]) -> LpResult {
-    if extra.is_empty() {
-        return lp_solve(lp);
-    }
-    let mut relaxed = lp.clone();
-    for &(j, cmp, rhs) in extra {
-        relaxed.add(vec![(j, 1.0)], cmp, rhs);
-    }
-    lp_solve(&relaxed)
 }
 
 fn round_ints(mut x: Vec<f64>, ints: &[usize]) -> Vec<f64> {
@@ -226,6 +686,7 @@ fn round_ints(mut x: Vec<f64>, ints: &[usize]) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solver::lp::Cmp;
 
     fn assert_close(a: f64, b: f64) {
         assert!((a - b).abs() < 1e-5, "{a} != {b}");
@@ -268,7 +729,10 @@ mod tests {
         let mut lp = Lp::new(1);
         lp.bound_ge(0, 0.4);
         lp.bound_le(0, 0.6);
-        assert_eq!(solve(&lp, &[0], &MilpOptions::default()), MilpResult::Infeasible);
+        assert_eq!(
+            solve(&lp, &[0], &MilpOptions::default()),
+            MilpResult::Infeasible
+        );
     }
 
     #[test]
@@ -292,8 +756,10 @@ mod tests {
         let mut rng = Rng::new(99);
         for _case in 0..25 {
             let n = 8;
-            let values: Vec<f64> = (0..n).map(|_| rng.range(1, 30) as f64).collect();
-            let weights: Vec<f64> = (0..n).map(|_| rng.range(1, 12) as f64).collect();
+            let values: Vec<f64> =
+                (0..n).map(|_| rng.range(1, 30) as f64).collect();
+            let weights: Vec<f64> =
+                (0..n).map(|_| rng.range(1, 12) as f64).collect();
             let cap = rng.range(10, 40) as f64;
 
             // brute force over 2^n
@@ -398,5 +864,106 @@ mod tests {
         let opts = MilpOptions { max_nodes: 2, ..Default::default() };
         // Must terminate quickly regardless of outcome.
         let _ = solve(&lp, &(0..6).collect::<Vec<_>>(), &opts);
+    }
+
+    #[test]
+    fn limit_reached_is_distinct_from_infeasible() {
+        // limits hit before any incumbent -> LimitReached, NOT Infeasible
+        let lp = knapsack_lp();
+        let opts = MilpOptions { max_nodes: 0, ..Default::default() };
+        match solve(&lp, &[0, 1, 2], &opts) {
+            MilpResult::LimitReached { best_bound, nodes } => {
+                assert_eq!(nodes, 0);
+                assert!(best_bound <= -20.0 + 1e-6,
+                        "bound {best_bound} above the optimum");
+            }
+            other => panic!("expected LimitReached, got {other:?}"),
+        }
+        // a PROVED infeasible instance still reports Infeasible
+        let mut bad = Lp::new(1);
+        bad.bound_ge(0, 0.4);
+        bad.bound_le(0, 0.6);
+        assert_eq!(
+            solve(&bad, &[0], &MilpOptions::default()),
+            MilpResult::Infeasible
+        );
+    }
+
+    #[test]
+    fn engines_agree_on_random_knapsacks() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(321);
+        for _case in 0..10 {
+            let n = 6;
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_obj(j, -(rng.range(1, 20) as f64));
+                lp.bound_le(j, 1.0);
+            }
+            let weights: Vec<(usize, f64)> =
+                (0..n).map(|j| (j, rng.range(1, 9) as f64)).collect();
+            lp.add(weights, Cmp::Le, rng.range(6, 25) as f64);
+            let ints: Vec<usize> = (0..n).collect();
+            let revised = solve(&lp, &ints, &MilpOptions::default());
+            let reference = solve(&lp, &ints, &MilpOptions {
+                engine: MilpEngine::DenseReference,
+                ..Default::default()
+            });
+            let (_, a) = revised.solution().expect("revised solved");
+            let (_, b) = reference.solution().expect("reference solved");
+            assert_close(a, b);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_answer() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(555);
+        let n = 10;
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_obj(j, -(rng.range(1, 25) as f64));
+            lp.bound_le(j, 1.0);
+        }
+        lp.add((0..n).map(|j| (j, rng.range(1, 9) as f64)).collect(),
+               Cmp::Le, 18.0);
+        let ints: Vec<usize> = (0..n).collect();
+        let base = solve_with_stats(&lp, &ints, &MilpOptions::default());
+        for threads in [2usize, 4] {
+            let par = solve_with_stats(&lp, &ints, &MilpOptions {
+                threads,
+                ..Default::default()
+            });
+            assert_eq!(base.0, par.0, "threads={threads}");
+            assert_eq!(base.1.nodes, par.1.nodes, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn warm_basis_hits_are_reported() {
+        // any instance that branches must re-solve children from the
+        // parent basis (plus the uniform warm root re-solve)
+        let lp = knapsack_lp();
+        let (res, stats) =
+            solve_with_stats(&lp, &[0, 1, 2], &MilpOptions::default());
+        assert!(res.solution().is_some());
+        assert!(stats.warm_hits > 0, "no warm-basis node solves");
+        assert!(stats.warm_hit_rate() > 0.0);
+        assert!(stats.lp_pivots > 0);
+    }
+
+    #[test]
+    fn best_bound_closes_when_proved() {
+        let lp = knapsack_lp();
+        let (res, stats) =
+            solve_with_stats(&lp, &[0, 1, 2], &MilpOptions::default());
+        let MilpResult::Solved { objective, proved_optimal, best_bound, .. } =
+            res
+        else {
+            panic!("expected solved");
+        };
+        assert!(proved_optimal);
+        assert!(best_bound <= objective + 1e-9);
+        assert!(stats.gap < 0.01, "gap {}", stats.gap);
     }
 }

@@ -1,8 +1,13 @@
 //! Optimization substrates: LP simplex + MILP branch-and-bound.
 //!
-//! The paper formulates joint (parallelism, allocation, schedule) selection
-//! as an MILP and solves it with Gurobi; this module is the open
-//! replacement. `saturn::solver` builds the actual formulation.
+//! The paper formulates joint (parallelism, allocation, schedule)
+//! selection as an MILP and solves it with Gurobi; this module is the
+//! open replacement. `lp` is the production bounded-variable revised
+//! simplex (sparse columns, basis warm starts, dual-simplex re-solves);
+//! `dense` keeps the seed two-phase dense tableau as a reference oracle
+//! and perf baseline; `milp` runs warm-started branch-and-bound on top.
+//! `saturn::solver` builds the actual formulation.
 
+pub mod dense;
 pub mod lp;
 pub mod milp;

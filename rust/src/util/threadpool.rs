@@ -73,6 +73,54 @@ impl ThreadPool {
     }
 }
 
+/// Rayon-like parallel map over BORROWED data via `std::thread::scope`:
+/// no `'static` bound, so callers can capture references to stack state
+/// (the MILP hands out `&Simplex` plus per-node bound vectors). Spawns up
+/// to `threads` scoped workers, each mapping a strided share of `items`;
+/// the output order always matches the input order, so a deterministic
+/// caller gets identical results for every thread count (including 1,
+/// which short-circuits to a plain sequential map).
+pub fn scope_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut shares: Vec<Vec<(usize, T)>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        shares[i % threads].push((i, item));
+    }
+    let f = &f;
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = shares
+            .into_iter()
+            .map(|share| {
+                s.spawn(move || {
+                    share
+                        .into_iter()
+                        .map(|(i, t)| (i, f(t)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scope_map worker"))
+            .collect()
+    });
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|x| x.expect("all indices mapped")).collect()
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.tx.take()); // closes channel; workers exit
@@ -111,6 +159,27 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..100).collect::<Vec<i64>>(), |x| x * x);
         assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn scope_map_borrows_and_preserves_order() {
+        let base: Vec<i64> = (0..97).collect();
+        // closure borrows `base` from the stack — no 'static anywhere
+        let f = |i: usize| base[i] * base[i];
+        let serial = scope_map(1, (0..97).collect::<Vec<usize>>(), f);
+        for threads in [2usize, 3, 8] {
+            let parallel = scope_map(threads, (0..97).collect(), f);
+            assert_eq!(parallel, serial, "threads={threads}");
+        }
+        assert_eq!(serial[10], 100);
+    }
+
+    #[test]
+    fn scope_map_handles_empty_and_tiny_inputs() {
+        let out: Vec<i32> = scope_map(4, Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+        let out = scope_map(4, vec![7], |x: i32| x + 1);
+        assert_eq!(out, vec![8]);
     }
 
     #[test]
