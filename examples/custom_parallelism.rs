@@ -27,19 +27,19 @@ impl Parallelism for TensorParallel {
 
     fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
               batch: u32) -> Option<StepEstimate> {
-        if gpus == 0 || gpus > cluster.node.gpus_per_node {
+        if gpus == 0 || gpus > cluster.gpus_per_node() {
             return None; // TP stays inside the NVLink domain
         }
-        if model.hidden % gpus as u32 != 0 {
+        if model.hidden % gpus != 0 {
             return None;
         }
         let mem = model.state_bytes() / gpus as f64
             + model.act_bytes_per_sample * batch as f64; // acts replicated
-        if mem > cluster.node.gpu.usable_bytes() {
+        if mem > cluster.gpu().usable_bytes() {
             return None;
         }
         let compute = model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * self.mfu);
+            / (gpus as f64 * cluster.gpu().peak_flops * self.mfu);
         // 4 all-reduces/layer (fwd+bwd) over activations
         let act_bytes = model.act_bytes_per_sample * batch as f64
             / model.layers as f64;
@@ -47,7 +47,7 @@ impl Parallelism for TensorParallel {
             0.0
         } else {
             4.0 * model.layers as f64 * 2.0 * (gpus as f64 - 1.0)
-                / gpus as f64 * act_bytes / cluster.node.intra_bw
+                / gpus as f64 * act_bytes / cluster.intra_bw()
         };
         let step = compute + 0.5 * comm;
         Some(StepEstimate { step_time_s: step, mem_per_gpu: mem,

@@ -1,0 +1,143 @@
+//! Bench E14: heterogeneous fleets — the joint solver on a mixed
+//! A100+H100 fleet vs a homogeneous all-A100 fleet of (approximately)
+//! equivalent peak FLOPs, plus the DEGENERATE single-class probe: an
+//! all-A100 fleet routed through the per-class machinery must reproduce
+//! the pre-heterogeneity pooled formulation's objective to 1e-6 (ISSUE 3
+//! acceptance bar; also asserted in CI from the emitted record).
+//!
+//! Emits a machine-readable perf record to `BENCH_hetero.json`
+//! (override with `SATURN_BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_hetero`
+
+use saturn::bench::{print_header, print_stats, Bencher};
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::plan::SaturnPlan;
+use saturn::saturn::solver::{plan_selection_probe,
+                             plan_selection_probe_pooled, solve_joint,
+                             SolverMode};
+use saturn::solver::milp::MilpEngine;
+use saturn::trials::{profile_analytic, ProfileTable};
+use saturn::util::json::Json;
+use saturn::workload::toy_workload;
+
+fn setup(n: usize, cluster: &ClusterSpec)
+    -> (Vec<(usize, u64)>, ProfileTable) {
+    let jobs = toy_workload(n);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, cluster);
+    let remaining = jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    (remaining, profiles)
+}
+
+/// Solve one fleet and reduce to a JSON cell (+ the plan for inspection).
+fn run_fleet(bencher: &Bencher, tag: &str, cluster: &ClusterSpec, n: usize)
+    -> (Json, SaturnPlan) {
+    let (remaining, profiles) = setup(n, cluster);
+    let mut plan: Option<SaturnPlan> = None;
+    let stats = bencher.run_fn(&format!("{tag}/jobs={n}"), || {
+        let (p, _) = solve_joint(&remaining, &profiles, cluster,
+                                 SolverMode::Joint);
+        plan = Some(p);
+    });
+    print_stats(&stats);
+    let plan = plan.expect("ran at least once");
+    let class_jobs: Vec<Json> = (0..cluster.n_classes())
+        .map(|ci| {
+            Json::num(plan.choices.iter().filter(|p| p.class == ci).count()
+                      as f64)
+        })
+        .collect();
+    let class_area: Vec<Json> = (0..cluster.n_classes())
+        .map(|ci| Json::num(plan.area_in_class(ci)))
+        .collect();
+    let cell = Json::obj(vec![
+        ("fleet", Json::str(&cluster.fleet_desc())),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("peak_tflops", Json::num(cluster.peak_flops() / 1e12)),
+        ("makespan_s", Json::num(plan.predicted_makespan_s)),
+        ("lower_bound_s", Json::num(plan.lower_bound_s)),
+        ("solve_wall_s", Json::num(stats.mean_s)),
+        ("class_jobs", Json::arr(class_jobs.into_iter())),
+        ("class_area_s", Json::arr(class_area.into_iter())),
+    ]);
+    (cell, plan)
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let fast = std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 12 } else { 24 };
+
+    // ------------------------------------------------------------------
+    // mixed fleet vs homogeneous-equivalent-FLOPs fleet
+    // ------------------------------------------------------------------
+    let mixed = ClusterSpec::hetero(2, 2); // 16x A100 + 16x H100
+    let a100_peak = saturn::cluster::GpuSpec::a100_40gb().peak_flops;
+    // all-A100 fleet of ~equal peak FLOPs, rounded to whole nodes
+    let equiv_nodes =
+        ((mixed.peak_flops() / a100_peak / 8.0).round() as u32).max(1);
+    let homog = ClusterSpec::p4d(equiv_nodes);
+
+    print_header(&format!(
+        "mixed fleet [{}] vs homogeneous-equivalent-FLOPs [{}]",
+        mixed.fleet_desc(), homog.fleet_desc()));
+    let (mixed_cell, mixed_plan) = run_fleet(&bencher, "mixed", &mixed, n);
+    let (homog_cell, homog_plan) = run_fleet(&bencher, "homog", &homog, n);
+    let flops_ratio = homog.peak_flops() / mixed.peak_flops();
+    println!("mixed {:.0}s vs homogeneous {:.0}s (homog fleet carries \
+              {:.0}% of the mixed fleet's FLOPs)",
+             mixed_plan.predicted_makespan_s,
+             homog_plan.predicted_makespan_s, 100.0 * flops_ratio);
+    let h100_jobs = mixed_plan.choices.iter().filter(|p| p.class == 1).count();
+    println!("mixed plan: {h100_jobs}/{n} jobs on the H100 class, \
+              per-class area {:.0}s / {:.0}s",
+             mixed_plan.area_in_class(0), mixed_plan.area_in_class(1));
+    assert!(h100_jobs > 0,
+            "the joint solver left the H100 class completely idle");
+
+    // ------------------------------------------------------------------
+    // degenerate single-class probe: per-class path == pooled seed path
+    // ------------------------------------------------------------------
+    print_header("degenerate all-A100 fleet: per-class vs pooled objective");
+    let degen_jobs = 10usize;
+    let degen_cluster = ClusterSpec::p4d(2);
+    let (remaining, profiles) = setup(degen_jobs, &degen_cluster);
+    let (class_obj, class_stats) =
+        plan_selection_probe(&remaining, &profiles, &degen_cluster,
+                             MilpEngine::Revised)
+            .expect("per-class probe solved");
+    let (pooled_obj, pooled_stats) =
+        plan_selection_probe_pooled(&remaining, &profiles, &degen_cluster,
+                                    MilpEngine::Revised)
+            .expect("pooled probe solved");
+    let rel_delta =
+        (class_obj - pooled_obj).abs() / pooled_obj.abs().max(1.0);
+    println!("per-class {class_obj:.6}s ({} nodes) vs pooled \
+              {pooled_obj:.6}s ({} nodes), rel delta {rel_delta:.2e}",
+             class_stats.milp_nodes, pooled_stats.milp_nodes);
+    assert!(rel_delta <= 1e-6,
+            "degenerate fleet diverged from the homogeneous solver: \
+             {class_obj} vs {pooled_obj}");
+
+    // machine-readable perf record
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hetero.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("hetero")),
+        ("jobs", Json::num(n as f64)),
+        ("mixed", mixed_cell),
+        ("homogeneous", homog_cell),
+        ("flops_ratio", Json::num(flops_ratio)),
+        ("degenerate", Json::obj(vec![
+            ("jobs", Json::num(degen_jobs as f64)),
+            ("fleet", Json::str(&degen_cluster.fleet_desc())),
+            ("pooled_objective_s", Json::num(pooled_obj)),
+            ("class_objective_s", Json::num(class_obj)),
+            ("objective_rel_delta", Json::num(rel_delta)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("\nwrote {out}");
+}

@@ -7,6 +7,27 @@
 //! resource usage, which is exactly what the paper critiques).
 
 use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::sim::placement::FreeState;
+
+/// The fastest whole-node (class, tech, gpus) for `job` among classes
+/// that still have a free node. Shared by the batch and online
+/// current-practice baselines.
+pub(crate) fn best_free_node(ctx: &PlanContext, free: &FreeState,
+                             job: usize) -> Option<(usize, usize, u32)> {
+    let mut best: Option<(usize, usize, u32, f64)> = None;
+    for ci in 0..ctx.cluster.n_classes() {
+        let g = ctx.cluster.class(ci).node.gpus_per_node;
+        if !free.can_place(ci, g) {
+            continue;
+        }
+        if let Some((tech, t)) = ctx.profiles.best_at(job, g, ci) {
+            if best.map(|b| t < b.3).unwrap_or(true) {
+                best = Some((ci, tech, g, t));
+            }
+        }
+    }
+    best.map(|(ci, tech, g, _)| (ci, tech, g))
+}
 
 #[derive(Default)]
 pub struct CurrentPractice;
@@ -17,14 +38,17 @@ impl Policy for CurrentPractice {
     }
 
     fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
-        let g = ctx.cluster.node.gpus_per_node;
         let mut free = ctx.free.clone();
         let mut out = Vec::new();
-        // FIFO over pending jobs; one whole node each
+        // FIFO over pending jobs; one whole node each. On a mixed fleet
+        // the practitioner grabs the fastest class that has a free node
+        // (everyone asks for the H100s first — exactly the contention the
+        // joint solver is supposed to beat).
         for s in ctx.jobs.iter().filter(|s| s.is_pending()) {
-            if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
-                if free.place(g).is_some() {
-                    out.push(Launch { job_id: s.job.id, tech, gpus: g });
+            if let Some((class, tech, g)) = best_free_node(ctx, &free, s.job.id)
+            {
+                if free.place(class, g).is_some() {
+                    out.push(Launch { job_id: s.job.id, tech, gpus: g, class });
                 }
             }
         }
@@ -53,11 +77,27 @@ mod tests {
         let expected: f64 = jobs
             .iter()
             .map(|j| {
-                let (t, _) = profiles.best_at(j.id, 8).unwrap();
-                profiles.step_time(j.id, t, 8).unwrap() * j.total_steps() as f64
+                let (t, _) = profiles.best_at(j.id, 8, 0).unwrap();
+                profiles.step_time(j.id, t, 8, 0).unwrap()
+                    * j.total_steps() as f64
             })
             .sum();
         assert!((r.makespan_s - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn mixed_fleet_grabs_the_fast_class_first() {
+        // one A100 node + one H100 node: whole-node FIFO still completes
+        // everything, and at least one job lands on each class (twelve
+        // jobs cannot all fit the single H100 node at once)
+        let jobs = wikitext_workload();
+        let cluster = ClusterSpec::hetero(1, 1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let r = simulate(&jobs, &profiles, &cluster, &mut CurrentPractice,
+                         &SimConfig::default());
+        assert_eq!(r.finish_times.len(), 12);
+        assert!(r.gpu_utilization <= 1.0 + 1e-9);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!    re-run with preempt-and-replan at every arrival/departure event
 //!    (the natural online extension of `OptimusDynamic`).
 
+use crate::baselines::current_practice::best_free_node;
 use crate::baselines::optimus::greedy_allocation;
 use crate::sim::engine::{Launch, PlanContext, Policy};
 
@@ -24,7 +25,6 @@ impl Policy for OnlineCurrentPractice {
     }
 
     fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
-        let g = ctx.cluster.node.gpus_per_node;
         let mut pending: Vec<_> =
             ctx.jobs.iter().filter(|s| s.is_pending()).collect();
         pending.sort_by(|a, b| {
@@ -36,9 +36,10 @@ impl Policy for OnlineCurrentPractice {
         let mut free = ctx.free.clone();
         let mut out = Vec::new();
         for s in pending {
-            if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
-                if free.place(g).is_some() {
-                    out.push(Launch { job_id: s.job.id, tech, gpus: g });
+            if let Some((class, tech, g)) = best_free_node(ctx, &free, s.job.id)
+            {
+                if free.place(class, g).is_some() {
+                    out.push(Launch { job_id: s.job.id, tech, gpus: g, class });
                 }
             }
         }
@@ -50,14 +51,9 @@ impl Policy for OnlineCurrentPractice {
 /// preempts the cluster and re-runs the greedy marginal-gain allocation
 /// over all unfinished jobs (checkpoint lag charged on shape changes by
 /// the engine). Optional periodic introspection on top.
+#[derive(Default)]
 pub struct OnlineOptimus {
     pub introspect_every_s: Option<f64>,
-}
-
-impl Default for OnlineOptimus {
-    fn default() -> Self {
-        OnlineOptimus { introspect_every_s: None }
-    }
 }
 
 impl Policy for OnlineOptimus {

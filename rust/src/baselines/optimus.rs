@@ -22,69 +22,96 @@ pub(crate) fn greedy_allocation(ctx: &PlanContext) -> Vec<Launch> {
     if pending.is_empty() {
         return Vec::new();
     }
-    let options = &ctx.profiles.gpu_options; // sorted ascending
-    let mut alloc: Vec<u32> = vec![0; ctx.jobs.len()];
-    let mut budget = ctx.free.total_free();
+    let n_classes = ctx.profiles.n_classes();
+    // per-class GPU budgets: Optimus hands out quanta within a class (a
+    // job's collective group never spans classes)
+    let mut budget: Vec<u32> =
+        (0..n_classes).map(|ci| ctx.free.class_free(ci)).collect();
+    // job -> (class, gpus); the first quantum picks the class
+    let mut alloc: Vec<Option<(usize, u32)>> = vec![None; ctx.jobs.len()];
 
-    // remaining runtime for job j at allocation level g (None: infeasible)
-    let runtime = |job_id: usize, g: u32| -> Option<f64> {
+    // remaining runtime for job j at (class, g) (None: infeasible)
+    let runtime = |job_id: usize, class: usize, g: u32| -> Option<f64> {
         let steps = ctx.jobs[job_id].remaining_steps() as f64;
-        ctx.profiles.best_at(job_id, g).map(|(_, t)| t * steps)
+        ctx.profiles.best_at(job_id, g, class).map(|(_, t)| t * steps)
     };
 
-    // Optimus quantum: step each job up the allocation ladder
+    // Optimus quantum: step each job up its class's allocation ladder
     loop {
-        let mut best: Option<(usize, u32, f64)> = None; // (job, next_g, gain/gpu)
+        // (job, class, next_g, gain/gpu)
+        let mut best: Option<(usize, usize, u32, f64)> = None;
         for &j in &pending {
-            let cur = alloc[j];
-            // next FEASIBLE rung (e.g. GPT-J may be infeasible below 8 GPUs)
-            let next = options
-                .iter()
-                .copied()
-                .find(|&g| g > cur && runtime(j, g).is_some());
-            let Some(next) = next else { continue };
-            let delta_g = next - cur;
-            if delta_g > budget {
-                continue;
-            }
-            let cur_rt = if cur == 0 {
-                f64::INFINITY // unscheduled job: infinite remaining time
-            } else {
-                match runtime(j, cur) {
-                    Some(t) => t,
-                    None => f64::INFINITY,
+            match alloc[j] {
+                None => {
+                    // first quantum: the smallest feasible rung of EVERY
+                    // class competes; gain prioritizes by resulting
+                    // throughput (making the job runnable at all)
+                    for (ci, &cap) in budget.iter().enumerate() {
+                        let next = ctx.profiles.class_gpu_options[ci]
+                            .iter()
+                            .copied()
+                            .find(|&g| runtime(j, ci, g).is_some());
+                        let Some(next) = next else { continue };
+                        if next > cap {
+                            continue;
+                        }
+                        let next_rt = runtime(j, ci, next)
+                            .expect("feasibility checked above");
+                        let gain = 1e12 / next_rt.max(1e-9);
+                        if gain > 0.0
+                            && best.map(|b| gain > b.3).unwrap_or(true)
+                        {
+                            best = Some((j, ci, next, gain));
+                        }
+                    }
                 }
-            };
-            let next_rt = runtime(j, next).expect("feasibility checked above");
-            let gain = if cur_rt.is_infinite() {
-                // first quantum: gain dominated by making the job runnable;
-                // Optimus prioritizes by resulting throughput
-                1e12 / next_rt.max(1e-9)
-            } else {
-                (cur_rt - next_rt).max(0.0) / delta_g as f64
-            };
-            if gain > 0.0 && best.map(|b| gain > b.2).unwrap_or(true) {
-                best = Some((j, next, gain));
+                Some((ci, cur)) => {
+                    // next FEASIBLE rung within the assigned class (e.g.
+                    // GPT-J may be infeasible below 8 GPUs)
+                    let next = ctx.profiles.class_gpu_options[ci]
+                        .iter()
+                        .copied()
+                        .find(|&g| g > cur && runtime(j, ci, g).is_some());
+                    let Some(next) = next else { continue };
+                    let delta_g = next - cur;
+                    if delta_g > budget[ci] {
+                        continue;
+                    }
+                    let cur_rt = match runtime(j, ci, cur) {
+                        Some(t) => t,
+                        None => f64::INFINITY,
+                    };
+                    let next_rt = runtime(j, ci, next)
+                        .expect("feasibility checked above");
+                    let gain = if cur_rt.is_infinite() {
+                        1e12 / next_rt.max(1e-9)
+                    } else {
+                        (cur_rt - next_rt).max(0.0) / delta_g as f64
+                    };
+                    if gain > 0.0 && best.map(|b| gain > b.3).unwrap_or(true)
+                    {
+                        best = Some((j, ci, next, gain));
+                    }
+                }
             }
         }
-        let Some((j, next, _)) = best else { break };
-        budget -= next - alloc[j];
-        alloc[j] = next;
+        let Some((j, ci, next, _)) = best else { break };
+        budget[ci] -= next - alloc[j].map(|(_, g)| g).unwrap_or(0);
+        alloc[j] = Some((ci, next));
     }
 
     // realize: check placement feasibility in allocation order
     let mut free = ctx.free.clone();
     let mut out = Vec::new();
     let mut jobs_sorted = pending.clone();
-    jobs_sorted.sort_by_key(|&j| std::cmp::Reverse(alloc[j]));
+    jobs_sorted.sort_by_key(|&j| {
+        std::cmp::Reverse(alloc[j].map(|(_, g)| g).unwrap_or(0))
+    });
     for j in jobs_sorted {
-        let g = alloc[j];
-        if g == 0 {
-            continue;
-        }
-        if let Some((tech, _)) = ctx.profiles.best_at(j, g) {
-            if free.place(g).is_some() {
-                out.push(Launch { job_id: j, tech, gpus: g });
+        let Some((ci, g)) = alloc[j] else { continue };
+        if let Some((tech, _)) = ctx.profiles.best_at(j, g, ci) {
+            if free.place(ci, g).is_some() {
+                out.push(Launch { job_id: j, tech, gpus: g, class: ci });
             }
         }
     }

@@ -7,8 +7,8 @@ use crate::util::rng::Rng;
 
 pub struct RandomPolicy {
     rng: Rng,
-    /// job_id -> (tech, gpus); drawn lazily on first plan() call.
-    assignment: Vec<Option<(usize, u32)>>,
+    /// job_id -> (tech, gpus, class); drawn lazily on first plan() call.
+    assignment: Vec<Option<(usize, u32, usize)>>,
     order: Vec<usize>,
     initialized: bool,
 }
@@ -27,12 +27,15 @@ impl RandomPolicy {
         let n = ctx.jobs.len();
         self.assignment = vec![None; n];
         for s in ctx.jobs {
-            // draw uniformly over the FEASIBLE grid
+            // draw uniformly over the FEASIBLE (tech, gpus, class) grid
             let mut options = Vec::new();
             for t in 0..ctx.profiles.n_techniques {
-                for &g in &ctx.profiles.gpu_options {
-                    if ctx.profiles.step_time(s.job.id, t, g).is_some() {
-                        options.push((t, g));
+                for ci in 0..ctx.profiles.n_classes() {
+                    for &g in &ctx.profiles.class_gpu_options[ci] {
+                        if ctx.profiles.step_time(s.job.id, t, g, ci).is_some()
+                        {
+                            options.push((t, g, ci));
+                        }
                     }
                 }
             }
@@ -63,9 +66,11 @@ impl Policy for RandomPolicy {
             if !s.is_pending() {
                 continue;
             }
-            let Some((tech, gpus)) = self.assignment[job_id] else { continue };
-            if free.place(gpus).is_some() {
-                out.push(Launch { job_id, tech, gpus });
+            let Some((tech, gpus, class)) = self.assignment[job_id] else {
+                continue;
+            };
+            if free.place(class, gpus).is_some() {
+                out.push(Launch { job_id, tech, gpus, class });
             }
         }
         out

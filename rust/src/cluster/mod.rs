@@ -1,10 +1,12 @@
 //! Cluster substrate: hardware specifications of the simulated GPU fleet.
 //!
 //! The paper evaluates on AWS `p4d.24xlarge` nodes (8x A100-40GB, NVSwitch
-//! intra-node, EFA inter-node). No GPUs exist on this testbed, so the specs
-//! here drive the analytic cost models in `parallelism/` and the
-//! discrete-event simulator in `sim/` (DESIGN.md §Hardware-Adaptation).
+//! intra-node, EFA inter-node); the heterogeneous extension adds
+//! `p5.48xlarge` (8x H100-80GB) node groups so a fleet partitions into GPU
+//! classes. No GPUs exist on this testbed, so the specs here drive the
+//! analytic cost models in `parallelism/` and the discrete-event simulator
+//! in `sim/` (DESIGN.md §Hardware-Adaptation, §Fleets).
 
 pub mod specs;
 
-pub use specs::{ClusterSpec, GpuSpec, NodeSpec};
+pub use specs::{ClusterSpec, GpuClass, GpuSpec, NodeSpec};

@@ -1,12 +1,24 @@
-//! Hardware constants for the simulated fleet.
+//! Hardware constants for the simulated fleet, including heterogeneous
+//! (multi-class) fleets mixing GPU generations.
 //!
 //! Sources for the numbers (cited so the calibration is auditable):
 //!  * A100-40GB SXM: 312 TFLOP/s bf16 dense, 40 GB HBM2e (NVIDIA A100
 //!    datasheet, 2020).
+//!  * H100-80GB SXM: 989 TFLOP/s bf16 dense (non-sparse), 80 GB HBM3
+//!    (NVIDIA H100 datasheet, 2022).
 //!  * p4d.24xlarge: 8x A100-40GB, 600 GB/s NVSwitch per-GPU bidirectional
 //!    (we use 240 GB/s effective all-reduce bus bandwidth, the standard
 //!    NCCL ring-effective figure), 400 Gbps EFA => ~50 GB/s, PCIe gen4
 //!    x16 => 32 GB/s (AWS EC2 docs, 2021).
+//!  * p5.48xlarge: 8x H100-80GB, 900 GB/s NVSwitch per-GPU (=> 360 GB/s
+//!    ring-effective at the same 0.4 ratio), 3200 Gbps EFA, PCIe gen5
+//!    x16 => 64 GB/s (AWS EC2 docs, 2023).
+//!
+//! A fleet is a list of **GPU classes** (homogeneous node groups). The
+//! parallelism cost models always receive a single-class *view*
+//! ([`ClusterSpec::class_view`]) so step times and memory feasibility are
+//! computed against that class's `GpuSpec` and bandwidths; the solver and
+//! placement layers then treat the class index as a first-class dimension.
 
 /// A single accelerator.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,6 +35,14 @@ impl GpuSpec {
             name: "A100-40GB".into(),
             mem_bytes: 40e9,
             peak_flops: 312e12,
+        }
+    }
+
+    pub fn h100_80gb() -> Self {
+        GpuSpec {
+            name: "H100-80GB".into(),
+            mem_bytes: 80e9,
+            peak_flops: 989e12,
         }
     }
 
@@ -57,57 +77,248 @@ impl NodeSpec {
             pcie_bw: 32e9,
         }
     }
+
+    pub fn p5_48xlarge() -> Self {
+        NodeSpec {
+            gpus_per_node: 8,
+            gpu: GpuSpec::h100_80gb(),
+            intra_bw: 360e9,
+            pcie_bw: 64e9,
+        }
+    }
 }
 
-/// The whole fleet visible to the scheduler.
+/// A homogeneous group of nodes sharing one GPU class — the unit the
+/// heterogeneous solver, placement rules and CLI fleet syntax speak.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ClusterSpec {
+pub struct GpuClass {
+    /// Class tag ("a100", "h100") used by `--fleet` and reports.
+    pub name: String,
     pub nodes: u32,
     pub node: NodeSpec,
-    /// Effective inter-node collective bandwidth, bytes/s.
+}
+
+impl GpuClass {
+    pub fn a100(nodes: u32) -> Self {
+        GpuClass { name: "a100".into(), nodes, node: NodeSpec::p4d_24xlarge() }
+    }
+
+    pub fn h100(nodes: u32) -> Self {
+        GpuClass { name: "h100".into(), nodes, node: NodeSpec::p5_48xlarge() }
+    }
+
+    pub fn gpus(&self) -> u32 {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    /// Class-wide dense peak, FLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        self.gpus() as f64 * self.node.gpu.peak_flops
+    }
+}
+
+/// The whole fleet visible to the scheduler: one or more GPU classes plus
+/// the cross-node fabric. Single-class fleets behave exactly like the
+/// original homogeneous `ClusterSpec` (the degenerate probe in
+/// `bench_hetero` holds this to 1e-6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Homogeneous node groups, one per GPU class. Class indices used by
+    /// the profiles/solver/placement layers index into this vector.
+    pub classes: Vec<GpuClass>,
+    /// Effective inter-node collective bandwidth, bytes/s (jobs never span
+    /// classes, so one fabric figure serves the fleet).
     pub inter_bw: f64,
 }
 
 impl ClusterSpec {
-    /// The paper's testbed: `nodes` x p4d.24xlarge.
+    /// The paper's testbed: `nodes` x p4d.24xlarge (single A100 class).
     pub fn p4d(nodes: u32) -> Self {
-        ClusterSpec { nodes, node: NodeSpec::p4d_24xlarge(), inter_bw: 50e9 }
+        ClusterSpec { classes: vec![GpuClass::a100(nodes)], inter_bw: 50e9 }
+    }
+
+    /// All-H100 fleet: `nodes` x p5.48xlarge.
+    pub fn p5(nodes: u32) -> Self {
+        ClusterSpec { classes: vec![GpuClass::h100(nodes)], inter_bw: 100e9 }
+    }
+
+    /// Mixed-generation fleet: `a100_nodes` x p4d + `h100_nodes` x p5.
+    /// Cross-node traffic is bound by the older EFA fabric.
+    pub fn hetero(a100_nodes: u32, h100_nodes: u32) -> Self {
+        let mut classes = Vec::new();
+        if a100_nodes > 0 {
+            classes.push(GpuClass::a100(a100_nodes));
+        }
+        if h100_nodes > 0 {
+            classes.push(GpuClass::h100(h100_nodes));
+        }
+        assert!(!classes.is_empty(), "fleet must have at least one node");
+        ClusterSpec { classes, inter_bw: 50e9 }
+    }
+
+    /// One custom class (used by the coordinator's lanes-as-GPUs cluster).
+    pub fn single(name: &str, nodes: u32, node: NodeSpec, inter_bw: f64)
+        -> Self {
+        ClusterSpec {
+            classes: vec![GpuClass { name: name.into(), nodes, node }],
+            inter_bw,
+        }
+    }
+
+    /// Parse the CLI fleet syntax `a100:32,h100:16` (GPU counts per class;
+    /// whole-node multiples of 8). Known classes: `a100`, `h100`.
+    pub fn parse_fleet(spec: &str) -> Result<ClusterSpec, String> {
+        let mut a100 = 0u32;
+        let mut h100 = 0u32;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad fleet entry '{part}' \
+                                        (expected class:gpus, e.g. a100:32)"))?;
+            let gpus: u32 = count.trim().parse().map_err(|_| {
+                format!("bad GPU count '{count}' in fleet entry '{part}'")
+            })?;
+            if gpus == 0 || gpus % 8 != 0 {
+                return Err(format!(
+                    "fleet entry '{part}': GPU count must be a positive \
+                     multiple of 8 (whole nodes)"));
+            }
+            match name.trim() {
+                "a100" => a100 += gpus / 8,
+                "h100" => h100 += gpus / 8,
+                other => {
+                    return Err(format!(
+                        "unknown GPU class '{other}' (known: a100, h100)"))
+                }
+            }
+        }
+        if a100 == 0 && h100 == 0 {
+            return Err(format!("empty fleet spec '{spec}'"));
+        }
+        Ok(ClusterSpec::hetero(a100, h100))
+    }
+
+    /// Human-readable fleet description, e.g. `a100:16+h100:8`.
+    pub fn fleet_desc(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| format!("{}:{}", c.name, c.gpus()))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_single_class(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    pub fn class(&self, ci: usize) -> &GpuClass {
+        &self.classes[ci]
+    }
+
+    pub fn class_index(&self, name: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c.name == name)
+    }
+
+    /// GPUs in one class.
+    pub fn class_gpus(&self, ci: usize) -> u32 {
+        self.classes[ci].gpus()
     }
 
     pub fn total_gpus(&self) -> u32 {
-        self.nodes * self.node.gpus_per_node
+        self.classes.iter().map(|c| c.gpus()).sum()
     }
 
-    /// Effective collective bandwidth for a `gpus`-wide ring: NVSwitch when
-    /// the ring fits in one node, EFA-bound otherwise.
+    pub fn total_nodes(&self) -> u32 {
+        self.classes.iter().map(|c| c.nodes).sum()
+    }
+
+    /// Fleet-wide dense peak, FLOP/s (the "equivalent-FLOPs" currency the
+    /// hetero bench compares fleets in).
+    pub fn peak_flops(&self) -> f64 {
+        self.classes.iter().map(|c| c.peak_flops()).sum()
+    }
+
+    /// The first class — what the cost-model accessors below refer to.
+    /// Cost models always receive a single-class view, where "primary" IS
+    /// the whole fleet.
+    pub fn primary(&self) -> &GpuClass {
+        &self.classes[0]
+    }
+
+    /// Restrict the fleet to one class: a homogeneous `ClusterSpec` the
+    /// parallelism cost models profile against.
+    pub fn class_view(&self, ci: usize) -> ClusterSpec {
+        ClusterSpec {
+            classes: vec![self.classes[ci].clone()],
+            inter_bw: self.inter_bw,
+        }
+    }
+
+    /// GPU spec of the primary class (cost-model view accessor).
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.primary().node.gpu
+    }
+
+    pub fn gpus_per_node(&self) -> u32 {
+        self.primary().node.gpus_per_node
+    }
+
+    pub fn intra_bw(&self) -> f64 {
+        self.primary().node.intra_bw
+    }
+
+    pub fn pcie_bw(&self) -> f64 {
+        self.primary().node.pcie_bw
+    }
+
+    /// Effective collective bandwidth for a `gpus`-wide ring within the
+    /// primary class: NVSwitch when the ring fits in one node, EFA-bound
+    /// otherwise.
     pub fn collective_bw(&self, gpus: u32) -> f64 {
-        if gpus <= self.node.gpus_per_node {
-            self.node.intra_bw
+        if gpus <= self.gpus_per_node() {
+            self.primary().node.intra_bw
         } else {
             self.inter_bw
         }
     }
 
-    /// GPU counts a job may be assigned (powers of two up to the fleet,
-    /// whole-node multiples beyond one node — the granularities DL
-    /// practitioners actually use and the paper's solver searches over).
+    /// GPU counts a job may be assigned within the PRIMARY class (powers
+    /// of two up to the class, whole-node multiples beyond one node — the
+    /// granularities DL practitioners actually use and the paper's solver
+    /// searches over). On a multi-class fleet use
+    /// [`ClusterSpec::class_allocation_options`].
     pub fn allocation_options(&self) -> Vec<u32> {
-        let per = self.node.gpus_per_node;
+        let group = self.primary();
+        let per = group.node.gpus_per_node;
+        let class_total = group.gpus();
         let mut opts: Vec<u32> = [1u32, 2, 4]
             .into_iter()
             .filter(|&g| g <= per)
             .collect();
         let mut g = per;
-        while g <= self.total_gpus() {
+        while g <= class_total {
             opts.push(g);
             g *= 2;
         }
-        if !opts.contains(&self.total_gpus()) && self.total_gpus() > per {
-            opts.push(self.total_gpus());
+        if !opts.contains(&class_total) && class_total > per {
+            opts.push(class_total);
         }
         opts.sort_unstable();
         opts.dedup();
         opts
+    }
+
+    /// Allocation options within class `ci`.
+    pub fn class_allocation_options(&self, ci: usize) -> Vec<u32> {
+        self.class_view(ci).allocation_options()
     }
 }
 
@@ -119,14 +330,26 @@ mod tests {
     fn p4d_shape() {
         let c = ClusterSpec::p4d(2);
         assert_eq!(c.total_gpus(), 16);
-        assert_eq!(c.node.gpu.mem_gb(), 40.0);
-        assert!(c.node.gpu.peak_flops > 3e14);
+        assert_eq!(c.gpu().mem_gb(), 40.0);
+        assert!(c.gpu().peak_flops > 3e14);
+        assert!(c.is_single_class());
+    }
+
+    #[test]
+    fn h100_class_is_bigger_and_faster() {
+        let h = GpuSpec::h100_80gb();
+        let a = GpuSpec::a100_40gb();
+        assert!(h.mem_bytes > a.mem_bytes);
+        assert!(h.peak_flops > 3.0 * a.peak_flops);
+        assert!(h.usable_bytes() > 2.0 * a.usable_bytes());
     }
 
     #[test]
     fn collective_bw_hierarchy() {
         let c = ClusterSpec::p4d(2);
         assert!(c.collective_bw(8) > c.collective_bw(16));
+        let p5 = ClusterSpec::p5(2);
+        assert!(p5.collective_bw(8) > c.collective_bw(8));
     }
 
     #[test]
@@ -139,5 +362,58 @@ mod tests {
     fn allocation_options_two_nodes() {
         let c = ClusterSpec::p4d(2);
         assert_eq!(c.allocation_options(), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn hetero_fleet_partitions_into_classes() {
+        let c = ClusterSpec::hetero(2, 1);
+        assert_eq!(c.n_classes(), 2);
+        assert_eq!(c.total_gpus(), 24);
+        assert_eq!(c.class_gpus(0), 16);
+        assert_eq!(c.class_gpus(1), 8);
+        assert_eq!(c.total_nodes(), 3);
+        assert_eq!(c.class_index("h100"), Some(1));
+        assert_eq!(c.fleet_desc(), "a100:16+h100:8");
+        // per-class allocation options stay within the class
+        assert_eq!(c.class_allocation_options(0), vec![1, 2, 4, 8, 16]);
+        assert_eq!(c.class_allocation_options(1), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn class_view_is_homogeneous() {
+        let c = ClusterSpec::hetero(2, 1);
+        let v = c.class_view(1);
+        assert!(v.is_single_class());
+        assert_eq!(v.total_gpus(), 8);
+        assert_eq!(v.gpu().name, "H100-80GB");
+        assert_eq!(v.inter_bw, c.inter_bw);
+    }
+
+    #[test]
+    fn parse_fleet_roundtrip() {
+        let c = ClusterSpec::parse_fleet("a100:32,h100:16").unwrap();
+        assert_eq!(c.n_classes(), 2);
+        assert_eq!(c.class_gpus(0), 32);
+        assert_eq!(c.class_gpus(1), 16);
+        assert_eq!(c.fleet_desc(), "a100:32+h100:16");
+        // single-class spec degenerates to the homogeneous fleet
+        let solo = ClusterSpec::parse_fleet("a100:16").unwrap();
+        assert_eq!(solo.classes, ClusterSpec::p4d(2).classes);
+    }
+
+    #[test]
+    fn parse_fleet_rejects_bad_specs() {
+        assert!(ClusterSpec::parse_fleet("a100:12").is_err()); // not nodes
+        assert!(ClusterSpec::parse_fleet("v100:8").is_err()); // unknown
+        assert!(ClusterSpec::parse_fleet("a100").is_err()); // no count
+        assert!(ClusterSpec::parse_fleet("").is_err()); // empty
+        assert!(ClusterSpec::parse_fleet("a100:zero").is_err());
+    }
+
+    #[test]
+    fn equivalent_flops_accounting() {
+        let mixed = ClusterSpec::hetero(2, 2);
+        let expect = 16.0 * 312e12 + 16.0 * 989e12;
+        assert!((mixed.peak_flops() - expect).abs() < 1e-3 * expect);
     }
 }

@@ -116,10 +116,10 @@ impl Coordinator {
             info!("probe {}: {:.1} ms/step", job.name(), step_s * 1e3);
             per_variant.insert(key, step_s);
         }
-        let mut table = ProfileTable::new(vec![1], 1);
+        let mut table = ProfileTable::new(vec![vec![1]], 1);
         for job in jobs {
             let step = per_variant[&(job.model.clone(), job.batch)];
-            table.insert(job.id, 0, 1, StepEstimate {
+            table.insert(job.id, 0, 1, 0, StepEstimate {
                 step_time_s: step,
                 mem_per_gpu: 0.0,
                 mfu: 0.0,
@@ -134,9 +134,10 @@ impl Coordinator {
         -> Result<SelectionReport> {
         let (profiles, profiling_s) = self.profile(jobs)?;
 
-        // Solve: lanes-as-GPUs cluster (1 node, `lanes` gpus)
-        let mut cluster = ClusterSpec::p4d(1);
-        cluster.node.gpus_per_node = self.lanes as u32;
+        // Solve: lanes-as-GPUs cluster (1 node, `lanes` gpus, one class)
+        let mut node = crate::cluster::NodeSpec::p4d_24xlarge();
+        node.gpus_per_node = self.lanes as u32;
+        let cluster = ClusterSpec::single("lanes", 1, node, 50e9);
         let remaining: Vec<(usize, u64)> =
             jobs.iter().map(|j| (j.id, j.steps)).collect();
         let t0 = Instant::now();

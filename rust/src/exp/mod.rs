@@ -59,7 +59,7 @@ pub fn run_cell_with(jobs: &[Job], profiles: &ProfileTable,
     Cell {
         system: SYSTEMS.iter().find(|s| **s == system).copied()
             .unwrap_or("custom"),
-        nodes: cluster.nodes,
+        nodes: cluster.total_nodes(),
         makespan_h: result.makespan_s / 3600.0,
         result,
     }

@@ -8,14 +8,15 @@
 //!   e2e        real model selection over the AOT GPT-mini artifacts
 //!   info       runtime/artifact diagnostics
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use saturn::cluster::ClusterSpec;
 use saturn::coordinator::{real_grid, Coordinator};
 use saturn::exp;
 use saturn::online::{profile_trace, run_trace, warm_cold_probe,
                      ONLINE_SYSTEMS};
 use saturn::parallelism::default_library;
-use saturn::saturn::solver::{solve_joint, SolverMode};
+use saturn::saturn::solver::{check_fleet_feasibility, solve_joint,
+                             SolverMode};
 use saturn::sim::engine::RungConfig;
 use saturn::trials::profile_analytic;
 use saturn::util::cli::Args;
@@ -39,11 +40,13 @@ fn main() -> Result<()> {
             println!("usage: saturn <command> [--flags]\n");
             println!("  table2    [--workload wikitext|imagenet|all] [--seed N]");
             println!("  plan      [--workload ...] [--nodes N]");
+            println!("            [--fleet a100:32,h100:16]");
             println!("            [--mode joint|greedy|rolling]");
             println!("  online    [--seed N] [--multijobs N] [--rate-per-hour X]");
             println!("            [--burst N] [--tenants N] [--rungs 0.25,0.5]");
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
-            println!("            [--nodes N] [--mode joint|greedy|rolling]");
+            println!("            [--nodes N] [--fleet a100:32,h100:16]");
+            println!("            [--mode joint|greedy|rolling]");
             println!("            [--json PATH]");
             println!("  workload  [--workload ...]");
             println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
@@ -68,8 +71,16 @@ fn cmd_table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the fleet from `--fleet a100:32,h100:16` (preferred) or the
+/// homogeneous `--nodes N` shorthand.
+fn fleet_from_args(args: &Args) -> Result<ClusterSpec> {
+    match args.get("fleet") {
+        Some(spec) => ClusterSpec::parse_fleet(spec).map_err(|e| anyhow!(e)),
+        None => Ok(ClusterSpec::p4d(args.usize_or("nodes", 1) as u32)),
+    }
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
-    let nodes = args.usize_or("nodes", 1) as u32;
     let workload = args.str_or("workload", "wikitext");
     let mode = match args.str_or("mode", "joint").as_str() {
         "greedy" => SolverMode::Heuristic,
@@ -77,19 +88,25 @@ fn cmd_plan(args: &Args) -> Result<()> {
         _ => SolverMode::Joint,
     };
     let jobs = exp::workload_by_name(&workload);
-    let cluster = ClusterSpec::p4d(nodes);
+    let cluster = fleet_from_args(args)?;
     let lib = default_library();
     let profiles = profile_analytic(&jobs, &lib, &cluster);
     let remaining: Vec<(usize, u64)> =
         jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    // surface memory-infeasible jobs as a CLI error, not a solver panic
+    check_fleet_feasibility(&remaining, &profiles, &cluster)
+        .map_err(|e| anyhow!(e))?;
     let (plan, stats) = solve_joint(&remaining, &profiles, &cluster, mode);
-    println!("joint plan for '{workload}' on {nodes} node(s) \
-              ({} GPUs):", cluster.total_gpus());
-    println!("{:<24} {:>8} {:>6} {:>12}", "job", "tech", "gpus", "runtime");
+    println!("joint plan for '{workload}' on fleet [{}] \
+              ({} GPUs, {} node(s)):", cluster.fleet_desc(),
+             cluster.total_gpus(), cluster.total_nodes());
+    println!("{:<24} {:>8} {:>6} {:>6} {:>12}", "job", "tech", "class",
+             "gpus", "runtime");
     for p in &plan.choices {
         let job = &jobs[p.job_id];
-        println!("{:<24} {:>8} {:>6} {:>11.1}s", job.name,
-                 lib.get(p.tech).name(), p.gpus, p.runtime_s);
+        println!("{:<24} {:>8} {:>6} {:>6} {:>11.1}s", job.name,
+                 lib.get(p.tech).name(), cluster.class(p.class).name,
+                 p.gpus, p.runtime_s);
     }
     println!("\npredicted makespan: {:.2} h (lower bound {:.2} h)",
              plan.predicted_makespan_s / 3600.0, plan.lower_bound_s / 3600.0);
@@ -109,7 +126,6 @@ fn cmd_online(args: &Args) -> Result<()> {
     let multijobs = args.usize_or("multijobs", 4);
     let rate = args.f64_or("rate-per-hour", 2.0);
     let burst = args.usize_or("burst", 0);
-    let nodes = args.usize_or("nodes", 1) as u32;
     let tenants = args.usize_or("tenants", 2);
     let kill_fraction = args.f64_or("kill-fraction", 0.5);
     let mode = match args.str_or("mode", "joint").as_str() {
@@ -146,15 +162,24 @@ fn cmd_online(args: &Args) -> Result<()> {
         None
     };
 
-    println!("=== online: {} multi-jobs / {} jobs over {:.1} h on {nodes} \
-              p4d node(s), seed {seed} ===",
-             trace.groups, trace.jobs.len(), trace.horizon_s / 3600.0);
+    let cluster = fleet_from_args(args)?;
+    println!("=== online: {} multi-jobs / {} jobs over {:.1} h on fleet \
+              [{}], seed {seed} ===",
+             trace.groups, trace.jobs.len(), trace.horizon_s / 3600.0,
+             cluster.fleet_desc());
     if let Some(rc) = &rungs {
         println!("early stopping: rungs {:?}, kill fraction {:.0}%",
                  rc.fractions, rc.kill_fraction * 100.0);
     }
-    let cluster = ClusterSpec::p4d(nodes);
     let profiles = profile_trace(&trace, &cluster);
+    // surface memory-infeasible jobs before the event loop would deadlock
+    let all_jobs: Vec<(usize, u64)> = trace
+        .jobs
+        .iter()
+        .map(|o| (o.job.id, o.job.total_steps()))
+        .collect();
+    check_fleet_feasibility(&all_jobs, &profiles, &cluster)
+        .map_err(|e| anyhow!(e))?;
 
     let mut metrics = Vec::new();
     let mut saturn_result = None;

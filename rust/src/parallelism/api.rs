@@ -25,7 +25,10 @@ pub trait Parallelism: Send + Sync {
 
     /// Feasibility + cost estimate; `None` when the technique cannot run
     /// this model on `gpus` GPUs (e.g. out of memory, or pipeline depth
-    /// exceeding layers).
+    /// exceeding layers). `cluster` is always a single-class view
+    /// ([`ClusterSpec::class_view`]): on heterogeneous fleets the Trial
+    /// Runner profiles each GPU class separately, so the estimate is
+    /// per (model, technique, gpus, class).
     fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
               batch: u32) -> Option<StepEstimate>;
 

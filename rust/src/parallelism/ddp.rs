@@ -41,12 +41,12 @@ impl Parallelism for Ddp {
         let per_gpu_batch = batch as f64 / gpus as f64;
         let mem_per_gpu = mem::replicated_state(model)
             + model.act_bytes_per_sample * per_gpu_batch;
-        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+        if mem_per_gpu > cluster.gpu().usable_bytes() {
             return None; // the A100-40GB wall for GPT-2 XL and up
         }
         let eff = self.mfu * crate::parallelism::api::batch_efficiency(per_gpu_batch);
         let compute = model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+            / (gpus as f64 * cluster.gpu().peak_flops * eff);
         let comm = if gpus == 1 {
             0.0
         } else {
@@ -74,7 +74,7 @@ mod tests {
         // full replication of AdamW state (20B/param = 30 GB) plus two
         // samples of pre-flash activations exceeds the usable A100-40GB.
         assert!(m.state_bytes() + m.act_bytes(2)
-                > c.node.gpu.usable_bytes());
+                > c.gpu().usable_bytes());
         assert!(Ddp::default().search(&m, &c, 8, 16).is_none());
     }
 
@@ -95,6 +95,23 @@ mod tests {
         let t1 = d.search(&m, &c, 1, 64).unwrap().step_time_s;
         let t8 = d.search(&m, &c, 8, 64).unwrap().step_time_s;
         assert!(t8 < t1 / 4.0, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn h100_class_unlocks_and_outruns_a100() {
+        // per-class feasibility: the same (job, tech, gpus) point is
+        // infeasible on the A100 class yet feasible on H100-80GB; where
+        // both fit, the H100 class is strictly faster.
+        let a = ClusterSpec::p4d(1);
+        let h = ClusterSpec::p5(1);
+        let d = Ddp::default();
+        let m = ModelSpec::gpt2_xl();
+        assert!(d.search(&m, &a, 8, 16).is_none());
+        assert!(d.search(&m, &h, 8, 16).is_some());
+        let r = ModelSpec::resnet200();
+        let ta = d.search(&r, &a, 8, 64).unwrap().step_time_s;
+        let th = d.search(&r, &h, 8, 64).unwrap().step_time_s;
+        assert!(th < ta, "H100 step {th} !< A100 step {ta}");
     }
 
     #[test]

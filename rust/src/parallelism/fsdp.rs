@@ -41,13 +41,13 @@ impl Parallelism for Fsdp {
         // activation checkpointing (FairScale/PyTorch default guidance).
         let mem_per_gpu = mem::sharded_state(model, gpus)
             + mem::checkpointed_act(model, per_gpu_batch);
-        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+        if mem_per_gpu > cluster.gpu().usable_bytes() {
             return None;
         }
         let eff = self.mfu * crate::parallelism::api::batch_efficiency(per_gpu_batch);
         // checkpointing re-runs forward during backward: +1/3 compute
         let compute = (4.0 / 3.0) * model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+            / (gpus as f64 * cluster.gpu().peak_flops * eff);
         let comm = if gpus == 1 {
             0.0
         } else {

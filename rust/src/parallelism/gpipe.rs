@@ -53,7 +53,7 @@ impl Parallelism for GPipe {
         let working = model.act_bytes_per_sample * micro / gpus as f64;
         let mem_per_gpu =
             mem::pipeline_stage_state(model, gpus) + stash + working;
-        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+        if mem_per_gpu > cluster.gpu().usable_bytes() {
             return None;
         }
         let bubble = (gpus as f64 - 1.0) / (m as f64 + gpus as f64 - 1.0);
@@ -63,7 +63,7 @@ impl Parallelism for GPipe {
         let remat = if gpus > 1 { 4.0 / 3.0 } else { 1.0 };
         let eff = self.mfu * crate::parallelism::api::batch_efficiency(micro);
         let compute = remat * model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+            / (gpus as f64 * cluster.gpu().peak_flops * eff);
         // p2p: boundary activations per microbatch, (g-1) hops, fwd+bwd
         let boundary = micro * model.boundary_bytes_per_sample();
         let p2p = if gpus == 1 {
@@ -110,7 +110,7 @@ mod tests {
         // g=1: no bubble, no remat, no p2p — pure (saturation-scaled) compute
         let eff = GPipe::default().mfu
             * crate::parallelism::api::batch_efficiency(8.0); // micro=64/8
-        let compute = m.flops_per_step(64) / (c.node.gpu.peak_flops * eff);
+        let compute = m.flops_per_step(64) / (c.gpu().peak_flops * eff);
         assert!((e.step_time_s - compute).abs() / compute < 1e-9);
     }
 

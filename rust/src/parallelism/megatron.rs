@@ -30,7 +30,7 @@ impl Parallelism for MegatronTp {
 
     fn search(&self, model: &ModelSpec, cluster: &ClusterSpec, gpus: u32,
               batch: u32) -> Option<StepEstimate> {
-        if gpus == 0 || gpus > cluster.node.gpus_per_node {
+        if gpus == 0 || gpus > cluster.gpus_per_node() {
             return None; // TP lives inside the NVLink domain
         }
         if model.hidden % gpus != 0 {
@@ -38,21 +38,21 @@ impl Parallelism for MegatronTp {
         }
         let mem = model.state_bytes() / gpus as f64
             + model.act_bytes_per_sample * batch as f64; // acts replicated
-        if mem > cluster.node.gpu.usable_bytes() {
+        if mem > cluster.gpu().usable_bytes() {
             return None;
         }
         // TP keeps the FULL batch on every shard: occupancy is set by the
         // global batch, one of TP's practical advantages at small batches.
         let eff = self.mfu * batch_efficiency(batch as f64);
         let compute = model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
+            / (gpus as f64 * cluster.gpu().peak_flops * eff);
         let comm = if gpus == 1 {
             0.0
         } else {
             // 4 all-reduces/layer (2 fwd + 2 bwd) over layer activations
             let act = model.boundary_bytes_per_sample() * batch as f64;
             4.0 * model.layers as f64 * 2.0 * (gpus as f64 - 1.0)
-                / gpus as f64 * act / cluster.node.intra_bw
+                / gpus as f64 * act / cluster.intra_bw()
         };
         let step = compute + 0.5 * comm; // partial overlap
         Some(StepEstimate {

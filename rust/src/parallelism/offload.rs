@@ -48,14 +48,14 @@ impl Parallelism for Offload {
         let working =
             model.act_bytes_per_sample * per_gpu_batch / model.layers as f64;
         let mem_per_gpu = window + ckpts + working;
-        if mem_per_gpu > cluster.node.gpu.usable_bytes() {
+        if mem_per_gpu > cluster.gpu().usable_bytes() {
             return None; // activations can still overflow at huge batches
         }
         // checkpointing re-runs forward during backward: +1/3 compute
         let eff = self.mfu * crate::parallelism::api::batch_efficiency(per_gpu_batch);
         let compute = (4.0 / 3.0) * model.flops_per_step(batch)
-            / (gpus as f64 * cluster.node.gpu.peak_flops * eff);
-        let pcie = 6.0 * model.params / (gpus as f64 * cluster.node.pcie_bw);
+            / (gpus as f64 * cluster.gpu().peak_flops * eff);
+        let pcie = 6.0 * model.params / (gpus as f64 * cluster.pcie_bw());
         // data-parallel grad sync when g > 1 (fp32, ring)
         let sync = if gpus == 1 {
             0.0
@@ -100,7 +100,7 @@ mod tests {
         let c = ClusterSpec::p4d(1);
         let m = ModelSpec::gpt_j();
         let e = Offload::default().search(&m, &c, 1, 16).unwrap();
-        let pcie = 6.0 * m.params / c.node.pcie_bw * (1.0 - 0.4);
+        let pcie = 6.0 * m.params / c.pcie_bw() * (1.0 - 0.4);
         assert!(e.step_time_s > pcie * 0.9);
     }
 

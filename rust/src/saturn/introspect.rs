@@ -38,11 +38,12 @@ pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
     let mut free = ctx.free.clone();
     let mut launches = Vec::new();
     for jp in ordered {
-        if free.place(jp.gpus).is_some() {
+        if free.place(jp.class, jp.gpus).is_some() {
             launches.push(Launch {
                 job_id: jp.job_id,
                 tech: jp.tech,
                 gpus: jp.gpus,
+                class: jp.class,
             });
         }
     }
@@ -102,10 +103,11 @@ impl SaturnPolicy {
 }
 
 /// Migration hysteresis shared by the batch and online Saturn policies:
-/// keep a previously-running job on its old (tech, gpus) unless the fresh
-/// plan improves its remaining runtime by more than `threshold` —
-/// checkpoint/restart penalties otherwise erode the re-solve gains
-/// (Gandiva's lesson).
+/// keep a previously-running job on its old (tech, gpus, class) unless
+/// the fresh plan improves its remaining runtime by more than `threshold`
+/// — checkpoint/restart penalties otherwise erode the re-solve gains
+/// (Gandiva's lesson). A class move counts as a migration like any other
+/// reshape.
 pub(crate) fn apply_migration_hysteresis(
     plan: &mut SaturnPlan,
     ctx: &PlanContext,
@@ -118,11 +120,12 @@ pub(crate) fn apply_migration_hysteresis(
     for jp in plan.choices.iter_mut() {
         let Some(s) = ctx.jobs.get(jp.job_id) else { continue };
         let Some(prev) = s.last_alloc else { continue };
-        if prev == (jp.tech, jp.gpus) {
+        if prev == (jp.tech, jp.gpus, jp.class) {
             continue;
         }
         let Some(steps) = steps_of(jp.job_id) else { continue };
-        let Some(prev_step) = ctx.profiles.step_time(jp.job_id, prev.0, prev.1)
+        let Some(prev_step) =
+            ctx.profiles.step_time(jp.job_id, prev.0, prev.1, prev.2)
         else {
             continue;
         };
@@ -130,6 +133,7 @@ pub(crate) fn apply_migration_hysteresis(
         if jp.runtime_s > prev_runtime * (1.0 - threshold) {
             jp.tech = prev.0;
             jp.gpus = prev.1;
+            jp.class = prev.2;
             jp.runtime_s = prev_runtime;
         }
     }

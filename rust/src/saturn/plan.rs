@@ -6,6 +6,9 @@ pub struct JobPlan {
     pub job_id: usize,
     pub tech: usize,
     pub gpus: u32,
+    /// GPU class (index into `ClusterSpec::classes`) the job must be
+    /// placed on — plans never span classes.
+    pub class: usize,
     /// Estimated remaining runtime under this plan (seconds).
     pub runtime_s: f64,
 }
@@ -35,6 +38,16 @@ impl SaturnPlan {
             .map(|p| p.gpus as f64 * p.runtime_s)
             .sum()
     }
+
+    /// GPU-seconds scheduled on one GPU class (the per-class capacity rows
+    /// of the MILP bound `area_in_class(k) <= G_k * M`).
+    pub fn area_in_class(&self, class: usize) -> f64 {
+        self.choices
+            .iter()
+            .filter(|p| p.class == class)
+            .map(|p| p.gpus as f64 * p.runtime_s)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -44,8 +57,10 @@ mod tests {
     fn plan() -> SaturnPlan {
         SaturnPlan {
             choices: vec![
-                JobPlan { job_id: 0, tech: 1, gpus: 4, runtime_s: 100.0 },
-                JobPlan { job_id: 2, tech: 0, gpus: 2, runtime_s: 50.0 },
+                JobPlan { job_id: 0, tech: 1, gpus: 4, class: 0,
+                          runtime_s: 100.0 },
+                JobPlan { job_id: 2, tech: 0, gpus: 2, class: 1,
+                          runtime_s: 50.0 },
             ],
             order: vec![0, 2],
             lower_bound_s: 90.0,
@@ -59,5 +74,7 @@ mod tests {
         assert_eq!(p.plan_for(2).unwrap().gpus, 2);
         assert!(p.plan_for(1).is_none());
         assert!((p.area() - 500.0).abs() < 1e-12);
+        assert!((p.area_in_class(0) - 400.0).abs() < 1e-12);
+        assert!((p.area_in_class(1) - 100.0).abs() < 1e-12);
     }
 }

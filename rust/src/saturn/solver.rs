@@ -1,29 +1,34 @@
-//! The joint MILP: parallelism selection x GPU allocation x scheduling.
+//! The joint MILP: parallelism selection x GPU allocation x GPU class x
+//! scheduling.
 //!
 //! The workshop paper states the joint problem is cast as an MILP and
 //! solved with Gurobi, without printing the formulation. We implement the
 //! standard two-level decomposition for malleable-task makespan problems
-//! (documented in DESIGN.md §4):
+//! (documented in DESIGN.md §4), extended with the GPU class as a plan
+//! dimension for heterogeneous fleets (DESIGN.md §Fleets):
 //!
 //!  1. **Plan-selection MILP** (exact, via `solver::milp`): binary
-//!     x_{j,c} over each job's Pareto plans c = (technique, gpus) with
+//!     x_{j,c} over each job's candidate plans c = (technique, gpus,
+//!     class) — the union of every class's Pareto set — with
 //!
 //!     ```text
 //!     min  M
-//!     s.t. sum_c x_{jc} = 1                          (each job planned)
-//!          sum_c t_{jc} x_{jc} <= M                  (critical path)
-//!          sum_{j,c} g_{jc} t_{jc} x_{jc} <= G * M   (GPU area)
+//!     s.t. sum_c x_{jc} = 1                               (each job planned)
+//!          sum_c t_{jc} x_{jc} <= M                       (critical path)
+//!          sum_{j,c in k} g_{jc} t_{jc} x_{jc} <= G_k * M (area, class k)
 //!     ```
 //!
-//!     The two lower bounds (longest job, total area / G) are exactly the
-//!     classic makespan LP bounds; minimizing M trades per-job speedups
-//!     (more GPUs) against cluster-wide packing — the paper's core insight
-//!     that allocation, parallelism and schedule must be decided jointly.
+//!     One capacity row per GPU class k (G_k = GPUs in class k) replaces
+//!     the homogeneous fleet-wide area row; on a single-class fleet the
+//!     formulation degenerates to the original one exactly (the
+//!     `bench_hetero` probe holds this to 1e-6). Rows stay cheap because
+//!     the revised simplex carries binaries as variable BOUNDS, so the
+//!     row count is 2*jobs + n_classes.
 //!
-//!  2. **List scheduling** (LPT first-fit on the chosen plans) to realize
-//!     an order, followed by a local-search repair that re-plans the
-//!     makespan-defining job if a different (tech, gpus) shortens the
-//!     schedule.
+//!  2. **List scheduling** (LPT first-fit on the chosen plans, per-class
+//!     placement) to realize an order, followed by a local-search repair
+//!     that re-plans the makespan-defining job if a different (tech,
+//!     gpus, class) shortens the schedule.
 //!
 //! An exact time-indexed formulation (`SolverMode::ExactSlots`) is kept
 //! for small instances to validate the decomposition in tests.
@@ -43,6 +48,9 @@ use crate::trials::ProfileTable;
 /// dwarfs the MILP itself at rolling-horizon scale.
 const LOCAL_SEARCH_MAX_JOBS: usize = 48;
 
+/// One candidate plan: (technique, gpus, class, total runtime seconds).
+type Cand = (usize, u32, usize, f64);
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolverMode {
     /// Plan-selection MILP + list scheduling (default; scales to dozens of
@@ -57,8 +65,8 @@ pub enum SolverMode {
     /// by dominance (longest min-GPU runtime first), solve the
     /// plan-selection MILP over a `window`-job slice, commit everything
     /// except the trailing `overlap` jobs, slide, repeat. Committed
-    /// windows feed the next solve as a makespan floor plus a GPU-area
-    /// offset, so the coupling the windows share is preserved.
+    /// windows feed the next solve as a makespan floor plus per-class
+    /// GPU-area offsets, so the coupling the windows share is preserved.
     RollingHorizon { window: usize, overlap: usize },
 }
 
@@ -107,6 +115,31 @@ impl SolverStats {
     }
 }
 
+/// Verify every job fits somewhere in the fleet. `Err` carries a
+/// human-readable description naming the jobs whose memory footprint fits
+/// no GPU class — the CLI surfaces it; the solver panics with it rather
+/// than silently dropping the job into a deadlocked schedule.
+pub fn check_fleet_feasibility(jobs: &[(usize, u64)],
+                               profiles: &ProfileTable,
+                               cluster: &ClusterSpec) -> Result<(), String> {
+    let bad: Vec<usize> = jobs
+        .iter()
+        .map(|&(id, _)| id)
+        .filter(|&id| !profiles.feasible_anywhere(id))
+        .collect();
+    if bad.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "job(s) {bad:?} fit no GPU class in the fleet [{}]: every \
+             profiled (technique, gpus, class) combination is infeasible \
+             (typically the memory footprint exceeds each class's usable \
+             HBM). Add a roomier GPU class to the fleet or register a more \
+             memory-frugal parallelism (e.g. offload).",
+            cluster.fleet_desc()))
+    }
+}
+
 /// Inputs per unfinished job: (job_id, remaining_steps).
 pub fn solve_joint(
     jobs: &[(usize, u64)],
@@ -136,9 +169,13 @@ pub fn solve_joint_with(
 /// Incremental re-solve for the online scheduler: `warm` (the plan from
 /// the previous event) seeds the branch-and-bound incumbent, so the MILP
 /// prunes against a known-good schedule from node one. Jobs absent from
-/// `warm` (fresh arrivals) default to their min-GPU Pareto plan in the
+/// `warm` (fresh arrivals) default to their min-GPU candidate in the
 /// seeded incumbent; departed jobs are simply dropped. This is what makes
 /// event-rate re-solving affordable (bench_online measures warm vs cold).
+///
+/// Panics (with the [`check_fleet_feasibility`] message) when a job fits
+/// no GPU class of the fleet — a silent greedy fallback would drop the job
+/// and deadlock the simulation with a far more confusing error.
 pub fn solve_joint_warm(
     jobs: &[(usize, u64)],
     profiles: &ProfileTable,
@@ -148,29 +185,33 @@ pub fn solve_joint_warm(
     warm: Option<&SaturnPlan>,
 ) -> (SaturnPlan, SolverStats) {
     let start = Instant::now();
+    if let Err(e) = check_fleet_feasibility(jobs, profiles, cluster) {
+        panic!("{e}");
+    }
     let kappa = lookahead.max(1.0);
     let mut stats = SolverStats::default();
     let plans = expand_plans(jobs, profiles);
+    let g_class = class_capacities(cluster);
 
     let choices = match mode {
-        SolverMode::Heuristic => greedy_choice(&plans, cluster, kappa),
+        SolverMode::Heuristic => greedy_choice(&plans, &g_class, kappa),
         SolverMode::Joint => {
-            match milp_choice(&plans, cluster, kappa, warm, &mut stats) {
+            match milp_choice(&plans, &g_class, kappa, warm, &mut stats) {
                 Some(c) => c,
-                None => greedy_choice(&plans, cluster, kappa), // fallback
+                None => greedy_choice(&plans, &g_class, kappa), // fallback
             }
         }
         SolverMode::ExactSlots { slots } => {
             match exact_slot_choice(&plans, cluster, slots, &mut stats) {
                 Some(c) => c,
-                None => greedy_choice(&plans, cluster, kappa),
+                None => greedy_choice(&plans, &g_class, kappa),
             }
         }
         SolverMode::RollingHorizon { window, overlap } => {
-            match rolling_choice(&plans, cluster, kappa, warm, window,
+            match rolling_choice(&plans, &g_class, kappa, warm, window,
                                  overlap, &mut stats) {
                 Some(c) => c,
-                None => greedy_choice(&plans, cluster, kappa),
+                None => greedy_choice(&plans, &g_class, kappa),
             }
         }
     };
@@ -184,18 +225,27 @@ pub fn solve_joint_warm(
     (plan, stats)
 }
 
-/// Per-job candidate plans (tech, gpus, total runtime) over the remaining
-/// steps — the search space every solver level shares.
+/// GPUs per class, in class order.
+fn class_capacities(cluster: &ClusterSpec) -> Vec<f64> {
+    (0..cluster.n_classes())
+        .map(|ci| cluster.class_gpus(ci) as f64)
+        .collect()
+}
+
+/// Per-job candidate plans (tech, gpus, class, total runtime) over the
+/// remaining steps — the search space every solver level shares.
 fn expand_plans(
     jobs: &[(usize, u64)],
     profiles: &ProfileTable,
-) -> Vec<(usize, Vec<(usize, u32, f64)>)> {
+) -> Vec<(usize, Vec<Cand>)> {
     jobs.iter()
         .map(|&(id, steps)| {
             let ps = profiles
-                .pareto_plans(id)
+                .candidate_plans(id)
                 .into_iter()
-                .map(|(tech, g, step)| (tech, g, step * steps as f64))
+                .map(|(tech, g, class, step)| {
+                    (tech, g, class, step * steps as f64)
+                })
                 .collect::<Vec<_>>();
             (id, ps)
         })
@@ -216,13 +266,14 @@ pub fn solve_joint_reference(
     let start = Instant::now();
     let mut stats = SolverStats::default();
     let plans = expand_plans(jobs, profiles);
-    let g_total = cluster.total_gpus() as f64;
+    let g_class = class_capacities(cluster);
+    let zeros = vec![0.0; g_class.len()];
     let choices = match plan_selection_with_engine(
-        &plans, g_total, 1.0, 0.0, 0.0, None, 20_000, 10.0, 0.01,
+        &plans, &g_class, 1.0, 0.0, &zeros, None, 20_000, 10.0, 0.01,
         MilpEngine::DenseReference, &mut stats)
     {
         Some(c) => c,
-        None => greedy_choice(&plans, cluster, 1.0),
+        None => greedy_choice(&plans, &g_class, 1.0),
     };
     let mut plan = build_schedule(choices, cluster);
     if plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS {
@@ -246,15 +297,65 @@ pub fn plan_selection_probe(
     let start = Instant::now();
     let mut stats = SolverStats::default();
     let plans = expand_plans(jobs, profiles);
-    let g_total = cluster.total_gpus() as f64;
+    let g_class = class_capacities(cluster);
+    let zeros = vec![0.0; g_class.len()];
     let choices = plan_selection_with_engine(
-        &plans, g_total, 1.0, 0.0, 0.0, None, 200_000, 120.0, 1e-6,
+        &plans, &g_class, 1.0, 0.0, &zeros, None, 200_000, 120.0, 1e-6,
         engine, &mut stats)?;
-    let longest = choices.iter().map(|p| p.runtime_s).fold(0.0, f64::max);
-    let area: f64 =
-        choices.iter().map(|p| p.gpus as f64 * p.runtime_s).sum();
     stats.wall_s = start.elapsed().as_secs_f64();
-    Some((longest.max(area / g_total), stats))
+    Some((probe_objective(&choices, &g_class), stats))
+}
+
+/// The PRE-heterogeneity formulation, kept as the degenerate-fleet
+/// equivalence oracle: the fleet is one interchangeable pool (a single
+/// area row over `total_gpus`) and the candidate set is class 0's Pareto
+/// set. On a single-class fleet this IS the original solver bit for bit;
+/// `bench_hetero` and `tests/prop_hetero.rs` hold the per-class path to
+/// it within 1e-6. Meaningless on a mixed fleet — callers assert
+/// single-class.
+pub fn plan_selection_probe_pooled(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    engine: MilpEngine,
+) -> Option<(f64, SolverStats)> {
+    assert!(cluster.is_single_class(),
+            "pooled probe only defined on single-class fleets");
+    let start = Instant::now();
+    let mut stats = SolverStats::default();
+    let plans: Vec<(usize, Vec<Cand>)> = jobs
+        .iter()
+        .map(|&(id, steps)| {
+            let ps = profiles
+                .pareto_plans(id, 0)
+                .into_iter()
+                .map(|(tech, g, step)| (tech, g, 0usize, step * steps as f64))
+                .collect::<Vec<_>>();
+            (id, ps)
+        })
+        .collect();
+    let g_class = vec![cluster.total_gpus() as f64];
+    let zeros = vec![0.0];
+    let choices = plan_selection_with_engine(
+        &plans, &g_class, 1.0, 0.0, &zeros, None, 200_000, 120.0, 1e-6,
+        engine, &mut stats)?;
+    stats.wall_s = start.elapsed().as_secs_f64();
+    Some((probe_objective(&choices, &g_class), stats))
+}
+
+/// The proved objective of a plan-selection solution:
+/// max(longest runtime, max_k area_k / G_k).
+fn probe_objective(choices: &[JobPlan], g_class: &[f64]) -> f64 {
+    let longest = choices.iter().map(|p| p.runtime_s).fold(0.0, f64::max);
+    let mut areas = vec![0.0f64; g_class.len()];
+    for p in choices {
+        areas[p.class] += p.gpus as f64 * p.runtime_s;
+    }
+    areas
+        .iter()
+        .zip(g_class)
+        .map(|(a, g)| a / g.max(1e-9))
+        .fold(longest, f64::max)
 }
 
 // ---------------------------------------------------------------------------
@@ -262,46 +363,47 @@ pub fn plan_selection_probe(
 // ---------------------------------------------------------------------------
 
 fn milp_choice(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
-    cluster: &ClusterSpec,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
     kappa: f64,
     warm: Option<&SaturnPlan>,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
-    let g_total = cluster.total_gpus() as f64;
-    plan_selection_milp(plans, g_total, kappa, 0.0, 0.0, warm,
+    let zeros = vec![0.0; g_class.len()];
+    plan_selection_milp(plans, g_class, kappa, 0.0, &zeros, warm,
                         20_000, 10.0, stats)
 }
 
 /// The plan-selection MILP over one slice of jobs. `m_floor` and
-/// `fixed_area` carry the coupling from already-committed rolling-horizon
-/// windows: M may not undercut a committed job's runtime, and the GPU-area
-/// budget `G * M` is charged for committed work. Single-shot solves pass
+/// `fixed_area` (one entry per GPU class) carry the coupling from
+/// already-committed rolling-horizon windows: M may not undercut a
+/// committed job's runtime, and each class's GPU-area budget `G_k * M` is
+/// charged for committed work on that class. Single-shot solves pass
 /// zeros. Returns one [`JobPlan`] per input job, in input order.
 #[allow(clippy::too_many_arguments)]
 fn plan_selection_milp(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
-    g_total: f64,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
     kappa: f64,
     m_floor: f64,
-    fixed_area: f64,
+    fixed_area: &[f64],
     warm: Option<&SaturnPlan>,
     max_nodes: usize,
     time_limit_s: f64,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
-    plan_selection_with_engine(plans, g_total, kappa, m_floor, fixed_area,
+    plan_selection_with_engine(plans, g_class, kappa, m_floor, fixed_area,
                                warm, max_nodes, time_limit_s, 0.01,
                                MilpEngine::Revised, stats)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn plan_selection_with_engine(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
-    g_total: f64,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
     kappa: f64,
     m_floor: f64,
-    fixed_area: f64,
+    fixed_area: &[f64],
     warm: Option<&SaturnPlan>,
     max_nodes: usize,
     time_limit_s: f64,
@@ -309,6 +411,7 @@ fn plan_selection_with_engine(
     engine: MilpEngine,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
+    debug_assert_eq!(g_class.len(), fixed_area.len());
     // variable layout: x_{j,c} ... , M (last)
     let mut var = 0usize;
     let mut index: Vec<Vec<usize>> = Vec::new();
@@ -332,23 +435,29 @@ fn plan_selection_with_engine(
         let mut cp: Vec<(usize, f64)> = ps
             .iter()
             .enumerate()
-            .map(|(c, p)| (index[ji][c], p.2 / kappa))
+            .map(|(c, p)| (index[ji][c], p.3 / kappa))
             .collect();
         cp.push((m_var, -1.0));
         lp.add(cp, Cmp::Le, 0.0);
     }
-    // area bound, charged for work committed by earlier windows:
-    //   sum g t x - G M <= -fixed_area
-    let mut area: Vec<(usize, f64)> = Vec::new();
-    for (ji, (_, ps)) in plans.iter().enumerate() {
-        for (c, p) in ps.iter().enumerate() {
-            area.push((index[ji][c], p.1 as f64 * p.2));
+    // one area bound PER CLASS, charged for work committed on that class
+    // by earlier windows:   sum_{c in k} g t x - G_k M <= -fixed_area_k
+    for (ci, (&g_k, &fixed_k)) in
+        g_class.iter().zip(fixed_area).enumerate()
+    {
+        let mut area: Vec<(usize, f64)> = Vec::new();
+        for (ji, (_, ps)) in plans.iter().enumerate() {
+            for (c, p) in ps.iter().enumerate() {
+                if p.2 == ci {
+                    area.push((index[ji][c], p.1 as f64 * p.3));
+                }
+            }
         }
+        area.push((m_var, -g_k));
+        lp.add(area, Cmp::Le, -fixed_k);
     }
-    area.push((m_var, -g_total));
-    lp.add(area, Cmp::Le, -fixed_area);
     // binaries: first-class variable bounds, NOT rows — with the revised
-    // simplex this keeps the row count at 2*jobs + 1
+    // simplex this keeps the row count at 2*jobs + n_classes
     for vs in &index {
         for &v in vs {
             lp.bound_le(v, 1.0);
@@ -357,28 +466,34 @@ fn plan_selection_with_engine(
 
     // Warm start: translate the previous plan into an incumbent vector.
     // Every job needs exactly one plan set; arrivals absent from the old
-    // plan (and stale choices pruned off the Pareto set) fall back to the
-    // min-GPU plan, which always satisfies the area bound together with
-    // the matching makespan value for M.
+    // plan (and stale choices pruned off the candidate set) fall back to
+    // the min-GPU candidate, which always satisfies the area bounds
+    // together with the matching makespan value for M.
     let warm_x = warm.map(|prev| {
         let mut x = vec![0.0; n];
         let mut longest = 0.0f64;
-        let mut area_tot = 0.0f64;
+        let mut areas = vec![0.0f64; g_class.len()];
         for (ji, (id, ps)) in plans.iter().enumerate() {
             let c = prev
                 .plan_for(*id)
                 .and_then(|jp| {
-                    ps.iter().position(|&(t, g, _)| (t, g) == (jp.tech, jp.gpus))
+                    ps.iter().position(|&(t, g, cl, _)| {
+                        (t, g, cl) == (jp.tech, jp.gpus, jp.class)
+                    })
                 })
                 .unwrap_or(0);
             x[index[ji][c]] = 1.0;
-            let (_, g, t) = ps[c];
+            let (_, g, cl, t) = ps[c];
             longest = longest.max(t / kappa);
-            area_tot += g as f64 * t;
+            areas[cl] += g as f64 * t;
         }
-        x[m_var] = longest
-            .max((area_tot + fixed_area) / g_total)
-            .max(m_floor);
+        let area_m = areas
+            .iter()
+            .zip(g_class)
+            .zip(fixed_area)
+            .map(|((a, g), f)| (a + f) / g.max(1e-9))
+            .fold(0.0f64, f64::max);
+        x[m_var] = longest.max(area_m).max(m_floor);
         x
     });
     stats.warm_used = stats.warm_used || warm_x.is_some();
@@ -407,8 +522,14 @@ fn plan_selection_with_engine(
                 let c = (0..ps.len())
                     .find(|&c| x[index[ji][c]] > 0.5)
                     .unwrap_or(0);
-                let (tech, gpus, runtime) = ps[c];
-                out.push(JobPlan { job_id: *id, tech, gpus, runtime_s: runtime });
+                let (tech, gpus, class, runtime) = ps[c];
+                out.push(JobPlan {
+                    job_id: *id,
+                    tech,
+                    gpus,
+                    class,
+                    runtime_s: runtime,
+                });
             }
             Some(out)
         }
@@ -420,19 +541,19 @@ fn plan_selection_with_engine(
 /// dominance ordering (longest min-GPU runtime first), committing all but
 /// the trailing `overlap` jobs per solve. Each window re-optimizes the
 /// overlap jointly with the next slice, and inherits the committed
-/// makespan floor + GPU area, so window boundaries cannot starve or
-/// oversubscribe the cluster. Per-window MILPs get tight node/time
-/// budgets — the point is many small interactive solves, not one big one.
+/// makespan floor + per-class GPU areas, so window boundaries cannot
+/// starve or oversubscribe any class. Per-window MILPs get tight
+/// node/time budgets — the point is many small interactive solves, not
+/// one big one.
 fn rolling_choice(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
-    cluster: &ClusterSpec,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
     kappa: f64,
     warm: Option<&SaturnPlan>,
     window: usize,
     overlap: usize,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
-    let g_total = cluster.total_gpus() as f64;
     let window = window.max(2);
     let overlap = overlap.min(window - 1);
     if plans.iter().any(|(_, ps)| ps.is_empty()) {
@@ -442,31 +563,35 @@ fn rolling_choice(
     // replays are deterministic — sort_by is stable)
     let mut order: Vec<usize> = (0..plans.len()).collect();
     order.sort_by(|&a, &b| {
-        let ta = plans[a].1.first().map(|p| p.2).unwrap_or(0.0);
-        let tb = plans[b].1.first().map(|p| p.2).unwrap_or(0.0);
+        let ta = plans[a].1.first().map(|p| p.3).unwrap_or(0.0);
+        let tb = plans[b].1.first().map(|p| p.3).unwrap_or(0.0);
         tb.partial_cmp(&ta).unwrap_or(std::cmp::Ordering::Equal)
     });
 
     let mut chosen: Vec<Option<JobPlan>> = vec![None; plans.len()];
-    let mut fixed_area = 0.0f64;
+    let mut fixed_area = vec![0.0f64; g_class.len()];
     let mut m_floor = 0.0f64;
     let mut k = 0usize;
     while k < order.len() {
         let hi = (k + window).min(order.len());
-        let slice: Vec<(usize, Vec<(usize, u32, f64)>)> = order[k..hi]
+        let slice: Vec<(usize, Vec<Cand>)> = order[k..hi]
             .iter()
             .map(|&ji| plans[ji].clone())
             .collect();
-        let picks = plan_selection_milp(&slice, g_total, kappa, m_floor,
-                                        fixed_area, warm, 4_000, 2.0,
+        let picks = plan_selection_milp(&slice, g_class, kappa, m_floor,
+                                        &fixed_area, warm, 4_000, 2.0,
                                         stats)?;
         stats.windows += 1;
         // commit everything except the overlap tail (the final window
         // commits everything)
-        let commit = if hi == order.len() { hi - k } else { (hi - k).saturating_sub(overlap).max(1) };
+        let commit = if hi == order.len() {
+            hi - k
+        } else {
+            (hi - k).saturating_sub(overlap).max(1)
+        };
         for (offset, jp) in picks.into_iter().enumerate().take(commit) {
             let ji = order[k + offset];
-            fixed_area += jp.gpus as f64 * jp.runtime_s;
+            fixed_area[jp.class] += jp.gpus as f64 * jp.runtime_s;
             m_floor = m_floor.max(jp.runtime_s / kappa);
             chosen[ji] = Some(jp);
         }
@@ -475,31 +600,38 @@ fn rolling_choice(
     chosen.into_iter().collect()
 }
 
-/// Greedy: start every job at its smallest feasible plan, then spend the
-/// remaining "area budget" on the job that currently bounds the makespan.
+/// Greedy: start every job at its slowest/cheapest candidate, then spend
+/// the remaining per-class "area budget" on the job that currently bounds
+/// the makespan.
 fn greedy_choice(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
-    cluster: &ClusterSpec,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
     kappa: f64,
 ) -> Vec<JobPlan> {
-    let g_total = cluster.total_gpus() as f64;
     let mut pick: Vec<usize> = plans.iter().map(|_| 0).collect();
     for _ in 0..64 {
-        // current makespan bound = max(longest job, area/G)
-        let longest_ji = (0..plans.len())
-            .max_by(|&a, &b| {
-                let ta = plans[a].1.get(pick[a]).map(|p| p.2).unwrap_or(0.0);
-                let tb = plans[b].1.get(pick[b]).map(|p| p.2).unwrap_or(0.0);
-                ta.partial_cmp(&tb).unwrap()
-            })
-            .unwrap();
-        let area: f64 = (0..plans.len())
-            .map(|ji| plans[ji].1.get(pick[ji])
-                .map(|p| p.1 as f64 * p.2).unwrap_or(0.0))
-            .sum();
+        // current makespan bound = max(longest job, max_k area_k/G_k)
+        let Some(longest_ji) = (0..plans.len()).max_by(|&a, &b| {
+            let ta = plans[a].1.get(pick[a]).map(|p| p.3).unwrap_or(0.0);
+            let tb = plans[b].1.get(pick[b]).map(|p| p.3).unwrap_or(0.0);
+            ta.partial_cmp(&tb).unwrap()
+        }) else {
+            break; // no jobs: nothing to upgrade
+        };
+        let mut areas = vec![0.0f64; g_class.len()];
+        for ji in 0..plans.len() {
+            if let Some(p) = plans[ji].1.get(pick[ji]) {
+                areas[p.2] += p.1 as f64 * p.3;
+            }
+        }
+        let area_bound = areas
+            .iter()
+            .zip(g_class)
+            .map(|(a, g)| a / g.max(1e-9))
+            .fold(0.0f64, f64::max);
         let longest = plans[longest_ji].1.get(pick[longest_ji])
-            .map(|p| p.2).unwrap_or(0.0);
-        if area / g_total >= longest / kappa {
+            .map(|p| p.3).unwrap_or(0.0);
+        if area_bound >= longest / kappa {
             break; // area-bound: more GPUs per job only adds area
         }
         // upgrade the critical job if a bigger plan exists
@@ -514,24 +646,25 @@ fn greedy_choice(
         .zip(&pick)
         .filter(|((_, ps), _)| !ps.is_empty())
         .map(|((id, ps), &c)| {
-            let (tech, gpus, runtime) = ps[c];
-            JobPlan { job_id: *id, tech, gpus, runtime_s: runtime }
+            let (tech, gpus, class, runtime) = ps[c];
+            JobPlan { job_id: *id, tech, gpus, class, runtime_s: runtime }
         })
         .collect()
 }
 
 /// Exact time-indexed MILP (x_{j,c,s}); small instances only.
 fn exact_slot_choice(
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    plans: &[(usize, Vec<Cand>)],
     cluster: &ClusterSpec,
     slots: usize,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
+    let g_class = class_capacities(cluster);
     // horizon: makespan of the greedy schedule
-    let greedy = build_schedule(greedy_choice(plans, cluster, 1.0), cluster);
+    let greedy =
+        build_schedule(greedy_choice(plans, &g_class, 1.0), cluster);
     let horizon = greedy.predicted_makespan_s * 1.25 + 1.0;
     let dt = horizon / slots as f64;
-    let g_total = cluster.total_gpus() as f64;
 
     // variables: x_{j,c,s} + M
     let mut var = 0usize;
@@ -539,7 +672,7 @@ fn exact_slot_choice(
     for (_, ps) in plans {
         let mut per_c = Vec::new();
         for _ in ps {
-            per_c.push((0..slots).map(|s| { let v = var + s; v }).collect());
+            per_c.push((0..slots).map(|s| var + s).collect());
             var += slots;
         }
         idx.push(per_c);
@@ -565,7 +698,7 @@ fn exact_slot_choice(
         for (c, p) in ps.iter().enumerate() {
             for s in 0..slots {
                 lp.add(
-                    vec![(idx[ji][c][s], s as f64 * dt + p.2 + big),
+                    vec![(idx[ji][c][s], s as f64 * dt + p.3 + big),
                          (m_var, -1.0)],
                     Cmp::Le,
                     big,
@@ -573,21 +706,26 @@ fn exact_slot_choice(
             }
         }
     }
-    // capacity per slot
+    // capacity per (slot, class)
     for slot in 0..slots {
-        let mut cap: Vec<(usize, f64)> = Vec::new();
-        for (ji, (_, ps)) in plans.iter().enumerate() {
-            for (c, p) in ps.iter().enumerate() {
-                let dur_slots = (p.2 / dt).ceil() as usize;
-                // job occupies `slot` if it started in (slot-dur, slot]
-                let lo = slot.saturating_sub(dur_slots.saturating_sub(1));
-                for s in lo..=slot {
-                    cap.push((idx[ji][c][s], p.1 as f64));
+        for (ci, &g_k) in g_class.iter().enumerate() {
+            let mut cap: Vec<(usize, f64)> = Vec::new();
+            for (ji, (_, ps)) in plans.iter().enumerate() {
+                for (c, p) in ps.iter().enumerate() {
+                    if p.2 != ci {
+                        continue;
+                    }
+                    let dur_slots = (p.3 / dt).ceil() as usize;
+                    // job occupies `slot` if it started in (slot-dur, slot]
+                    let lo = slot.saturating_sub(dur_slots.saturating_sub(1));
+                    for s in lo..=slot {
+                        cap.push((idx[ji][c][s], p.1 as f64));
+                    }
                 }
             }
-        }
-        if !cap.is_empty() {
-            lp.add(cap, Cmp::Le, g_total);
+            if !cap.is_empty() {
+                lp.add(cap, Cmp::Le, g_k);
+            }
         }
     }
     for vs in idx.iter().flatten().flatten() {
@@ -615,8 +753,14 @@ fn exact_slot_choice(
                         }
                     }
                 }
-                let (_, (tech, gpus, runtime)) = found?;
-                out.push(JobPlan { job_id: *id, tech, gpus, runtime_s: runtime });
+                let (_, (tech, gpus, class, runtime)) = found?;
+                out.push(JobPlan {
+                    job_id: *id,
+                    tech,
+                    gpus,
+                    class,
+                    runtime_s: runtime,
+                });
             }
             Some(out)
         }
@@ -646,21 +790,31 @@ pub fn build_schedule(mut choices: Vec<JobPlan>, cluster: &ClusterSpec)
 
 fn lower_bound(choices: &[JobPlan], cluster: &ClusterSpec) -> f64 {
     let longest = choices.iter().map(|p| p.runtime_s).fold(0.0, f64::max);
-    let area: f64 = choices.iter().map(|p| p.gpus as f64 * p.runtime_s).sum();
-    longest.max(area / cluster.total_gpus() as f64)
+    (0..cluster.n_classes())
+        .map(|ci| {
+            let area: f64 = choices
+                .iter()
+                .filter(|p| p.class == ci)
+                .map(|p| p.gpus as f64 * p.runtime_s)
+                .sum();
+            area / cluster.class_gpus(ci).max(1) as f64
+        })
+        .fold(longest, f64::max)
 }
 
-/// Fast list-schedule makespan (same placement rules as the simulator).
+/// Fast list-schedule makespan (same per-class placement rules as the
+/// simulator).
 fn simulate_list(choices: &[JobPlan], cluster: &ClusterSpec) -> f64 {
     let mut free = FreeState::new(cluster);
-    let mut running: Vec<(f64, Vec<(usize, u32)>)> = Vec::new(); // (finish, placement)
+    let mut running: Vec<(f64, Vec<crate::sim::placement::Placement>)> =
+        Vec::new(); // (finish, placement)
     let mut pending: Vec<&JobPlan> = choices.iter().collect();
     let mut now = 0.0f64;
     let mut makespan = 0.0f64;
     while !pending.is_empty() || !running.is_empty() {
         // launch whatever fits, in order (backfill allowed)
         pending.retain(|p| {
-            if let Some(pl) = free.place(p.gpus) {
+            if let Some(pl) = free.place(p.class, p.gpus) {
                 let fin = now + p.runtime_s;
                 makespan = makespan.max(fin);
                 running.push((fin, pl));
@@ -689,10 +843,11 @@ fn simulate_list(choices: &[JobPlan], cluster: &ClusterSpec) -> f64 {
 /// area/critical-path relaxation ignores packing losses, so sweep every
 /// job's alternatives against the simulated schedule and keep improvements.
 /// This is what turns "good on paper" plans into good makespans (and where
-/// Saturn's joint view beats per-job greedy allocation).
+/// Saturn's joint view beats per-job greedy allocation). On mixed fleets
+/// the alternatives include cross-class moves.
 fn local_search(
     plan: &mut SaturnPlan,
-    plans: &[(usize, Vec<(usize, u32, f64)>)],
+    plans: &[(usize, Vec<Cand>)],
     cluster: &ClusterSpec,
 ) {
     for _sweep in 0..64 {
@@ -713,12 +868,19 @@ fn local_search(
             };
             let mut best = plan.predicted_makespan_s;
             let mut best_plan: Option<SaturnPlan> = None;
-            for &(tech, gpus, runtime) in alts {
-                if (tech, gpus) == (plan.choices[pos].tech, plan.choices[pos].gpus) {
+            for &(tech, gpus, class, runtime) in alts {
+                let cur = &plan.choices[pos];
+                if (tech, gpus, class) == (cur.tech, cur.gpus, cur.class) {
                     continue;
                 }
                 let mut cand = plan.choices.clone();
-                cand[pos] = JobPlan { job_id, tech, gpus, runtime_s: runtime };
+                cand[pos] = JobPlan {
+                    job_id,
+                    tech,
+                    gpus,
+                    class,
+                    runtime_s: runtime,
+                };
                 let new_plan = build_schedule(cand, cluster);
                 if new_plan.predicted_makespan_s < best - 1e-9 {
                     best = new_plan.predicted_makespan_s;
@@ -745,7 +907,8 @@ mod tests {
     use crate::trials::profile_analytic;
     use crate::workload::{toy_workload, wikitext_workload};
 
-    fn setup(nodes: u32) -> (Vec<crate::workload::Job>, ProfileTable, ClusterSpec) {
+    fn setup(nodes: u32)
+        -> (Vec<crate::workload::Job>, ProfileTable, ClusterSpec) {
         let jobs = wikitext_workload();
         let cluster = ClusterSpec::p4d(nodes);
         let lib = default_library();
@@ -878,6 +1041,98 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_single_class_matches_pooled_formulation() {
+        // acceptance bar: an all-A100 fleet routed through the per-class
+        // machinery yields the pre-change (pooled) solver's objective
+        // within 1e-6
+        for nodes in [1u32, 2] {
+            let jobs = toy_workload(8);
+            let cluster = ClusterSpec::p4d(nodes);
+            let lib = default_library();
+            let profiles = profile_analytic(&jobs, &lib, &cluster);
+            let rem: Vec<(usize, u64)> =
+                jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+            let (per_class, _) = plan_selection_probe(
+                &rem, &profiles, &cluster, MilpEngine::Revised)
+                .expect("per-class probe");
+            let (pooled, _) = plan_selection_probe_pooled(
+                &rem, &profiles, &cluster, MilpEngine::Revised)
+                .expect("pooled probe");
+            assert!((per_class - pooled).abs()
+                        <= 1e-6 * pooled.abs().max(1.0),
+                    "{nodes} node(s): per-class {per_class} vs pooled {pooled}");
+        }
+    }
+
+    #[test]
+    fn hetero_fleet_plans_use_both_classes() {
+        // with 12 jobs and two one-node classes, the joint solver should
+        // spread work across classes (leaving the H100 idle forfeits 3x
+        // the FLOPs of the A100 node)
+        let jobs = wikitext_workload();
+        let cluster = ClusterSpec::hetero(1, 1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let (plan, _) = solve_joint(&remaining(&jobs), &profiles, &cluster,
+                                    SolverMode::Joint);
+        assert_eq!(plan.choices.len(), 12);
+        let classes: std::collections::BTreeSet<usize> =
+            plan.choices.iter().map(|p| p.class).collect();
+        assert_eq!(classes.len(), 2,
+                   "solver left a whole class idle: {classes:?}");
+        // per-class area never exceeds what the class can host by M
+        for ci in 0..cluster.n_classes() {
+            assert!(plan.area_in_class(ci)
+                        <= cluster.class_gpus(ci) as f64
+                            * plan.predicted_makespan_s + 1e-6);
+        }
+    }
+
+    #[test]
+    fn hetero_fleet_beats_its_a100_half() {
+        let jobs = wikitext_workload();
+        let lib = default_library();
+        let rem = remaining(&jobs);
+        let small = ClusterSpec::p4d(1);
+        let p_small = profile_analytic(&jobs, &lib, &small);
+        let (m_small, _) = solve_joint(&rem, &p_small, &small,
+                                       SolverMode::Joint);
+        let mixed = ClusterSpec::hetero(1, 1);
+        let p_mixed = profile_analytic(&jobs, &lib, &mixed);
+        let (m_mixed, _) = solve_joint(&rem, &p_mixed, &mixed,
+                                       SolverMode::Joint);
+        assert!(m_mixed.predicted_makespan_s < m_small.predicted_makespan_s,
+                "adding an H100 node did not help: {} vs {}",
+                m_mixed.predicted_makespan_s, m_small.predicted_makespan_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "fit no GPU class")]
+    fn job_fitting_no_class_panics_with_clear_error() {
+        use crate::models::{DatasetSpec, ModelSpec};
+        use crate::workload::Job;
+        // a pathological model whose activation checkpoints alone overflow
+        // every class: even offload at full fleet width is infeasible
+        let mut model = ModelSpec::gpt2_xl();
+        model.hidden = 1_000_000;
+        model.act_bytes_per_sample = 1e15;
+        let jobs = vec![Job {
+            id: 0,
+            name: "monster".into(),
+            model,
+            dataset: DatasetSpec { name: "toy".into(), samples: 64 },
+            lr: 1e-4,
+            batch: 16,
+            epochs: 1,
+        }];
+        let cluster = ClusterSpec::hetero(1, 1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem = vec![(0usize, jobs[0].total_steps())];
+        let _ = solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+    }
+
+    #[test]
     fn seed_reference_path_still_plans_every_job() {
         let (jobs, profiles, cluster) = setup(1);
         let (plan, stats) =
@@ -921,6 +1176,29 @@ mod tests {
     }
 
     #[test]
+    fn rolling_horizon_on_mixed_fleet_tracks_class_budgets() {
+        let jobs = toy_workload(40);
+        let cluster = ClusterSpec::hetero(1, 1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (plan, stats) = solve_joint(
+            &rem, &profiles, &cluster,
+            SolverMode::RollingHorizon { window: 16, overlap: 4 });
+        assert_eq!(plan.choices.len(), 40);
+        assert!(stats.windows >= 2);
+        // the committed-area coupling is per class: neither class's area
+        // may exceed its own G_k * M
+        for ci in 0..cluster.n_classes() {
+            assert!(plan.area_in_class(ci)
+                        <= cluster.class_gpus(ci) as f64
+                            * plan.predicted_makespan_s + 1e-6,
+                    "class {ci} oversubscribed");
+        }
+    }
+
+    #[test]
     fn rolling_horizon_quality_tracks_joint_on_medium_instances() {
         let jobs = toy_workload(24);
         let cluster = ClusterSpec::p4d(2);
@@ -954,7 +1232,8 @@ mod tests {
         let (a, b) = (run(), run());
         assert_eq!(a.choices.len(), b.choices.len());
         for (pa, pb) in a.choices.iter().zip(&b.choices) {
-            assert_eq!((pa.job_id, pa.tech, pa.gpus), (pb.job_id, pb.tech, pb.gpus));
+            assert_eq!((pa.job_id, pa.tech, pa.gpus, pa.class),
+                       (pb.job_id, pb.tech, pb.gpus, pb.class));
         }
         assert_eq!(a.predicted_makespan_s, b.predicted_makespan_s);
     }

@@ -15,17 +15,19 @@
 //! `online` CLI replays traces to bit-identical schedules.
 
 use crate::cluster::ClusterSpec;
-use crate::sim::placement::FreeState;
+use crate::sim::placement::{FreeState, Placement};
 use crate::trials::ProfileTable;
 use crate::workload::arrivals::OnlineJob;
 use crate::workload::Job;
 
-/// A policy's decision: run `job_id` with `tech` on `gpus` GPUs.
+/// A policy's decision: run `job_id` with `tech` on `gpus` GPUs of one
+/// GPU `class`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Launch {
     pub job_id: usize,
     pub tech: usize,
     pub gpus: u32,
+    pub class: usize,
 }
 
 /// A job currently holding GPUs.
@@ -33,7 +35,8 @@ pub struct Launch {
 pub struct Running {
     pub tech: usize,
     pub gpus: u32,
-    pub placement: Vec<(usize, u32)>,
+    pub class: usize,
+    pub placement: Vec<Placement>,
     pub step_time: f64,
     /// Virtual time at which steps start accumulating (start + restart lag).
     pub resume_at: f64,
@@ -47,8 +50,9 @@ pub struct JobProgress {
     pub steps_done: u64,
     pub running: Option<Running>,
     pub finished_at: Option<f64>,
-    /// Last (tech, gpus) this job ran under (checkpoint-penalty detection).
-    pub last_alloc: Option<(usize, u32)>,
+    /// Last (tech, gpus, class) this job ran under (checkpoint-penalty
+    /// detection — a class move is a migration like any other reshape).
+    pub last_alloc: Option<(usize, u32, usize)>,
     /// Virtual time at which the job becomes schedulable (0 in batch mode).
     pub arrival_s: f64,
     /// Flipped by the engine once virtual time reaches `arrival_s`.
@@ -390,7 +394,7 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                     if s.remaining_steps() == 0 {
                         s.finished_at = Some(now);
                     } else {
-                        s.last_alloc = Some((r.tech, r.gpus));
+                        s.last_alloc = Some((r.tech, r.gpus, r.class));
                     }
                 }
             }
@@ -467,18 +471,18 @@ fn rung_crossing(s: &JobProgress, rc: &RungConfig, now: f64) -> Option<f64> {
     Some(t.max(now))
 }
 
-fn snapshot_allocs(state: &[JobProgress]) -> Vec<Option<(usize, u32)>> {
+fn snapshot_allocs(state: &[JobProgress]) -> Vec<Option<(usize, u32, usize)>> {
     state.iter().map(|s| s.last_alloc).collect()
 }
 
-fn count_migrations(before: &[Option<(usize, u32)>], state: &[JobProgress])
-    -> usize {
+fn count_migrations(before: &[Option<(usize, u32, usize)>],
+                    state: &[JobProgress]) -> usize {
     state
         .iter()
         .zip(before)
         .filter(|(s, prev)| {
             if let (Some(r), Some(prev)) = (&s.running, prev) {
-                (r.tech, r.gpus) != *prev
+                (r.tech, r.gpus, r.class) != *prev
             } else {
                 false
             }
@@ -500,13 +504,14 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         if !s.is_pending() {
             continue; // policy asked for a running/finished job; ignore
         }
-        let Some(step_time) = profiles.step_time(l.job_id, l.tech, l.gpus)
+        let Some(step_time) =
+            profiles.step_time(l.job_id, l.tech, l.gpus, l.class)
         else {
             continue; // infeasible plan; ignore defensively
         };
-        let Some(placement) = free.place(l.gpus) else { continue };
+        let Some(placement) = free.place(l.class, l.gpus) else { continue };
         // checkpoint/restart lag when the allocation changed shape
-        let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus))
+        let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus, l.class))
             .unwrap_or(false);
         let lag = if migrated { cfg.checkpoint_penalty_s } else { 0.0 };
         if migrated {
@@ -517,12 +522,13 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         s.running = Some(Running {
             tech: l.tech,
             gpus: l.gpus,
+            class: l.class,
             placement,
             step_time,
             resume_at,
             planned_finish: resume_at + remaining * step_time,
         });
-        s.last_alloc = Some((l.tech, l.gpus));
+        s.last_alloc = Some((l.tech, l.gpus, l.class));
         *launches += 1;
     }
 }
@@ -546,10 +552,15 @@ mod tests {
             let mut free = ctx.free.clone();
             let mut out = Vec::new();
             for s in ctx.jobs.iter().filter(|s| s.is_pending()) {
-                let g = ctx.cluster.node.gpus_per_node;
-                if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g) {
-                    if free.place(g).is_some() {
-                        out.push(Launch { job_id: s.job.id, tech, gpus: g });
+                let g = ctx.cluster.gpus_per_node();
+                if let Some((tech, _)) = ctx.profiles.best_at(s.job.id, g, 0) {
+                    if free.place(0, g).is_some() {
+                        out.push(Launch {
+                            job_id: s.job.id,
+                            tech,
+                            gpus: g,
+                            class: 0,
+                        });
                     }
                 }
             }
@@ -586,8 +597,8 @@ mod tests {
         let expected: f64 = jobs
             .iter()
             .map(|j| {
-                let (tech, _) = profiles.best_at(j.id, 8).unwrap();
-                profiles.step_time(j.id, tech, 8).unwrap()
+                let (tech, _) = profiles.best_at(j.id, 8, 0).unwrap();
+                profiles.step_time(j.id, tech, 8, 0).unwrap()
                     * j.total_steps() as f64
             })
             .sum();

@@ -11,4 +11,4 @@ pub mod placement;
 pub use engine::{simulate, simulate_online, JobProgress, Launch,
                  OnlineSimResult, PlanContext, Policy, Running, RungConfig,
                  SimConfig, SimResult};
-pub use placement::FreeState;
+pub use placement::{FreeState, Placement};

@@ -1,56 +1,100 @@
 //! GPU placement rules: jobs <= node size must be contained in one node
-//! (NVLink domain); larger jobs take whole nodes. Mirrors how DL schedulers
-//! place collective groups on p4d fleets.
+//! (NVLink domain); larger jobs take whole nodes; jobs never span GPU
+//! classes (a collective group mixes neither fabric generations nor
+//! memory sizes). Mirrors how DL schedulers place collective groups on
+//! p4d/p5 fleets.
 
 use crate::cluster::ClusterSpec;
 
-/// Free-GPU bookkeeping per node.
+/// One per-node grant of a placement: `gpus` GPUs on `node` of `class`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub class: usize,
+    pub node: usize,
+    pub gpus: u32,
+}
+
+/// Free-GPU bookkeeping for one homogeneous class.
 #[derive(Debug, Clone, PartialEq)]
-pub struct FreeState {
+pub struct ClassFree {
     pub free: Vec<u32>,
     pub per_node: u32,
+}
+
+/// Free-GPU bookkeeping per class, per node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreeState {
+    pub classes: Vec<ClassFree>,
 }
 
 impl FreeState {
     pub fn new(cluster: &ClusterSpec) -> Self {
         FreeState {
-            free: vec![cluster.node.gpus_per_node; cluster.nodes as usize],
-            per_node: cluster.node.gpus_per_node,
+            classes: cluster
+                .classes
+                .iter()
+                .map(|c| ClassFree {
+                    free: vec![c.node.gpus_per_node; c.nodes as usize],
+                    per_node: c.node.gpus_per_node,
+                })
+                .collect(),
         }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
     }
 
     pub fn total_free(&self) -> u32 {
-        self.free.iter().sum()
+        self.classes.iter().map(|c| c.free.iter().sum::<u32>()).sum()
     }
 
-    /// Try to place `gpus`; returns per-node grants and mutates `free`.
-    /// Best-fit within a node for small jobs (reduces fragmentation);
-    /// whole nodes for multi-node jobs.
-    pub fn place(&mut self, gpus: u32) -> Option<Vec<(usize, u32)>> {
+    /// Free GPUs within one class.
+    pub fn class_free(&self, class: usize) -> u32 {
+        self.classes
+            .get(class)
+            .map(|c| c.free.iter().sum())
+            .unwrap_or(0)
+    }
+
+    /// Total capacity of one class (free or busy).
+    pub fn class_capacity(&self, class: usize) -> u32 {
+        self.classes
+            .get(class)
+            .map(|c| c.per_node * c.free.len() as u32)
+            .unwrap_or(0)
+    }
+
+    /// Try to place `gpus` on `class`; returns per-node grants and mutates
+    /// the class's free counts. Best-fit within a node for small jobs
+    /// (reduces fragmentation); whole nodes for multi-node jobs.
+    pub fn place(&mut self, class: usize, gpus: u32)
+        -> Option<Vec<Placement>> {
         if gpus == 0 {
             return None;
         }
-        if gpus <= self.per_node {
+        let cf = self.classes.get_mut(class)?;
+        if gpus <= cf.per_node {
             // best-fit: the feasible node with the least free capacity
-            let node = self
+            let node = cf
                 .free
                 .iter()
                 .enumerate()
                 .filter(|(_, &f)| f >= gpus)
                 .min_by_key(|(_, &f)| f)
                 .map(|(i, _)| i)?;
-            self.free[node] -= gpus;
-            Some(vec![(node, gpus)])
+            cf.free[node] -= gpus;
+            Some(vec![Placement { class, node, gpus }])
         } else {
-            if gpus % self.per_node != 0 {
+            if gpus % cf.per_node != 0 {
                 return None; // multi-node jobs use whole nodes
             }
-            let need = (gpus / self.per_node) as usize;
-            let full: Vec<usize> = self
+            let need = (gpus / cf.per_node) as usize;
+            let full: Vec<usize> = cf
                 .free
                 .iter()
                 .enumerate()
-                .filter(|(_, &f)| f == self.per_node)
+                .filter(|(_, &f)| f == cf.per_node)
                 .map(|(i, _)| i)
                 .take(need)
                 .collect();
@@ -58,21 +102,27 @@ impl FreeState {
                 return None;
             }
             for &i in &full {
-                self.free[i] = 0;
+                cf.free[i] = 0;
             }
-            Some(full.into_iter().map(|i| (i, self.per_node)).collect())
+            let per_node = cf.per_node;
+            Some(
+                full.into_iter()
+                    .map(|node| Placement { class, node, gpus: per_node })
+                    .collect(),
+            )
         }
     }
 
     /// Check placement feasibility without mutating.
-    pub fn can_place(&self, gpus: u32) -> bool {
-        self.clone().place(gpus).is_some()
+    pub fn can_place(&self, class: usize, gpus: u32) -> bool {
+        self.clone().place(class, gpus).is_some()
     }
 
-    pub fn release(&mut self, placement: &[(usize, u32)]) {
-        for &(node, g) in placement {
-            self.free[node] += g;
-            debug_assert!(self.free[node] <= self.per_node,
+    pub fn release(&mut self, placement: &[Placement]) {
+        for p in placement {
+            let cf = &mut self.classes[p.class];
+            cf.free[p.node] += p.gpus;
+            debug_assert!(cf.free[p.node] <= cf.per_node,
                           "released more GPUs than the node has");
         }
     }
@@ -89,7 +139,7 @@ mod tests {
     #[test]
     fn small_job_single_node() {
         let mut f = fleet(2);
-        let p = f.place(4).unwrap();
+        let p = f.place(0, 4).unwrap();
         assert_eq!(p.len(), 1);
         assert_eq!(f.total_free(), 12);
     }
@@ -97,37 +147,63 @@ mod tests {
     #[test]
     fn best_fit_prefers_fuller_node() {
         let mut f = fleet(2);
-        f.place(6).unwrap(); // node A now has 2 free
-        let p = f.place(2).unwrap(); // should slot into node A
-        assert_eq!(p[0].0, 0);
-        assert_eq!(f.free, vec![0, 8]);
+        f.place(0, 6).unwrap(); // node A now has 2 free
+        let p = f.place(0, 2).unwrap(); // should slot into node A
+        assert_eq!(p[0].node, 0);
+        assert_eq!(f.classes[0].free, vec![0, 8]);
     }
 
     #[test]
     fn no_cross_node_fragmentation_for_small_jobs() {
         let mut f = fleet(2);
-        f.place(5).unwrap();
-        f.place(5).unwrap();
+        f.place(0, 5).unwrap();
+        f.place(0, 5).unwrap();
         // 3+3 free across nodes: a 5-GPU job must NOT span them
-        assert!(f.place(5).is_none());
+        assert!(f.place(0, 5).is_none());
         assert_eq!(f.total_free(), 6);
     }
 
     #[test]
     fn multi_node_needs_whole_nodes() {
         let mut f = fleet(2);
-        assert!(f.clone().place(16).is_some());
-        f.place(1).unwrap();
-        assert!(f.place(16).is_none()); // one node is no longer empty
-        assert!(f.place(12).is_none()); // not a whole-node multiple
+        assert!(f.clone().place(0, 16).is_some());
+        f.place(0, 1).unwrap();
+        assert!(f.place(0, 16).is_none()); // one node is no longer empty
+        assert!(f.place(0, 12).is_none()); // not a whole-node multiple
     }
 
     #[test]
     fn release_restores() {
         let mut f = fleet(1);
-        let p = f.place(8).unwrap();
+        let p = f.place(0, 8).unwrap();
         assert_eq!(f.total_free(), 0);
         f.release(&p);
         assert_eq!(f.total_free(), 8);
+    }
+
+    #[test]
+    fn classes_are_isolated_pools() {
+        let mut f = FreeState::new(&ClusterSpec::hetero(1, 1));
+        assert_eq!(f.n_classes(), 2);
+        assert_eq!(f.class_free(0), 8);
+        assert_eq!(f.class_free(1), 8);
+        // fill the A100 class; the H100 class is untouched and a further
+        // A100 placement must fail rather than spill across classes
+        let p = f.place(0, 8).unwrap();
+        assert!(p.iter().all(|g| g.class == 0));
+        assert_eq!(f.class_free(0), 0);
+        assert_eq!(f.class_free(1), 8);
+        assert!(f.place(0, 1).is_none());
+        assert!(f.place(1, 8).is_some());
+        f.release(&p);
+        assert_eq!(f.class_free(0), 8);
+    }
+
+    #[test]
+    fn unknown_class_rejected() {
+        let mut f = fleet(1);
+        assert!(f.place(3, 1).is_none());
+        assert!(!f.can_place(3, 1));
+        assert_eq!(f.class_free(3), 0);
     }
 }

@@ -238,10 +238,12 @@ impl Tableau {
             for i in 0..self.m {
                 if self.a[i][e] > EPS {
                     let ratio = self.a[i][self.cols] / self.a[i][e];
+                    let tie = match leave {
+                        Some(l) => self.basis[i] < self.basis[l],
+                        None => true,
+                    };
                     if ratio < best_ratio - EPS
-                        || (ratio < best_ratio + EPS
-                            && leave
-                                .map_or(true, |l| self.basis[i] < self.basis[l]))
+                        || (ratio < best_ratio + EPS && tie)
                     {
                         best_ratio = ratio;
                         leave = Some(i);

@@ -368,16 +368,21 @@ fn solve_revised(
                 let f = x[j] - x[j].floor();
                 if f > 1e-6 && f < 1.0 - 1e-6 {
                     let score = pc.score(j, f);
-                    if branch.map_or(true, |(_, s, _)| score > s + 1e-12) {
+                    let take = match branch {
+                        Some((_, s, _)) => score > s + 1e-12,
+                        None => true,
+                    };
+                    if take {
                         branch = Some((j, score, f));
                     }
                 }
             }
             match branch {
                 None => {
-                    let better = incumbent
-                        .as_ref()
-                        .map_or(true, |(_, best)| objective < *best);
+                    let better = match &incumbent {
+                        Some((_, best)) => objective < *best,
+                        None => true,
+                    };
                     if better {
                         incumbent =
                             Some((round_ints(x, integer_vars), objective));

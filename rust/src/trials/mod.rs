@@ -1,9 +1,13 @@
-//! The Trial Runner (paper §2): profiles every (job, technique, GPU count)
-//! combination and materializes the estimates the Solver consumes.
+//! The Trial Runner (paper §2): profiles every (job, technique, GPU count,
+//! GPU class) combination and materializes the estimates the Solver
+//! consumes.
 //!
 //! Two modes:
-//!  * **Analytic** — `Parallelism::search` cost models against the cluster
-//!    spec (the Table 2 simulation path; GPUs don't exist on this testbed).
+//!  * **Analytic** — `Parallelism::search` cost models against each GPU
+//!    class's view of the cluster spec (the Table 2 simulation path; GPUs
+//!    don't exist on this testbed). On heterogeneous fleets every class is
+//!    profiled separately, because memory feasibility and step times are
+//!    hardware-dependent (Hydra's lesson: plan choice follows the GPU).
 //!  * **Empirical** — measured PJRT-CPU step times of the AOT GPT-mini
 //!    artifacts, scaled by the cost models' parallel efficiency. Used by
 //!    `examples/e2e_train.rs` so the full profile->solve->train loop runs
@@ -16,12 +20,14 @@ use crate::cluster::ClusterSpec;
 use crate::parallelism::{Library, StepEstimate};
 use crate::workload::Job;
 
-/// Profiling results for a multi-job: `(job, tech, gpus) -> StepEstimate`.
+/// Profiling results for a multi-job:
+/// `(job, tech, gpus, class) -> StepEstimate`.
 #[derive(Debug, Clone, Default)]
 pub struct ProfileTable {
-    /// Keyed by (job_id, tech_idx, gpus).
-    entries: HashMap<(usize, usize, u32), StepEstimate>,
-    pub gpu_options: Vec<u32>,
+    /// Keyed by (job_id, tech_idx, gpus, class_idx).
+    entries: HashMap<(usize, usize, u32, usize), StepEstimate>,
+    /// Allocation options per GPU class (class index -> sorted GPU counts).
+    pub class_gpu_options: Vec<Vec<u32>>,
     pub n_techniques: usize,
     /// Seconds of (simulated) profiling work performed — the paper claims
     /// this is negligible; bench E7 checks that claim.
@@ -29,31 +35,43 @@ pub struct ProfileTable {
 }
 
 impl ProfileTable {
-    pub fn new(gpu_options: Vec<u32>, n_techniques: usize) -> Self {
-        ProfileTable { gpu_options, n_techniques, ..Default::default() }
+    pub fn new(class_gpu_options: Vec<Vec<u32>>, n_techniques: usize) -> Self {
+        ProfileTable { class_gpu_options, n_techniques, ..Default::default() }
     }
 
-    pub fn get(&self, job: usize, tech: usize, gpus: u32) -> Option<&StepEstimate> {
-        self.entries.get(&(job, tech, gpus))
+    pub fn n_classes(&self) -> usize {
+        self.class_gpu_options.len()
     }
 
-    pub fn step_time(&self, job: usize, tech: usize, gpus: u32) -> Option<f64> {
-        self.get(job, tech, gpus).map(|e| e.step_time_s)
+    pub fn get(&self, job: usize, tech: usize, gpus: u32, class: usize)
+        -> Option<&StepEstimate> {
+        self.entries.get(&(job, tech, gpus, class))
     }
 
-    /// Fastest feasible (tech, step_time) at a given GPU count.
-    pub fn best_at(&self, job: usize, gpus: u32) -> Option<(usize, f64)> {
+    pub fn step_time(&self, job: usize, tech: usize, gpus: u32, class: usize)
+        -> Option<f64> {
+        self.get(job, tech, gpus, class).map(|e| e.step_time_s)
+    }
+
+    /// Fastest feasible (tech, step_time) at a given GPU count on a class.
+    pub fn best_at(&self, job: usize, gpus: u32, class: usize)
+        -> Option<(usize, f64)> {
         (0..self.n_techniques)
-            .filter_map(|t| self.step_time(job, t, gpus).map(|s| (t, s)))
+            .filter_map(|t| self.step_time(job, t, gpus, class).map(|s| (t, s)))
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
-    /// All feasible plans for a job as (tech, gpus, step_time), pruned to
-    /// the per-GPU-count winner (the Pareto set the solver searches).
-    pub fn pareto_plans(&self, job: usize) -> Vec<(usize, u32, f64)> {
+    /// All feasible plans for a job ON ONE CLASS as (tech, gpus,
+    /// step_time), pruned to the per-GPU-count winner and to strictly
+    /// improving runtimes (the per-class Pareto set).
+    pub fn pareto_plans(&self, job: usize, class: usize)
+        -> Vec<(usize, u32, f64)> {
+        let Some(options) = self.class_gpu_options.get(class) else {
+            return Vec::new();
+        };
         let mut plans = Vec::new();
-        for &g in &self.gpu_options {
-            if let Some((tech, t)) = self.best_at(job, g) {
+        for &g in options {
+            if let Some((tech, t)) = self.best_at(job, g, class) {
                 plans.push((tech, g, t));
             }
         }
@@ -67,8 +85,35 @@ impl ProfileTable {
         pruned
     }
 
-    pub fn insert(&mut self, job: usize, tech: usize, gpus: u32, e: StepEstimate) {
-        self.entries.insert((job, tech, gpus), e);
+    /// The solver's search space: the union of every class's Pareto set,
+    /// tagged with the class index, as (tech, gpus, class, step_time)
+    /// sorted by step time descending (slowest/cheapest first — the ladder
+    /// the greedy allocator climbs). On a single-class fleet this is
+    /// exactly the homogeneous Pareto set with class 0.
+    pub fn candidate_plans(&self, job: usize) -> Vec<(usize, u32, usize, f64)> {
+        let mut all: Vec<(usize, u32, usize, f64)> = Vec::new();
+        for ci in 0..self.n_classes() {
+            for (tech, g, t) in self.pareto_plans(job, ci) {
+                all.push((tech, g, ci, t));
+            }
+        }
+        all.sort_by(|a, b| {
+            b.3.partial_cmp(&a.3)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.2.cmp(&b.2))
+                .then(a.1.cmp(&b.1))
+        });
+        all
+    }
+
+    /// Whether the job has at least one feasible plan on ANY class.
+    pub fn feasible_anywhere(&self, job: usize) -> bool {
+        (0..self.n_classes()).any(|ci| !self.pareto_plans(job, ci).is_empty())
+    }
+
+    pub fn insert(&mut self, job: usize, tech: usize, gpus: u32, class: usize,
+                  e: StepEstimate) {
+        self.entries.insert((job, tech, gpus, class), e);
     }
 
     pub fn len(&self) -> usize {
@@ -83,21 +128,32 @@ impl ProfileTable {
 /// Number of mini-batches timed per probe (paper: "one or two").
 pub const PROBE_STEPS: f64 = 2.0;
 
-/// Profile a multi-job analytically against the cost models.
+/// Profile a multi-job analytically against the cost models, one GPU class
+/// at a time (each class's single-class view carries its own GpuSpec and
+/// bandwidths into the cost models).
 pub fn profile_analytic(jobs: &[Job], library: &Library,
                         cluster: &ClusterSpec) -> ProfileTable {
+    let class_gpu_options: Vec<Vec<u32>> = (0..cluster.n_classes())
+        .map(|ci| cluster.class_allocation_options(ci))
+        .collect();
     let mut table = ProfileTable {
-        gpu_options: cluster.allocation_options(),
+        class_gpu_options,
         n_techniques: library.len(),
         ..Default::default()
     };
-    for job in jobs {
-        for (ti, tech) in library.iter() {
-            for &g in &table.gpu_options.clone() {
-                if let Some(est) = tech.search(&job.model, cluster, g, job.batch) {
-                    // the real system would time PROBE_STEPS mini-batches
-                    table.profiling_cost_s += PROBE_STEPS * est.step_time_s;
-                    table.insert(job.id, ti, g, est);
+    for ci in 0..cluster.n_classes() {
+        let view = cluster.class_view(ci);
+        let options = table.class_gpu_options[ci].clone();
+        for job in jobs {
+            for (ti, tech) in library.iter() {
+                for &g in &options {
+                    if let Some(est) =
+                        tech.search(&job.model, &view, g, job.batch)
+                    {
+                        // the real system would time PROBE_STEPS mini-batches
+                        table.profiling_cost_s += PROBE_STEPS * est.step_time_s;
+                        table.insert(job.id, ti, g, ci, est);
+                    }
                 }
             }
         }
@@ -118,14 +174,17 @@ pub fn profile_empirical(jobs: &[Job], library: &Library,
         // compute core matches the measurement while preserving each
         // technique's relative efficiency profile.
         let base = table
-            .best_at(job.id, 1)
+            .best_at(job.id, 1, 0)
             .map(|(_, t)| t)
             .unwrap_or(measured);
         let scale = measured / base.max(1e-12);
-        for ti in 0..table.n_techniques {
-            for &g in &table.gpu_options.clone() {
-                if let Some(e) = table.entries.get_mut(&(job.id, ti, g)) {
-                    e.step_time_s *= scale;
+        for ci in 0..table.n_classes() {
+            for ti in 0..table.n_techniques {
+                for &g in &table.class_gpu_options[ci].clone() {
+                    if let Some(e) = table.entries.get_mut(&(job.id, ti, g, ci))
+                    {
+                        e.step_time_s *= scale;
+                    }
                 }
             }
         }
@@ -148,9 +207,12 @@ mod tests {
         let (jobs, lib, cluster) = setup();
         let t = profile_analytic(&jobs, &lib, &cluster);
         assert!(!t.is_empty());
+        assert_eq!(t.n_classes(), 1);
         // every job must have at least one feasible plan (offload backstop)
         for j in &jobs {
-            assert!(!t.pareto_plans(j.id).is_empty(), "job {} has no plan", j.name);
+            assert!(!t.pareto_plans(j.id, 0).is_empty(),
+                    "job {} has no plan", j.name);
+            assert!(t.feasible_anywhere(j.id));
         }
     }
 
@@ -160,8 +222,8 @@ mod tests {
         let t = profile_analytic(&jobs, &lib, &cluster);
         let gptj = jobs.iter().find(|j| j.model.name == "GPT-J").unwrap();
         let (ddp_idx, _) = lib.by_name("ddp").unwrap();
-        for &g in &t.gpu_options {
-            assert!(t.step_time(gptj.id, ddp_idx, g).is_none());
+        for &g in &t.class_gpu_options[0] {
+            assert!(t.step_time(gptj.id, ddp_idx, g, 0).is_none());
         }
     }
 
@@ -170,7 +232,7 @@ mod tests {
         let (jobs, lib, cluster) = setup();
         let t = profile_analytic(&jobs, &lib, &cluster);
         for j in &jobs {
-            let plans = t.pareto_plans(j.id);
+            let plans = t.pareto_plans(j.id, 0);
             for w in plans.windows(2) {
                 assert!(w[1].1 > w[0].1, "gpus increase");
                 assert!(w[1].2 < w[0].2, "runtime decreases");
@@ -186,18 +248,63 @@ mod tests {
     }
 
     #[test]
+    fn hetero_fleet_profiles_every_class() {
+        let (jobs, lib, _) = setup();
+        let cluster = ClusterSpec::hetero(1, 1);
+        let t = profile_analytic(&jobs, &lib, &cluster);
+        assert_eq!(t.n_classes(), 2);
+        for j in &jobs {
+            // the H100 class (bigger memory) admits at least as many
+            // Pareto points as the A100 class admits
+            let a = t.pareto_plans(j.id, 0);
+            let h = t.pareto_plans(j.id, 1);
+            assert!(!h.is_empty(), "job {} has no H100 plan", j.name);
+            // candidates carry both classes, sorted by runtime descending
+            let cands = t.candidate_plans(j.id);
+            assert_eq!(cands.len(), a.len() + h.len());
+            for w in cands.windows(2) {
+                assert!(w[1].3 <= w[0].3 + 1e-12, "ladder not sorted");
+            }
+            assert!(cands.iter().any(|c| c.2 == 1));
+        }
+    }
+
+    #[test]
+    fn h100_step_times_beat_a100_at_same_point() {
+        let (jobs, lib, _) = setup();
+        let cluster = ClusterSpec::hetero(1, 1);
+        let t = profile_analytic(&jobs, &lib, &cluster);
+        let mut compared = 0;
+        for j in &jobs {
+            for ti in 0..t.n_techniques {
+                for &g in &t.class_gpu_options[0] {
+                    if let (Some(a), Some(h)) =
+                        (t.step_time(j.id, ti, g, 0), t.step_time(j.id, ti, g, 1))
+                    {
+                        assert!(h < a,
+                                "H100 {h} !< A100 {a} (job {} tech {ti} g{g})",
+                                j.name);
+                        compared += 1;
+                    }
+                }
+            }
+        }
+        assert!(compared > 0, "no overlapping feasible points");
+    }
+
+    #[test]
     fn empirical_rescaling_applies() {
         let (jobs, lib, cluster) = setup();
         let mut measured = HashMap::new();
         measured.insert(0usize, 123.0);
         let base = profile_analytic(&jobs, &lib, &cluster);
         let emp = profile_empirical(&jobs, &lib, &cluster, &measured);
-        let (t0, _) = base.best_at(0, 1).unwrap();
-        let before = base.step_time(0, t0, 1).unwrap();
-        let after = emp.step_time(0, t0, 1).unwrap();
+        let (t0, _) = base.best_at(0, 1, 0).unwrap();
+        let before = base.step_time(0, t0, 1, 0).unwrap();
+        let after = emp.step_time(0, t0, 1, 0).unwrap();
         assert!((after - 123.0).abs() < 1e-6, "{after} vs 123");
         assert!((before - 123.0).abs() > 1.0, "{before} was already 123?");
         // untouched job unchanged
-        assert_eq!(base.step_time(1, t0, 1), emp.step_time(1, t0, 1));
+        assert_eq!(base.step_time(1, t0, 1, 0), emp.step_time(1, t0, 1, 0));
     }
 }

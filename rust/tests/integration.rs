@@ -55,7 +55,8 @@ fn profiles_internally_consistent_across_node_counts() {
     for j in &jobs {
         for t in 0..p1.n_techniques {
             for g in [1u32, 2, 4, 8] {
-                assert_eq!(p1.step_time(j.id, t, g), p2.step_time(j.id, t, g),
+                assert_eq!(p1.step_time(j.id, t, g, 0),
+                           p2.step_time(j.id, t, g, 0),
                            "job {} tech {t} g{g}", j.name);
             }
         }

@@ -1,0 +1,260 @@
+//! Property-based invariants for heterogeneous (multi-class) fleets, via
+//! the in-repo `util::prop` framework:
+//!
+//!  * per-class placement never exceeds the class's capacity, and jobs
+//!    never spill across classes;
+//!  * `FreeState::place`/`release` round-trip per class under random
+//!    interleavings;
+//!  * a single-class (all-A100) fleet routed through the per-class solver
+//!    reproduces the homogeneous (pooled) formulation's objective exactly
+//!    (the ISSUE 3 degenerate-fleet acceptance bar, ≤ 1e-6);
+//!  * full mixed-fleet solve → list-schedule replay keeps every class
+//!    within its own capacity at every event time.
+
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::plan::JobPlan;
+use saturn::saturn::solver::{plan_selection_probe,
+                             plan_selection_probe_pooled, solve_joint,
+                             SolverMode};
+use saturn::sim::placement::FreeState;
+use saturn::solver::milp::MilpEngine;
+use saturn::trials::profile_analytic;
+use saturn::util::prop::{forall, IntRange, PairOf, Strategy, VecOf};
+use saturn::util::rng::Rng;
+use saturn::workload::toy_workload;
+
+// ---------------------------------------------------------------------------
+// placement: class capacity + round-trip
+// ---------------------------------------------------------------------------
+
+/// Random (class, gpus) placement requests.
+struct RandomRequests;
+
+impl Strategy for RandomRequests {
+    type Value = Vec<(i64, i64)>;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (0..rng.usize(24) + 1)
+            .map(|_| (rng.range(0, 2), rng.range(1, 17)))
+            .collect()
+    }
+}
+
+#[test]
+fn prop_per_class_placement_never_exceeds_class_capacity() {
+    forall(71, 100, &RandomRequests, |reqs| {
+        let cluster = ClusterSpec::hetero(2, 1); // 16 + 8 GPUs
+        let mut free = FreeState::new(&cluster);
+        let caps: Vec<u32> =
+            (0..2).map(|ci| free.class_capacity(ci)).collect();
+        let mut used = vec![0u32; 2];
+        for &(ci, g) in reqs {
+            let (ci, g) = (ci as usize, g as u32);
+            if let Some(pl) = free.place(ci, g) {
+                // grants stay inside the requested class and sum to g
+                if pl.iter().any(|p| p.class != ci) {
+                    return Err(format!("grant crossed classes: {pl:?}"));
+                }
+                if pl.iter().map(|p| p.gpus).sum::<u32>() != g {
+                    return Err(format!("grant != request for {g} GPUs"));
+                }
+                used[ci] += g;
+                if used[ci] > caps[ci] {
+                    return Err(format!(
+                        "class {ci} oversubscribed: {} > {}",
+                        used[ci], caps[ci]));
+                }
+            }
+            for ci in 0..2 {
+                if free.class_free(ci) + used[ci] != caps[ci] {
+                    return Err(format!("class {ci} accounting leak"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_place_release_round_trips_per_class() {
+    forall(72, 100,
+           &VecOf { inner: PairOf(IntRange(0, 1), IntRange(1, 16)),
+                    min_len: 1, max_len: 16 },
+           |reqs| {
+        let cluster = ClusterSpec::hetero(1, 2);
+        let mut free = FreeState::new(&cluster);
+        let snapshot = free.clone();
+        let mut placed = Vec::new();
+        for &(ci, g) in reqs {
+            if let Some(p) = free.place(ci as usize, g as u32) {
+                placed.push(p);
+            }
+        }
+        // release in reverse order; the free state must be restored
+        // EXACTLY (same per-node counts, not just totals)
+        for p in placed.iter().rev() {
+            free.release(p);
+        }
+        if free != snapshot {
+            return Err(format!(
+                "round-trip mismatch: {free:?} vs {snapshot:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// degenerate single-class fleet == homogeneous solver
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_single_class_fleet_reproduces_homogeneous_objective() {
+    forall(73, 6, &PairOf(IntRange(2, 8), IntRange(1, 2)), |&(n, nodes)| {
+        let jobs = toy_workload(n as usize);
+        let cluster = ClusterSpec::p4d(nodes as u32);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (per_class, _) = plan_selection_probe(&rem, &profiles, &cluster,
+                                                  MilpEngine::Revised)
+            .ok_or("per-class probe failed")?;
+        let (pooled, _) = plan_selection_probe_pooled(
+            &rem, &profiles, &cluster, MilpEngine::Revised)
+            .ok_or("pooled probe failed")?;
+        if (per_class - pooled).abs() > 1e-6 * pooled.abs().max(1.0) {
+            return Err(format!(
+                "degenerate fleet diverged: per-class {per_class} vs \
+                 pooled {pooled}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// mixed-fleet solve: replay with per-class accounting
+// ---------------------------------------------------------------------------
+
+/// Replay a plan's list schedule tracking per-class GPU usage; errors on
+/// any class exceeding its capacity.
+fn replay_per_class(choices: &[JobPlan], cluster: &ClusterSpec)
+    -> Result<(), String> {
+    let caps: Vec<u32> = (0..cluster.n_classes())
+        .map(|ci| cluster.class_gpus(ci))
+        .collect();
+    let mut free = FreeState::new(cluster);
+    let mut used = vec![0u32; cluster.n_classes()];
+    let mut running: Vec<(f64, Vec<saturn::sim::Placement>, usize, u32)> =
+        Vec::new();
+    let mut pending: Vec<&JobPlan> = choices.iter().collect();
+    pending.sort_by(|a, b| b.runtime_s.partial_cmp(&a.runtime_s).unwrap());
+    let mut now = 0.0f64;
+    while !pending.is_empty() || !running.is_empty() {
+        pending.retain(|p| {
+            if let Some(pl) = free.place(p.class, p.gpus) {
+                used[p.class] += p.gpus;
+                running.push((now + p.runtime_s, pl, p.class, p.gpus));
+                false
+            } else {
+                true
+            }
+        });
+        for (ci, (&u, &cap)) in used.iter().zip(&caps).enumerate() {
+            if u > cap {
+                return Err(format!("class {ci}: {u} GPUs in use (> {cap})"));
+            }
+        }
+        if running.is_empty() {
+            return Err(format!("{} jobs can never be placed", pending.len()));
+        }
+        let (i, _) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        let (fin, pl, ci, g) = running.swap_remove(i);
+        now = fin;
+        used[ci] -= g;
+        free.release(&pl);
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mixed_fleet_plans_respect_class_capacity_at_every_event() {
+    forall(74, 8, &PairOf(IntRange(2, 10), IntRange(0, 1)), |&(n, big)| {
+        let jobs = toy_workload(n as usize);
+        let cluster = if big == 1 {
+            ClusterSpec::hetero(2, 1)
+        } else {
+            ClusterSpec::hetero(1, 1)
+        };
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        for mode in [SolverMode::Joint, SolverMode::Heuristic] {
+            let (plan, _) = solve_joint(&rem, &profiles, &cluster, mode);
+            if plan.choices.len() != jobs.len() {
+                return Err(format!("{mode:?}: missing plans"));
+            }
+            for p in &plan.choices {
+                if p.gpus > cluster.class_gpus(p.class) {
+                    return Err(format!(
+                        "{mode:?}: job {} wants {} GPUs of class {} (cap {})",
+                        p.job_id, p.gpus, p.class,
+                        cluster.class_gpus(p.class)));
+                }
+                if profiles
+                    .step_time(p.job_id, p.tech, p.gpus, p.class)
+                    .is_none()
+                {
+                    return Err(format!(
+                        "{mode:?}: infeasible (job={}, tech={}, g={}, \
+                         class={})",
+                        p.job_id, p.tech, p.gpus, p.class));
+                }
+            }
+            replay_per_class(&plan.choices, &cluster)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_mixed_fleet_peaks_within_fleet_capacity() {
+    use saturn::online::{profile_trace, run_trace, ONLINE_SYSTEMS};
+    use saturn::sim::engine::RungConfig;
+    use saturn::workload::{generate_trace, TraceConfig};
+
+    forall(75, 4, &IntRange(0, 500), |&seed| {
+        let trace = generate_trace(&TraceConfig {
+            seed: seed as u64,
+            multijobs: 2,
+            grid_lrs: 2,
+            grid_batches: 1,
+            epochs: 1,
+            tenants: 2,
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::hetero(1, 1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        for sys in ONLINE_SYSTEMS {
+            let (r, m) = run_trace(&trace, Some(&rungs), &profiles, &cluster,
+                                   sys, SolverMode::Joint);
+            if r.peak_gpus > cluster.total_gpus() {
+                return Err(format!("{sys}: peak {} > fleet", r.peak_gpus));
+            }
+            if m.completed + m.early_stopped != trace.jobs.len() {
+                return Err(format!("{sys}: job conservation violated"));
+            }
+            if r.gpu_utilization > 1.0 + 1e-9 {
+                return Err(format!("{sys}: utilization {}",
+                                   r.gpu_utilization));
+            }
+        }
+        Ok(())
+    });
+}

@@ -173,7 +173,7 @@ fn prop_all_policies_finish_every_job_exactly_once() {
                 .iter()
                 .map(|j| {
                     profiles
-                        .pareto_plans(j.id)
+                        .pareto_plans(j.id, 0)
                         .last()
                         .map(|p| p.2 * j.total_steps() as f64)
                         .unwrap_or(0.0)
@@ -200,13 +200,16 @@ fn prop_solver_never_plans_infeasible_combinations() {
         for mode in [SolverMode::Joint, SolverMode::Heuristic] {
             let (plan, _) = solve_joint(&remaining, &profiles, &cluster, mode);
             for p in &plan.choices {
-                if profiles.step_time(p.job_id, p.tech, p.gpus).is_none() {
+                if profiles
+                    .step_time(p.job_id, p.tech, p.gpus, p.class)
+                    .is_none()
+                {
                     return Err(format!(
-                        "plan uses infeasible (job={}, tech={}, g={})",
-                        p.job_id, p.tech, p.gpus));
+                        "plan uses infeasible (job={}, tech={}, g={}, cls={})",
+                        p.job_id, p.tech, p.gpus, p.class));
                 }
-                if p.gpus > cluster.total_gpus() {
-                    return Err("plan exceeds fleet".into());
+                if p.gpus > cluster.class_gpus(p.class) {
+                    return Err("plan exceeds its class".into());
                 }
             }
         }
@@ -221,7 +224,7 @@ fn prop_pareto_runtime_monotone_in_gpus() {
     let lib = default_library();
     let profiles = profile_analytic(&jobs, &lib, &cluster);
     for j in &jobs {
-        let plans = profiles.pareto_plans(j.id);
+        let plans = profiles.pareto_plans(j.id, 0);
         for w in plans.windows(2) {
             assert!(w[1].1 > w[0].1 && w[1].2 < w[0].2,
                     "pareto set not monotone for {}", j.name);
@@ -239,7 +242,7 @@ fn prop_placement_conserves_gpus() {
         let mut placed = Vec::new();
         let mut used = 0;
         for &g in sizes {
-            if let Some(p) = free.place(g as u32) {
+            if let Some(p) = free.place(0, g as u32) {
                 used += g as u32;
                 placed.push(p);
             }

@@ -33,7 +33,7 @@ fn replay_list_schedule(choices: &[JobPlan], cluster: &ClusterSpec)
     -> Result<f64, String> {
     let total = cluster.total_gpus();
     let mut free = FreeState::new(cluster);
-    let mut running: Vec<(f64, Vec<(usize, u32)>, u32)> = Vec::new();
+    let mut running: Vec<(f64, Vec<saturn::sim::Placement>, u32)> = Vec::new();
     let mut pending: Vec<&JobPlan> = choices.iter().collect();
     pending.sort_by(|a, b| b.runtime_s.partial_cmp(&a.runtime_s).unwrap());
     let mut now = 0.0f64;
@@ -42,7 +42,7 @@ fn replay_list_schedule(choices: &[JobPlan], cluster: &ClusterSpec)
     let mut overflow = false;
     while !pending.is_empty() || !running.is_empty() {
         pending.retain(|p| {
-            if let Some(pl) = free.place(p.gpus) {
+            if let Some(pl) = free.place(p.class, p.gpus) {
                 in_use += p.gpus;
                 if in_use > total {
                     overflow = true;
@@ -226,7 +226,7 @@ fn prop_online_jct_and_makespan_respect_physical_floors() {
         let mut min_area_total = 0.0f64;
         let mut arrival_floor = 0.0f64;
         for oj in &trace.jobs {
-            let plans = profiles.pareto_plans(oj.job.id);
+            let plans = profiles.pareto_plans(oj.job.id, 0);
             let steps = oj.job.total_steps() as f64;
             let fastest = plans
                 .iter()
