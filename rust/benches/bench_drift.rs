@@ -1,0 +1,194 @@
+//! Bench E15: estimate drift vs online correction (DESIGN.md §4.4).
+//!
+//! Replays the `bench_online` trace while the TRUTH model drifts away
+//! from the profiled estimates (seeded ramps + interference +
+//! mis-calibration, `DriftConfig::uniform`), and measures online-Saturn
+//! makespan degradation at drift in {0%, 10%, 30%} with the estimate
+//! correction ON vs OFF, against an ORACLE-informed planner (reads the
+//! frozen truth at every replan — the unreachable upper bound). Each
+//! drifted cell is averaged over several drift seeds so a single lucky
+//! packing cannot flip the comparison.
+//!
+//! The drift=0 arm must reproduce `BENCH_online.json`'s online-saturn
+//! makespan within 1e-6 — the refactor is a strict generalization of
+//! the pre-split engine (CI asserts this from the emitted record, and
+//! `tests/prop_drift.rs` holds the engine to it bit-for-bit).
+//!
+//! Emits `BENCH_drift.json` (override with `SATURN_BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_drift`
+
+use saturn::cluster::ClusterSpec;
+use saturn::online::{profile_trace, run_trace_perf, OnlineMetrics};
+use saturn::perf::{DriftConfig, PerfModel};
+use saturn::saturn::solver::SolverMode;
+use saturn::sim::engine::RungConfig;
+use saturn::util::json::Json;
+use saturn::workload::{generate_trace, ArrivalProcess, Trace, TraceConfig};
+
+const DRIFTS: [f64; 3] = [0.0, 0.10, 0.30];
+const DRIFT_SEEDS: [u64; 3] = [7, 8, 9];
+
+struct ArmMean {
+    drift: f64,
+    correction: bool,
+    makespan_s: f64,
+    avg_jct_s: f64,
+    estimate_mae: f64,
+    drift_resolves: f64,
+    lp_capped: f64,
+    observations: f64,
+}
+
+fn run_cell(trace: &Trace, rungs: &RungConfig, cluster: &ClusterSpec,
+            mut perf: PerfModel) -> OnlineMetrics {
+    let (_, m) = run_trace_perf(trace, Some(rungs), &mut perf, cluster,
+                                "online-saturn", SolverMode::Joint, None);
+    m
+}
+
+/// Mean over drift seeds of one arm; `make` builds the perf model for
+/// one seeded drift config (correction on/off or oracle).
+fn run_arm(trace: &Trace, rungs: &RungConfig, cluster: &ClusterSpec,
+           drift: f64, correction: bool,
+           make: impl Fn(DriftConfig) -> PerfModel) -> ArmMean {
+    let mut ms = Vec::new();
+    for &ds in &DRIFT_SEEDS {
+        let cfg = if drift > 0.0 {
+            DriftConfig::uniform(ds, drift)
+        } else {
+            DriftConfig::none()
+        };
+        ms.push(run_cell(trace, rungs, cluster, make(cfg)));
+        if drift == 0.0 {
+            break; // zero drift is seed-independent; one run suffices
+        }
+    }
+    let n = ms.len() as f64;
+    ArmMean {
+        drift,
+        correction,
+        makespan_s: ms.iter().map(|m| m.makespan_s).sum::<f64>() / n,
+        avg_jct_s: ms.iter().map(|m| m.avg_jct_s).sum::<f64>() / n,
+        estimate_mae: ms.iter().map(|m| m.estimate_mae).sum::<f64>() / n,
+        drift_resolves: ms
+            .iter()
+            .map(|m| m.drift_resolves.unwrap_or(0) as f64)
+            .sum::<f64>()
+            / n,
+        lp_capped: ms.iter().map(|m| m.lp_capped as f64).sum::<f64>() / n,
+        observations: ms.iter().map(|m| m.observations as f64).sum::<f64>()
+            / n,
+    }
+}
+
+fn arm_json(a: &ArmMean) -> Json {
+    Json::obj(vec![
+        ("drift", Json::num(a.drift)),
+        ("correction", Json::Bool(a.correction)),
+        ("seeds", Json::num(if a.drift == 0.0 {
+            1.0
+        } else {
+            DRIFT_SEEDS.len() as f64
+        })),
+        ("makespan_s_mean", Json::num(a.makespan_s)),
+        ("avg_jct_s_mean", Json::num(a.avg_jct_s)),
+        ("estimate_mae_mean", Json::num(a.estimate_mae)),
+        ("drift_resolves_mean", Json::num(a.drift_resolves)),
+        ("lp_capped_mean", Json::num(a.lp_capped)),
+        ("observations_mean", Json::num(a.observations)),
+    ])
+}
+
+fn main() {
+    // EXACTLY the bench_online scenario, so the drift=0 arm is directly
+    // comparable to BENCH_online.json's online-saturn row
+    let cfg = TraceConfig {
+        seed: 42,
+        multijobs: 6,
+        process: ArrivalProcess::Poisson { rate_per_hour: 2.0 },
+        grid_lrs: 2,
+        grid_batches: 2,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: Some(24.0 * 3600.0),
+    };
+    let trace = generate_trace(&cfg);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+
+    println!("=== drift bench: {} jobs / {} multi-jobs, drift in \
+              {DRIFTS:?}, {} drift seed(s) ===",
+             trace.jobs.len(), trace.groups, DRIFT_SEEDS.len());
+
+    let mut arms: Vec<ArmMean> = Vec::new();
+    for &d in &DRIFTS {
+        for &corr in &[true, false] {
+            arms.push(run_arm(&trace, &rungs, &cluster, d, corr, |cfg| {
+                PerfModel::with_drift(&profiles, cfg, corr)
+            }));
+        }
+    }
+    let oracle: Vec<ArmMean> = DRIFTS
+        .iter()
+        .map(|&d| {
+            run_arm(&trace, &rungs, &cluster, d, true, |cfg| {
+                PerfModel::oracle(&profiles, cfg)
+            })
+        })
+        .collect();
+
+    println!("{:<8} {:>12} {:>14} {:>14} {:>12} {:>10}", "drift",
+             "oracle(h)", "corrected(h)", "frozen(h)", "degrade(%)",
+             "|ln err|");
+    for (i, &d) in DRIFTS.iter().enumerate() {
+        let on = &arms[2 * i];
+        let off = &arms[2 * i + 1];
+        let orc = &oracle[i];
+        println!("{:<8.2} {:>12.3} {:>14.3} {:>14.3} {:>12.2} {:>10.4}",
+                 d, orc.makespan_s / 3600.0, on.makespan_s / 3600.0,
+                 off.makespan_s / 3600.0,
+                 100.0 * (on.makespan_s / orc.makespan_s - 1.0),
+                 on.estimate_mae);
+        if d >= 0.10 {
+            println!("  correction gain at {:.0}% drift: {:.2}% makespan \
+                      ({:.0} drift re-solve(s)/run)",
+                     d * 100.0,
+                     100.0 * (off.makespan_s / on.makespan_s - 1.0),
+                     on.drift_resolves);
+        }
+    }
+
+    // the acceptance probe: drift=0 with correction on IS today's online
+    // result (bit-identical engine path; CI re-checks vs BENCH_online)
+    let drift0 = &arms[0];
+    println!("\ndrift=0 probe: makespan {:.6} h (must match BENCH_online's \
+              online-saturn within 1e-6)", drift0.makespan_s / 3600.0);
+
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_drift.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("drift")),
+        ("trace_seed", Json::num(cfg.seed as f64)),
+        ("jobs", Json::num(trace.jobs.len() as f64)),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("drifts", Json::arr(DRIFTS.iter().map(|&d| Json::num(d)))),
+        ("drift_seeds",
+         Json::arr(DRIFT_SEEDS.iter().map(|&s| Json::num(s as f64)))),
+        ("arms", Json::arr(arms.iter().map(arm_json))),
+        ("oracle", Json::arr(oracle.iter().map(|a| {
+            Json::obj(vec![
+                ("drift", Json::num(a.drift)),
+                ("makespan_s_mean", Json::num(a.makespan_s)),
+                ("avg_jct_s_mean", Json::num(a.avg_jct_s)),
+            ])
+        }))),
+        ("drift0_probe", Json::obj(vec![
+            ("makespan_s", Json::num(drift0.makespan_s)),
+            ("avg_jct_s", Json::num(drift0.avg_jct_s)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("wrote {out}");
+}

@@ -90,21 +90,49 @@ impl NodeSpec {
 
 /// A homogeneous group of nodes sharing one GPU class — the unit the
 /// heterogeneous solver, placement rules and CLI fleet syntax speak.
+/// Each class carries its OWN inter-node fabric: the EFA generations on
+/// p4d (400 Gbps) and p5 (3200 Gbps) differ ~4x, so one fleet-wide
+/// figure under-states H100 rings and over-states A100 rings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuClass {
     /// Class tag ("a100", "h100") used by `--fleet` and reports.
     pub name: String,
     pub nodes: u32,
     pub node: NodeSpec,
+    /// Effective inter-node collective bandwidth within this class's
+    /// fabric, bytes/s (jobs never span classes, so cross-class
+    /// bandwidth never enters a cost model).
+    pub inter_bw: f64,
+    /// Checkpoint lag charged when a job migrates INTO this class from a
+    /// DIFFERENT class: a clean sequential checkpoint stream over the
+    /// destination's PCIe — cheaper than the same-class
+    /// reshape-in-place ([`crate::sim::engine::SimConfig`]'s
+    /// `checkpoint_penalty_s`), which must re-shard optimizer state
+    /// among overlapping ranks.
+    pub reload_penalty_s: f64,
 }
 
 impl GpuClass {
     pub fn a100(nodes: u32) -> Self {
-        GpuClass { name: "a100".into(), nodes, node: NodeSpec::p4d_24xlarge() }
+        GpuClass {
+            name: "a100".into(),
+            nodes,
+            node: NodeSpec::p4d_24xlarge(),
+            inter_bw: 50e9,
+            reload_penalty_s: 45.0,
+        }
     }
 
     pub fn h100(nodes: u32) -> Self {
-        GpuClass { name: "h100".into(), nodes, node: NodeSpec::p5_48xlarge() }
+        GpuClass {
+            name: "h100".into(),
+            nodes,
+            node: NodeSpec::p5_48xlarge(),
+            // 3200 Gbps EFA vs p4d's 400 Gbps: ~4x effective
+            inter_bw: 200e9,
+            // PCIe gen5 streams the checkpoint twice as fast
+            reload_penalty_s: 30.0,
+        }
     }
 
     pub fn gpus(&self) -> u32 {
@@ -117,33 +145,30 @@ impl GpuClass {
     }
 }
 
-/// The whole fleet visible to the scheduler: one or more GPU classes plus
-/// the cross-node fabric. Single-class fleets behave exactly like the
-/// original homogeneous `ClusterSpec` (the degenerate probe in
-/// `bench_hetero` holds this to 1e-6).
+/// The whole fleet visible to the scheduler: one or more GPU classes,
+/// each with its own inter-node fabric. Single-class fleets behave
+/// exactly like the original homogeneous `ClusterSpec` (the degenerate
+/// probe in `bench_hetero` holds this to 1e-6).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     /// Homogeneous node groups, one per GPU class. Class indices used by
     /// the profiles/solver/placement layers index into this vector.
     pub classes: Vec<GpuClass>,
-    /// Effective inter-node collective bandwidth, bytes/s (jobs never span
-    /// classes, so one fabric figure serves the fleet).
-    pub inter_bw: f64,
 }
 
 impl ClusterSpec {
     /// The paper's testbed: `nodes` x p4d.24xlarge (single A100 class).
     pub fn p4d(nodes: u32) -> Self {
-        ClusterSpec { classes: vec![GpuClass::a100(nodes)], inter_bw: 50e9 }
+        ClusterSpec { classes: vec![GpuClass::a100(nodes)] }
     }
 
     /// All-H100 fleet: `nodes` x p5.48xlarge.
     pub fn p5(nodes: u32) -> Self {
-        ClusterSpec { classes: vec![GpuClass::h100(nodes)], inter_bw: 100e9 }
+        ClusterSpec { classes: vec![GpuClass::h100(nodes)] }
     }
 
     /// Mixed-generation fleet: `a100_nodes` x p4d + `h100_nodes` x p5.
-    /// Cross-node traffic is bound by the older EFA fabric.
+    /// Each class rides its own EFA generation (p5's is ~4x p4d's).
     pub fn hetero(a100_nodes: u32, h100_nodes: u32) -> Self {
         let mut classes = Vec::new();
         if a100_nodes > 0 {
@@ -153,15 +178,32 @@ impl ClusterSpec {
             classes.push(GpuClass::h100(h100_nodes));
         }
         assert!(!classes.is_empty(), "fleet must have at least one node");
-        ClusterSpec { classes, inter_bw: 50e9 }
+        ClusterSpec { classes }
+    }
+
+    /// Force ONE fabric figure on every class — the pre-PR-4 semantics,
+    /// kept so call sites and benches modeling a shared back-network
+    /// stay one-line.
+    pub fn uniform_inter_bw(mut classes: Vec<GpuClass>, inter_bw: f64)
+        -> Self {
+        assert!(!classes.is_empty(), "fleet must have at least one class");
+        for c in classes.iter_mut() {
+            c.inter_bw = inter_bw;
+        }
+        ClusterSpec { classes }
     }
 
     /// One custom class (used by the coordinator's lanes-as-GPUs cluster).
     pub fn single(name: &str, nodes: u32, node: NodeSpec, inter_bw: f64)
         -> Self {
         ClusterSpec {
-            classes: vec![GpuClass { name: name.into(), nodes, node }],
-            inter_bw,
+            classes: vec![GpuClass {
+                name: name.into(),
+                nodes,
+                node,
+                inter_bw,
+                reload_penalty_s: 45.0,
+            }],
         }
     }
 
@@ -254,12 +296,10 @@ impl ClusterSpec {
     }
 
     /// Restrict the fleet to one class: a homogeneous `ClusterSpec` the
-    /// parallelism cost models profile against.
+    /// parallelism cost models profile against. The view carries the
+    /// class's OWN fabric.
     pub fn class_view(&self, ci: usize) -> ClusterSpec {
-        ClusterSpec {
-            classes: vec![self.classes[ci].clone()],
-            inter_bw: self.inter_bw,
-        }
+        ClusterSpec { classes: vec![self.classes[ci].clone()] }
     }
 
     /// GPU spec of the primary class (cost-model view accessor).
@@ -279,14 +319,19 @@ impl ClusterSpec {
         self.primary().node.pcie_bw
     }
 
+    /// Inter-node fabric of the primary class (cost-model view accessor).
+    pub fn inter_bw(&self) -> f64 {
+        self.primary().inter_bw
+    }
+
     /// Effective collective bandwidth for a `gpus`-wide ring within the
-    /// primary class: NVSwitch when the ring fits in one node, EFA-bound
-    /// otherwise.
+    /// primary class: NVSwitch when the ring fits in one node, bound by
+    /// the class's own EFA fabric otherwise.
     pub fn collective_bw(&self, gpus: u32) -> f64 {
         if gpus <= self.gpus_per_node() {
             self.primary().node.intra_bw
         } else {
-            self.inter_bw
+            self.primary().inter_bw
         }
     }
 
@@ -386,7 +431,38 @@ mod tests {
         assert!(v.is_single_class());
         assert_eq!(v.total_gpus(), 8);
         assert_eq!(v.gpu().name, "H100-80GB");
-        assert_eq!(v.inter_bw, c.inter_bw);
+        // the view carries the class's OWN fabric, not class 0's
+        assert_eq!(v.inter_bw(), c.class(1).inter_bw);
+        assert!(v.inter_bw() > c.class(0).inter_bw);
+    }
+
+    #[test]
+    fn per_class_fabrics_differ_about_4x() {
+        let c = ClusterSpec::hetero(1, 1);
+        let ratio = c.class(1).inter_bw / c.class(0).inter_bw;
+        assert!((3.0..5.0).contains(&ratio), "EFA ratio {ratio}");
+        // multi-node rings within each class view ride that class's EFA
+        let a = c.class_view(0);
+        let h = c.class_view(1);
+        assert_eq!(a.collective_bw(16), c.class(0).inter_bw);
+        assert_eq!(h.collective_bw(16), c.class(1).inter_bw);
+    }
+
+    #[test]
+    fn uniform_inter_bw_overrides_every_class() {
+        let c = ClusterSpec::uniform_inter_bw(
+            vec![GpuClass::a100(1), GpuClass::h100(1)], 75e9);
+        assert!(c.classes.iter().all(|k| k.inter_bw == 75e9));
+        assert_eq!(c.inter_bw(), 75e9);
+    }
+
+    #[test]
+    fn cross_class_reload_cheaper_than_reshape() {
+        // the class constants: reload into either class undercuts the
+        // 60 s same-class reshape default, gen5 PCIe streaming fastest
+        let c = ClusterSpec::hetero(1, 1);
+        assert!(c.class(0).reload_penalty_s < 60.0);
+        assert!(c.class(1).reload_penalty_s < c.class(0).reload_penalty_s);
     }
 
     #[test]

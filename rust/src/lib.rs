@@ -10,8 +10,10 @@
 //!    Trial Runner ([`trials`]), the joint MILP Solver with introspection
 //!    ([`saturn`], [`solver`]), the online scheduling subsystem
 //!    ([`online`], streaming arrivals + early-stopping departures), the
-//!    baselines ([`baselines`]), the cluster simulator ([`sim`]), and the
-//!    PJRT execution runtime ([`runtime`]).
+//!    performance-model layer ([`perf`], estimate-vs-truth split with
+//!    drift and online correction), the baselines ([`baselines`]), the
+//!    cluster simulator ([`sim`]), and the PJRT execution runtime
+//!    ([`runtime`]).
 //!  * **L2** — `python/compile/model.py`: GPT-mini fwd/bwd+AdamW in JAX,
 //!    AOT-lowered to HLO text in `artifacts/`.
 //!  * **L1** — `python/compile/kernels/`: Pallas flash-attention, fused
@@ -29,6 +31,7 @@ pub mod exp;
 pub mod models;
 pub mod online;
 pub mod parallelism;
+pub mod perf;
 pub mod runtime;
 pub mod saturn;
 pub mod sim;

@@ -12,9 +12,11 @@ use anyhow::{anyhow, bail, Result};
 use saturn::cluster::ClusterSpec;
 use saturn::coordinator::{real_grid, Coordinator};
 use saturn::exp;
-use saturn::online::{profile_trace, run_trace, warm_cold_probe,
+use saturn::online::{profile_trace, run_trace_perf, warm_cold_probe,
                      ONLINE_SYSTEMS};
 use saturn::parallelism::default_library;
+use saturn::perf::{DriftConfig, PerfModel};
+use saturn::saturn::introspect::DEFAULT_DRIFT_THRESHOLD;
 use saturn::saturn::solver::{check_fleet_feasibility, solve_joint,
                              SolverMode};
 use saturn::sim::engine::RungConfig;
@@ -47,6 +49,9 @@ fn main() -> Result<()> {
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
             println!("            [--nodes N] [--fleet a100:32,h100:16]");
             println!("            [--mode joint|greedy|rolling]");
+            println!("            [--drift F] [--drift-seed N]");
+            println!("            [--drift-correction on|off|oracle]");
+            println!("            [--drift-threshold F]");
             println!("            [--json PATH]");
             println!("  workload  [--workload ...]");
             println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
@@ -162,6 +167,24 @@ fn cmd_online(args: &Args) -> Result<()> {
         None
     };
 
+    // estimate-drift knobs (DESIGN.md §4.4): --drift 0.1 turns on 10%
+    // seeded truth drift; the planner corrects online unless --drift-
+    // correction is off (frozen profiled estimates) or oracle (reads
+    // the frozen truth at each replan — the unreachable upper bound)
+    let drift_mag = args.f64_or("drift", 0.0);
+    let drift_seed = args.u64_or("drift-seed", seed);
+    let correction = args.str_or("drift-correction", "on");
+    if !matches!(correction.as_str(), "on" | "off" | "oracle") {
+        bail!("--drift-correction must be on|off|oracle, got '{correction}'");
+    }
+    let threshold = args.f64_or("drift-threshold", DEFAULT_DRIFT_THRESHOLD);
+    let drift_threshold = if threshold > 0.0 { Some(threshold) } else { None };
+    let drift_cfg = if drift_mag > 0.0 {
+        DriftConfig::uniform(drift_seed, drift_mag)
+    } else {
+        DriftConfig::none()
+    };
+
     let cluster = fleet_from_args(args)?;
     println!("=== online: {} multi-jobs / {} jobs over {:.1} h on fleet \
               [{}], seed {seed} ===",
@@ -171,7 +194,17 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("early stopping: rungs {:?}, kill fraction {:.0}%",
                  rc.fractions, rc.kill_fraction * 100.0);
     }
+    if drift_mag > 0.0 {
+        println!("estimate drift: {:.0}% (seed {drift_seed}), correction \
+                  {correction}, re-solve threshold {:.2}",
+                 drift_mag * 100.0, threshold.max(0.0));
+    }
     let profiles = profile_trace(&trace, &cluster);
+    let make_perf = || match correction.as_str() {
+        "off" => PerfModel::with_drift(&profiles, drift_cfg.clone(), false),
+        "oracle" => PerfModel::oracle(&profiles, drift_cfg.clone()),
+        _ => PerfModel::with_drift(&profiles, drift_cfg.clone(), true),
+    };
     // surface memory-infeasible jobs before the event loop would deadlock
     let all_jobs: Vec<(usize, u64)> = trace
         .jobs
@@ -184,8 +217,10 @@ fn cmd_online(args: &Args) -> Result<()> {
     let mut metrics = Vec::new();
     let mut saturn_result = None;
     for sys in ONLINE_SYSTEMS {
-        let (r, m) = run_trace(&trace, rungs.as_ref(), &profiles, &cluster,
-                               sys, mode);
+        let mut perf = make_perf();
+        let (r, m) = run_trace_perf(&trace, rungs.as_ref(), &mut perf,
+                                    &cluster, sys, mode,
+                                    Some(drift_threshold));
         if sys == "online-saturn" {
             saturn_result = Some(r);
         }
@@ -193,11 +228,26 @@ fn cmd_online(args: &Args) -> Result<()> {
     }
     print!("\n{}", exp::format_online_row(&metrics));
 
+    // solver stress + estimate-layer summary (satellite of ISSUE 4: a
+    // capped/limit-hit count that climbs under drift-triggered re-solves
+    // is the solver degrading, not a silent mystery)
+    let sat = &metrics[2];
+    println!("\nsolver stress: {} capped node LP(s), {} limit-reached \
+              solve(s), {} drift re-solve(s)",
+             sat.lp_capped, sat.milp_limit_reached,
+             sat.drift_resolves.unwrap_or(0));
+    if drift_mag > 0.0 {
+        println!("estimate layer: {} observation(s), mean |ln(obs/est)| \
+                  {:.4}", sat.observations, sat.estimate_mae);
+    }
+
     // determinism: the acceptance bar is a bit-identical double replay
     // (first replay reused from the comparison loop above)
     let a = saturn_result.expect("online-saturn ran");
-    let (b, _) = run_trace(&trace, rungs.as_ref(), &profiles, &cluster,
-                           "online-saturn", mode);
+    let mut perf = make_perf();
+    let (b, _) = run_trace_perf(&trace, rungs.as_ref(), &mut perf, &cluster,
+                                "online-saturn", mode,
+                                Some(drift_threshold));
     if a.finish_times != b.finish_times || a.jct_s != b.jct_s
         || a.early_stopped != b.early_stopped || a.launches != b.launches {
         bail!("online replay diverged for seed {seed}");
@@ -216,6 +266,8 @@ fn cmd_online(args: &Args) -> Result<()> {
             ("seed", Json::num(seed as f64)),
             ("multijobs", Json::num(multijobs as f64)),
             ("jobs", Json::num(trace.jobs.len() as f64)),
+            ("drift", Json::num(drift_mag)),
+            ("drift_correction", Json::str(&correction)),
             ("systems",
              Json::arr(metrics.iter().map(|m| m.to_json()))),
         ]);

@@ -15,8 +15,9 @@ pub use scheduler::OnlineSaturn;
 use crate::baselines::{OnlineCurrentPractice, OnlineOptimus};
 use crate::cluster::ClusterSpec;
 use crate::parallelism::default_library;
+use crate::perf::PerfModel;
 use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
-use crate::sim::engine::{simulate_online, OnlineSimResult, RungConfig,
+use crate::sim::engine::{simulate_online_perf, OnlineSimResult, RungConfig,
                          SimConfig};
 use crate::trials::{profile_analytic, ProfileTable};
 use crate::util::json::Json;
@@ -50,6 +51,17 @@ pub struct OnlineMetrics {
     pub warm_hit_rate: Option<f64>,
     /// Total simplex pivots across every re-solve (Saturn only).
     pub lp_pivots: Option<usize>,
+    /// Node LPs that hit the simplex iteration cap (solver stress under
+    /// event-rate/drift-triggered re-solves; 0 for solver-free systems).
+    pub lp_capped: usize,
+    /// MILP solves stopped by a node/time limit across the run.
+    pub milp_limit_reached: usize,
+    /// Observations the engine delivered to the estimate layer.
+    pub observations: usize,
+    /// Mean |ln(observed/estimated)| across those observations.
+    pub estimate_mae: f64,
+    /// Re-solves fired by the drift trigger alone (Saturn only).
+    pub drift_resolves: Option<usize>,
 }
 
 impl OnlineMetrics {
@@ -83,6 +95,15 @@ impl OnlineMetrics {
                 Some(p) => Json::num(p as f64),
                 None => Json::Null,
             }),
+            ("lp_capped", Json::num(self.lp_capped as f64)),
+            ("milp_limit_reached",
+             Json::num(self.milp_limit_reached as f64)),
+            ("observations", Json::num(self.observations as f64)),
+            ("estimate_mae", Json::num(self.estimate_mae)),
+            ("drift_resolves", match self.drift_resolves {
+                Some(d) => Json::num(d as f64),
+                None => Json::Null,
+            }),
         ])
     }
 }
@@ -95,32 +116,51 @@ pub fn profile_trace(trace: &Trace, cluster: &ClusterSpec) -> ProfileTable {
     profile_analytic(&jobs, &lib, cluster)
 }
 
-/// Execute one (trace, system) cell and reduce it to metrics.
+/// Execute one (trace, system) cell and reduce it to metrics, with a
+/// perfect performance model (truth == estimate == profiled).
 pub fn run_trace(trace: &Trace, rungs: Option<&RungConfig>,
                  profiles: &ProfileTable, cluster: &ClusterSpec,
                  system: &str, mode: SolverMode)
     -> (OnlineSimResult, OnlineMetrics) {
+    let mut perf = PerfModel::exact(profiles);
+    run_trace_perf(trace, rungs, &mut perf, cluster, system, mode, None)
+}
+
+/// Execute one (trace, system) cell against an explicit performance
+/// model — the drift harness `bench_drift` and `saturn online --drift`
+/// share. `perf` must be freshly constructed per call (the estimate
+/// layer learns during the run). `drift_threshold` overrides the Saturn
+/// policies' drift-triggered re-solve knob (`None` keeps the default).
+pub fn run_trace_perf(trace: &Trace, rungs: Option<&RungConfig>,
+                      perf: &mut PerfModel, cluster: &ClusterSpec,
+                      system: &str, mode: SolverMode,
+                      drift_threshold: Option<Option<f64>>)
+    -> (OnlineSimResult, OnlineMetrics) {
     let cfg = SimConfig::default();
-    // Saturn-only diagnostics: (solves, warm solves, basis hit rate, pivots)
+    // Saturn-only diagnostics:
+    // (solves, warm solves, basis hit rate, pivots, drift re-solves)
     let (result, sys, solver_probe) = match system {
         "online-current-practice" => {
             let mut p = OnlineCurrentPractice;
-            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
-                                    &mut p, &cfg);
+            let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
+                                         &mut p, &cfg);
             (r, ONLINE_SYSTEMS[0], None)
         }
         "online-optimus" => {
             let mut p = OnlineOptimus::default();
-            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
-                                    &mut p, &cfg);
+            let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
+                                         &mut p, &cfg);
             (r, ONLINE_SYSTEMS[1], None)
         }
         "online-saturn" => {
             let mut p = OnlineSaturn::new(mode);
-            let r = simulate_online(&trace.jobs, rungs, profiles, cluster,
-                                    &mut p, &cfg);
+            if let Some(th) = drift_threshold {
+                p.drift_threshold = th;
+            }
+            let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
+                                         &mut p, &cfg);
             let probe = (p.solves(), p.warm_solves(), p.warm_hit_rate(),
-                         p.total_stats.lp_pivots);
+                         p.total_stats.lp_pivots, p.drift_resolves);
             (r, ONLINE_SYSTEMS[2], Some(probe))
         }
         other => panic!("unknown online system '{other}' \
@@ -155,6 +195,11 @@ pub fn run_trace(trace: &Trace, rungs: Option<&RungConfig>,
         warm_solves: solver_probe.map(|p| p.1),
         warm_hit_rate: solver_probe.map(|p| p.2),
         lp_pivots: solver_probe.map(|p| p.3),
+        lp_capped: result.lp_capped,
+        milp_limit_reached: result.milp_limit_reached,
+        observations: result.observations,
+        estimate_mae: result.estimate_mae,
+        drift_resolves: solver_probe.map(|p| p.4),
     };
     (result, metrics)
 }
@@ -261,6 +306,28 @@ mod tests {
         assert!(p.warm_makespan_s <= p.cold_makespan_s * 1.05 + 1.0,
                 "warm {} vs cold {}", p.warm_makespan_s, p.cold_makespan_s);
         assert!(p.jobs_after > p.jobs_before);
+    }
+
+    #[test]
+    fn drift_run_reports_observations_and_stress_counters() {
+        use crate::perf::DriftConfig;
+        let (t, profiles, cluster) = trace();
+        let mut perf = PerfModel::with_drift(
+            &profiles, DriftConfig::uniform(5, 0.2), true);
+        let (r, m) = run_trace_perf(&t, Some(&RungConfig::halving()),
+                                    &mut perf, &cluster, "online-saturn",
+                                    SolverMode::Joint, None);
+        assert_eq!(r.finish_times.len(), t.jobs.len());
+        assert!(m.observations > 0, "no observations under drift");
+        assert!(m.estimate_mae > 0.0);
+        assert!(m.drift_resolves.is_some());
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        assert!(parsed.get("lp_capped").unwrap().as_f64().is_some());
+        assert!(parsed.get("milp_limit_reached").unwrap().as_f64()
+                    .is_some());
+        assert!(parsed.get("estimate_mae").unwrap().as_f64().unwrap()
+                    > 0.0);
+        assert!(parsed.get("drift_resolves").unwrap().as_f64().is_some());
     }
 
     #[test]

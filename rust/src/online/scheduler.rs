@@ -13,7 +13,8 @@
 use std::time::Instant;
 
 use crate::saturn::introspect::{apply_migration_hysteresis,
-                                launch_from_plan};
+                                drift_resolve_due, launch_from_plan,
+                                DEFAULT_DRIFT_THRESHOLD};
 use crate::saturn::plan::SaturnPlan;
 use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
@@ -32,6 +33,14 @@ pub struct OnlineSaturn {
     /// decomposition (`SolverMode::rolling_default`) so event-rate
     /// re-solving stays interactive at 100+ concurrent jobs.
     pub rolling_threshold: usize,
+    /// See `SaturnPolicy::drift_threshold`: re-solve when the estimate
+    /// layer reports fresh observations whose observed/estimated
+    /// mismatch crossed this |ln ratio| — the drift counterpart of the
+    /// arrival/departure triggers. `None` disables.
+    pub drift_threshold: Option<f64>,
+    /// Re-solves fired by the drift trigger alone.
+    pub drift_resolves: usize,
+    last_obs_seen: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
     decision_s: f64,
@@ -51,6 +60,9 @@ impl OnlineSaturn {
             migration_threshold: 0.15,
             warm_start: true,
             rolling_threshold: 64,
+            drift_threshold: Some(DEFAULT_DRIFT_THRESHOLD),
+            drift_resolves: 0,
+            last_obs_seen: 0,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
             decision_s: 0.0,
@@ -117,6 +129,9 @@ impl Policy for OnlineSaturn {
             .introspect_every_s
             .map(|i| ctx.now - self.last_solve_t >= i - 1e-9)
             .unwrap_or(false);
+        let drift_due = drift_resolve_due(self.drift_threshold,
+                                          self.last_obs_seen, ctx.obs_seen,
+                                          ctx.drift_alarm);
         let cache_ok = self
             .cached
             .as_ref()
@@ -133,10 +148,13 @@ impl Policy for OnlineSaturn {
                 covers && !stale
             })
             .unwrap_or(false);
-        if cache_ok && !introspect_due {
+        if cache_ok && !introspect_due && !drift_due {
             let launches = self.launch_from_cache(ctx);
             self.decision_s += t0.elapsed().as_secs_f64();
             return launches;
+        }
+        if drift_due && cache_ok && !introspect_due {
+            self.drift_resolves += 1;
         }
 
         let warm = if self.warm_start { self.cached.as_ref() } else { None };
@@ -163,9 +181,12 @@ impl Policy for OnlineSaturn {
         self.total_stats.warm_misses += stats.warm_misses;
         self.total_stats.windows += stats.windows;
         self.total_stats.wall_s += stats.wall_s;
+        self.total_stats.lp_capped += stats.lp_capped;
+        self.total_stats.limit_reached += stats.limit_reached;
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;
+        self.last_obs_seen = ctx.obs_seen;
         self.cached = Some(plan);
 
         let launches = self.launch_from_cache(ctx);
@@ -183,6 +204,10 @@ impl Policy for OnlineSaturn {
 
     fn decision_time_s(&self) -> f64 {
         self.decision_s
+    }
+
+    fn solver_pressure(&self) -> (usize, usize) {
+        (self.total_stats.lp_capped, self.total_stats.limit_reached)
     }
 }
 

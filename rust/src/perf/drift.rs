@@ -1,0 +1,282 @@
+//! The TRUTH side of the performance-model split: what the hardware
+//! actually does, as opposed to what the planner believes (see
+//! [`crate::perf::estimate`]).
+//!
+//! [`TruthModel`] wraps the profiled [`ProfileTable`] with deterministic,
+//! seeded drift processes — the adversary the paper's introspection
+//! mechanism was designed for (changing cluster conditions, SIGMOD
+//! version §introspection):
+//!
+//!  * **Slow multiplicative ramps** per job: step times drift toward
+//!    `1 ± ramp_magnitude` with a per-job time constant (dataloader
+//!    warm-up, thermal throttling, gradual input-length shift).
+//!  * **Step changes on interference events**: seeded Poisson windows per
+//!    GPU class during which every job on that class slows by
+//!    `interference_mult` (noisy neighbors on the shared fabric).
+//!  * **Per-(job, class) noise**: a static lognormal mis-calibration of
+//!    the profiled estimate — the "one or two mini-batches" probe simply
+//!    measured wrong for that model/hardware pair.
+//!
+//! Every query is a pure function of `(job, tech, gpus, class, now)`, so
+//! replays are bit-identical no matter what order the simulator asks in.
+//! Only `sim::engine` may read truth; planners and baselines see the
+//! estimate layer.
+
+use crate::trials::ProfileTable;
+use crate::util::rng::Rng;
+
+/// Horizon over which interference windows are pre-drawn (longer sims
+/// simply see no further windows; makespans here are tens of hours).
+const INTERFERENCE_HORIZON_S: f64 = 60.0 * 24.0 * 3600.0;
+const MAX_WINDOWS_PER_CLASS: usize = 256;
+
+/// Knobs of the seeded drift processes. `none()` disables everything:
+/// truth then IS the profiled table, bit for bit.
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    pub seed: u64,
+    /// Asymptotic magnitude of the per-job multiplicative ramps (0.1:
+    /// each job drifts toward ±10% of its profiled step time; the sign
+    /// and time constant are drawn per job from `seed`).
+    pub ramp_magnitude: f64,
+    /// Base ramp time constant, seconds (per-job jitter in [0.5x, 2x]).
+    pub ramp_tau_s: f64,
+    /// Poisson rate of per-class interference windows, events/hour.
+    pub interference_per_hour: f64,
+    /// Step-change multiplier while a window is active (> 1 slows the
+    /// class down).
+    pub interference_mult: f64,
+    /// Interference window length, seconds.
+    pub interference_s: f64,
+    /// Sigma of the static lognormal per-(job, class) mis-calibration.
+    pub cell_noise: f64,
+}
+
+impl DriftConfig {
+    /// Zero drift: the truth model returns profiled step times unchanged
+    /// (bit-identical to the pre-split simulator).
+    pub fn none() -> Self {
+        DriftConfig {
+            seed: 0,
+            ramp_magnitude: 0.0,
+            ramp_tau_s: 7200.0,
+            interference_per_hour: 0.0,
+            interference_mult: 1.0,
+            interference_s: 0.0,
+            cell_noise: 0.0,
+        }
+    }
+
+    /// The single-knob shape `--drift` and `bench_drift` use: ramps at
+    /// full `magnitude`, mis-calibration at half of it, and mild
+    /// class-wide interference windows.
+    pub fn uniform(seed: u64, magnitude: f64) -> Self {
+        DriftConfig {
+            seed,
+            ramp_magnitude: magnitude,
+            ramp_tau_s: 7200.0,
+            interference_per_hour: if magnitude > 0.0 { 0.05 } else { 0.0 },
+            interference_mult: 1.0 + 0.5 * magnitude,
+            interference_s: 1800.0,
+            cell_noise: 0.5 * magnitude,
+        }
+    }
+
+    /// Whether any drift process is switched on.
+    pub fn is_active(&self) -> bool {
+        self.ramp_magnitude > 0.0
+            || self.cell_noise > 0.0
+            || (self.interference_per_hour > 0.0
+                && self.interference_mult != 1.0)
+    }
+}
+
+/// What the hardware does: profiled step times perturbed by the seeded
+/// drift processes. Read ONLY by the simulation engine.
+#[derive(Debug, Clone)]
+pub struct TruthModel {
+    profiles: ProfileTable,
+    cfg: DriftConfig,
+    /// Per-class interference windows as (start_s, end_s), ascending.
+    windows: Vec<Vec<(f64, f64)>>,
+    active: bool,
+}
+
+impl TruthModel {
+    pub fn new(profiles: ProfileTable, cfg: DriftConfig) -> Self {
+        let active = cfg.is_active();
+        let n_classes = profiles.n_classes();
+        let windows = (0..n_classes)
+            .map(|ci| {
+                let mut out = Vec::new();
+                if active && cfg.interference_per_hour > 0.0 {
+                    let mut rng =
+                        Rng::new(cfg.seed ^ 0xC1A5_5E5D).fork(ci as u64);
+                    let rate = cfg.interference_per_hour / 3600.0;
+                    let mut t = 0.0f64;
+                    while out.len() < MAX_WINDOWS_PER_CLASS {
+                        t += rng.exp(rate.max(1e-12));
+                        if t > INTERFERENCE_HORIZON_S {
+                            break;
+                        }
+                        out.push((t, t + cfg.interference_s));
+                    }
+                }
+                out
+            })
+            .collect();
+        TruthModel { profiles, cfg, windows, active }
+    }
+
+    /// The underlying profiled table (the estimate layer's prior).
+    pub fn profiles(&self) -> &ProfileTable {
+        &self.profiles
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Per-job slow multiplicative ramp at virtual time `now`.
+    fn ramp(&self, job: usize, now: f64) -> f64 {
+        if self.cfg.ramp_magnitude <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = Rng::new(self.cfg.seed ^ 0x4A0B_D21F).fork(job as u64);
+        let dir = if rng.bool(0.5) { 1.0 } else { -1.0 };
+        let tau = self.cfg.ramp_tau_s * (0.5 + 1.5 * rng.f64());
+        1.0 + dir
+            * self.cfg.ramp_magnitude
+            * (1.0 - (-now.max(0.0) / tau.max(1.0)).exp())
+    }
+
+    /// Static per-(job, class) lognormal mis-calibration of the probe.
+    fn noise(&self, job: usize, class: usize) -> f64 {
+        if self.cfg.cell_noise <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = Rng::new(self.cfg.seed ^ 0x70D0_5EED)
+            .fork(((job as u64) << 8) | class as u64);
+        (self.cfg.cell_noise * rng.normal()).exp().clamp(0.5, 2.0)
+    }
+
+    /// Step-change multiplier if `now` falls inside an interference
+    /// window of `class`.
+    fn interference(&self, class: usize, now: f64) -> f64 {
+        match self.windows.get(class) {
+            Some(ws) if ws.iter().any(|&(a, b)| now >= a && now < b) => {
+                self.cfg.interference_mult
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Combined truth multiplier for `(job, class)` at `now`.
+    pub fn multiplier(&self, job: usize, class: usize, now: f64) -> f64 {
+        if !self.active {
+            return 1.0;
+        }
+        (self.ramp(job, now)
+            * self.noise(job, class)
+            * self.interference(class, now))
+        .clamp(0.25, 4.0)
+    }
+
+    /// TRUE step time at `now`. With drift inactive this returns the
+    /// profiled value unchanged (no floating-point round trip).
+    pub fn step_time(&self, job: usize, tech: usize, gpus: u32,
+                     class: usize, now: f64) -> Option<f64> {
+        let base = self.profiles.step_time(job, tech, gpus, class)?;
+        if !self.active {
+            return Some(base);
+        }
+        Some(base * self.multiplier(job, class, now))
+    }
+
+    /// Materialize the whole truth as a `ProfileTable` frozen at `now` —
+    /// the oracle-informed planner's table in `bench_drift`. With drift
+    /// inactive this is the profiled table itself.
+    pub fn table_at(&self, now: f64) -> ProfileTable {
+        if !self.active {
+            return self.profiles.clone();
+        }
+        self.profiles.with_scaled_step_times(|job, _tech, _gpus, class, t| {
+            t * self.multiplier(job, class, now)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::trials::profile_analytic;
+    use crate::workload::toy_workload;
+
+    fn table() -> ProfileTable {
+        let jobs = toy_workload(4);
+        profile_analytic(&jobs, &default_library(), &ClusterSpec::p4d(1))
+    }
+
+    #[test]
+    fn inactive_truth_is_the_profiled_table_bit_for_bit() {
+        let p = table();
+        let t = TruthModel::new(p.clone(), DriftConfig::none());
+        for (&(j, ti, g, c), e) in p.cells() {
+            let tt = t.step_time(j, ti, g, c, 12345.0).unwrap();
+            assert!(tt.to_bits() == e.step_time_s.to_bits());
+        }
+        assert_eq!(t.table_at(999.0).len(), p.len());
+    }
+
+    #[test]
+    fn ramps_are_slow_and_bounded() {
+        let p = table();
+        let cfg = DriftConfig {
+            ramp_magnitude: 0.3,
+            ..DriftConfig::uniform(7, 0.3)
+        };
+        let t = TruthModel::new(p.clone(), cfg);
+        for j in 0..4 {
+            let m0 = t.ramp(j, 0.0);
+            let m_inf = t.ramp(j, 1e9);
+            assert!((m0 - 1.0).abs() < 1e-12, "ramp starts at 1.0");
+            assert!((m_inf - 1.0).abs() <= 0.3 + 1e-9);
+            assert!((m_inf - 1.0).abs() >= 0.29, "ramp reaches asymptote");
+        }
+        // at least one job drifts up and one down over the seed space
+        let dirs: Vec<bool> =
+            (0..16).map(|j| t.ramp(j, 1e9) > 1.0).collect();
+        assert!(dirs.iter().any(|&d| d) && dirs.iter().any(|&d| !d));
+    }
+
+    #[test]
+    fn queries_are_pure_and_order_independent() {
+        let p = table();
+        let t = TruthModel::new(p, DriftConfig::uniform(42, 0.2));
+        let a = t.step_time(1, 0, 1, 0, 5000.0);
+        let _ = t.step_time(3, 1, 4, 0, 9000.0); // interleaved query
+        let b = t.step_time(1, 0, 1, 0, 5000.0);
+        assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
+    }
+
+    #[test]
+    fn interference_windows_slow_the_class() {
+        let p = table();
+        let cfg = DriftConfig {
+            seed: 3,
+            ramp_magnitude: 0.0,
+            cell_noise: 0.0,
+            interference_per_hour: 10.0,
+            interference_mult: 1.5,
+            interference_s: 600.0,
+            ramp_tau_s: 7200.0,
+        };
+        let t = TruthModel::new(p, cfg);
+        let (start, _) = t.windows[0][0];
+        assert!((t.multiplier(0, 0, start + 1.0) - 1.5).abs() < 1e-12);
+        assert!((t.multiplier(0, 0, start - 1.0) - 1.0).abs() < 1e-12
+                || t.interference(0, start - 1.0) == 1.5); // nested window
+    }
+}

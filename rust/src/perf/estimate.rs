@@ -1,0 +1,366 @@
+//! The ESTIMATE side of the performance-model split: what the planner
+//! believes. Starts from the profiled [`ProfileTable`] and updates from
+//! observed step completions the simulation engine emits at rung
+//! boundaries, completions, and introspection checkpoints.
+//!
+//! Correction model — hierarchical log-ratio shrinkage:
+//! every observation of cell `(job, tech, gpus, class)` contributes
+//! `ln(observed / profiled)` to three blenders — the cell itself, the
+//! job, and the GPU class — each an exponentially-forgetting
+//! inverse-variance mean (weight = steps observed, so long stints count
+//! for more). A queried cell's correction factor is the weight-blended
+//! mean of the three levels against a pseudo-weight prior anchored at
+//! the profiled table, so unvisited cells back off to the per-job and
+//! per-class priors and a fresh model returns the profiled table
+//! exactly.
+
+use std::collections::HashMap;
+
+use crate::trials::ProfileTable;
+
+/// One observed running stint, emitted by `sim::engine` wherever
+/// progress is banked (completion, rung kill, preemption checkpoint).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub job_id: usize,
+    pub tech: usize,
+    pub gpus: u32,
+    pub class: usize,
+    /// Steps executed during the stint (fractional for partial stints).
+    pub steps: f64,
+    /// Realized seconds per step over the stint.
+    pub step_time_s: f64,
+    /// Virtual time at which the stint ended.
+    pub at_s: f64,
+}
+
+/// Exponentially-forgetting weighted mean of log ratios.
+#[derive(Debug, Clone, Copy, Default)]
+struct Blend {
+    w: f64,
+    mean_log: f64,
+}
+
+impl Blend {
+    fn update(&mut self, log_ratio: f64, weight: f64, decay: f64) {
+        self.w = self.w * decay + weight;
+        self.mean_log += weight / self.w * (log_ratio - self.mean_log);
+    }
+}
+
+/// Correction factors are clamped to this band (a 4x surprise is a
+/// pathology to investigate, not something to extrapolate from).
+const FACTOR_MIN: f64 = 0.25;
+const FACTOR_MAX: f64 = 4.0;
+
+/// Per-observation weight cap: one very long stint must not freeze the
+/// estimate forever.
+const MAX_OBS_WEIGHT: f64 = 64.0;
+const MIN_OBS_WEIGHT: f64 = 0.25;
+
+/// Backoff levels shrink toward the cell evidence: a job-level ratio is
+/// weaker evidence for an unvisited cell than a direct observation, and
+/// a class-level ratio weaker still.
+const JOB_LEVEL_WEIGHT: f64 = 0.5;
+const CLASS_LEVEL_WEIGHT: f64 = 0.25;
+
+/// The planner-facing performance model.
+#[derive(Debug, Clone)]
+pub struct EstimateModel {
+    profiled: ProfileTable,
+    /// When false the model never corrects: estimates stay frozen at the
+    /// profiled table (the ablation arm of `bench_drift`); observation
+    /// accounting — drift alarm, error metrics — still runs.
+    pub correction: bool,
+    /// Per-observation forgetting factor (1.0 = plain inverse-variance
+    /// averaging; lower forgets faster under non-stationary drift).
+    pub decay: f64,
+    /// Pseudo-weight anchoring every factor at the profiled table.
+    pub prior_weight: f64,
+    cell: HashMap<(usize, usize, u32, usize), Blend>,
+    job: HashMap<usize, Blend>,
+    class: HashMap<usize, Blend>,
+    obs_seen: usize,
+    /// Latest pre-update |ln(observed/estimate-in-use)| per job — the
+    /// drift alarm the policies' drift-triggered re-solves read.
+    mismatch: HashMap<usize, f64>,
+    err_sum: f64,
+    /// Materialized corrected table served to planners.
+    table: ProfileTable,
+    dirty: bool,
+}
+
+impl EstimateModel {
+    pub fn new(profiled: ProfileTable, correction: bool) -> Self {
+        let table = profiled.clone();
+        EstimateModel {
+            profiled,
+            correction,
+            decay: 0.85,
+            prior_weight: 2.0,
+            cell: HashMap::new(),
+            job: HashMap::new(),
+            class: HashMap::new(),
+            obs_seen: 0,
+            mismatch: HashMap::new(),
+            err_sum: 0.0,
+            table,
+            dirty: false,
+        }
+    }
+
+    /// Current correction factor for a cell (1.0 when nothing relevant
+    /// has been observed yet).
+    pub fn factor(&self, job: usize, tech: usize, gpus: u32, class: usize)
+        -> f64 {
+        let mut num = 0.0;
+        let mut den = self.prior_weight;
+        if let Some(b) = self.cell.get(&(job, tech, gpus, class)) {
+            num += b.w * b.mean_log;
+            den += b.w;
+        }
+        if let Some(b) = self.job.get(&job) {
+            num += JOB_LEVEL_WEIGHT * b.w * b.mean_log;
+            den += JOB_LEVEL_WEIGHT * b.w;
+        }
+        if let Some(b) = self.class.get(&class) {
+            num += CLASS_LEVEL_WEIGHT * b.w * b.mean_log;
+            den += CLASS_LEVEL_WEIGHT * b.w;
+        }
+        (num / den).exp().clamp(FACTOR_MIN, FACTOR_MAX)
+    }
+
+    /// The planner's current belief about a cell's step time.
+    pub fn step_time(&self, job: usize, tech: usize, gpus: u32,
+                     class: usize) -> Option<f64> {
+        let base = self.profiled.step_time(job, tech, gpus, class)?;
+        if !self.correction {
+            return Some(base);
+        }
+        Some(base * self.factor(job, tech, gpus, class))
+    }
+
+    /// Fold one observed stint into the model. Always updates the drift
+    /// alarm and error accounting; updates the correction blenders only
+    /// when `correction` is on.
+    pub fn observe(&mut self, obs: &Observation) {
+        let Some(base) = self
+            .profiled
+            .step_time(obs.job_id, obs.tech, obs.gpus, obs.class)
+        else {
+            return; // stint on an unprofiled cell: nothing to anchor to
+        };
+        if obs.step_time_s <= 0.0
+            || !obs.step_time_s.is_finite()
+            || obs.steps <= 0.0
+        {
+            return;
+        }
+        // the estimate IN USE is the materialized table (refreshed just
+        // before the planner's last replan), not the live blenders —
+        // several observations banked in one event batch must all be
+        // judged against what the planner actually planned with
+        let est_in_use = self
+            .table
+            .step_time(obs.job_id, obs.tech, obs.gpus, obs.class)
+            .unwrap_or(base);
+        let surprise = (obs.step_time_s / est_in_use).ln().abs();
+        self.err_sum += surprise;
+        self.obs_seen += 1;
+        // the alarm is that PRE-update mismatch: post-update it would
+        // already be absorbed and the drift trigger could never fire in
+        // exactly the mode that corrects
+        self.mismatch.insert(obs.job_id, surprise);
+
+        if self.correction {
+            let log_ratio = (obs.step_time_s / base).ln();
+            let weight = obs.steps.clamp(MIN_OBS_WEIGHT, MAX_OBS_WEIGHT);
+            self.cell
+                .entry((obs.job_id, obs.tech, obs.gpus, obs.class))
+                .or_default()
+                .update(log_ratio, weight, self.decay);
+            self.job
+                .entry(obs.job_id)
+                .or_default()
+                .update(log_ratio, weight, self.decay);
+            self.class
+                .entry(obs.class)
+                .or_default()
+                .update(log_ratio, weight, self.decay);
+            self.dirty = true;
+        }
+    }
+
+    /// Re-materialize the corrected table if observations arrived since
+    /// the last call. Cheap: one multiply per profiled cell.
+    pub fn refresh(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.table = self
+            .profiled
+            .with_scaled_step_times(|job, tech, gpus, class, t| {
+                t * self.factor(job, tech, gpus, class)
+            });
+        self.dirty = false;
+    }
+
+    /// The planner-facing table. Call [`EstimateModel::refresh`] after a
+    /// batch of observations; a fresh or correction-off model serves the
+    /// profiled table unchanged.
+    pub fn table(&self) -> &ProfileTable {
+        &self.table
+    }
+
+    /// The untouched profiled prior.
+    pub fn profiled(&self) -> &ProfileTable {
+        &self.profiled
+    }
+
+    /// Drop a departed job from the drift alarm: a completed or killed
+    /// job will never be observed again, so its last surprise must not
+    /// pin the alarm above threshold forever (that would fire a
+    /// re-solve on every later observation from anyone).
+    pub fn retire_job(&mut self, job: usize) {
+        self.mismatch.remove(&job);
+    }
+
+    /// Observations folded in so far (monotone; policies snapshot this to
+    /// detect "new evidence since my last solve").
+    pub fn obs_seen(&self) -> usize {
+        self.obs_seen
+    }
+
+    /// Worst |ln(observed/estimate-in-use)| across jobs' latest
+    /// observations (pre-update). Zero while nothing has been observed;
+    /// decays as correction learns (later observations stop surprising);
+    /// stays at the true drift level when correction is off.
+    pub fn drift_alarm(&self) -> f64 {
+        self.mismatch.values().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Mean |ln(observed/estimated-before-update)| across every
+    /// observation — the run's estimate error.
+    pub fn estimate_mae(&self) -> f64 {
+        if self.obs_seen == 0 {
+            0.0
+        } else {
+            self.err_sum / self.obs_seen as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::trials::profile_analytic;
+    use crate::workload::toy_workload;
+
+    fn table() -> ProfileTable {
+        let jobs = toy_workload(4);
+        profile_analytic(&jobs, &default_library(), &ClusterSpec::p4d(1))
+    }
+
+    fn obs_for(t: &ProfileTable, job: usize, mult: f64) -> Observation {
+        let (tech, step) = t.best_at(job, 1, 0).unwrap();
+        Observation {
+            job_id: job,
+            tech,
+            gpus: 1,
+            class: 0,
+            steps: 10.0,
+            step_time_s: step * mult,
+            at_s: 100.0,
+        }
+    }
+
+    #[test]
+    fn fresh_model_is_the_profiled_table_bit_for_bit() {
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), true);
+        m.refresh();
+        for (&(j, ti, g, c), e) in p.cells() {
+            let s = m.table().step_time(j, ti, g, c).unwrap();
+            assert_eq!(s.to_bits(), e.step_time_s.to_bits());
+            let q = m.step_time(j, ti, g, c).unwrap();
+            assert_eq!(q.to_bits(), e.step_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn exact_observations_leave_estimates_bit_identical() {
+        // zero drift: observed == estimated, so every log ratio is
+        // exactly 0.0 and the materialized table never moves a bit
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), true);
+        for _ in 0..5 {
+            let o = obs_for(&p, 1, 1.0);
+            m.observe(&o);
+        }
+        m.refresh();
+        assert_eq!(m.obs_seen(), 5);
+        assert_eq!(m.drift_alarm(), 0.0);
+        assert_eq!(m.estimate_mae(), 0.0);
+        for (&(j, ti, g, c), e) in p.cells() {
+            let s = m.table().step_time(j, ti, g, c).unwrap();
+            assert_eq!(s.to_bits(), e.step_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn repeated_observation_converges_monotonically() {
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), true);
+        let o = obs_for(&p, 0, 1.3);
+        let mut last = f64::INFINITY;
+        for _ in 0..12 {
+            m.observe(&o);
+            let est = m.step_time(0, o.tech, 1, 0).unwrap();
+            let err = (o.step_time_s / est).ln().abs();
+            assert!(err <= last + 1e-12,
+                    "estimate error increased: {err} > {last}");
+            last = err;
+        }
+        assert!(last < 0.1, "did not converge: residual {last}");
+    }
+
+    #[test]
+    fn unvisited_cells_back_off_to_job_and_class_priors() {
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), true);
+        m.observe(&obs_for(&p, 1, 1.4));
+        // a DIFFERENT cell of the same job drifts in the same direction
+        let f = m.factor(1, 0, 4, 0);
+        assert!(f > 1.05, "job prior did not propagate: {f}");
+        // another job on the same class moves less but not zero
+        let g = m.factor(0, 0, 1, 0);
+        assert!(g > 1.0 && g < f, "class prior ordering: {g} vs {f}");
+    }
+
+    #[test]
+    fn correction_off_freezes_estimates_but_keeps_the_alarm() {
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), false);
+        m.observe(&obs_for(&p, 1, 1.5));
+        m.refresh();
+        assert_eq!(m.obs_seen(), 1);
+        assert!((m.drift_alarm() - 1.5f64.ln()).abs() < 1e-12);
+        let (tech, step) = p.best_at(1, 1, 0).unwrap();
+        let s = m.table().step_time(1, tech, 1, 0).unwrap();
+        assert_eq!(s.to_bits(), step.to_bits());
+    }
+
+    #[test]
+    fn factors_are_clamped() {
+        let p = table();
+        let mut m = EstimateModel::new(p.clone(), true);
+        let mut o = obs_for(&p, 0, 100.0);
+        o.steps = 1e9; // weight cap keeps one stint from dominating
+        for _ in 0..50 {
+            m.observe(&o);
+        }
+        assert!(m.factor(0, o.tech, 1, 0) <= FACTOR_MAX + 1e-12);
+    }
+}

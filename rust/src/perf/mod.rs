@@ -1,0 +1,212 @@
+//! The performance-model layer (DESIGN.md §4.4): *what the planner
+//! believes* and *what the hardware does* are distinct models, connected
+//! only by observation.
+//!
+//!  * [`drift::TruthModel`] — the oracle ground truth: the profiled
+//!    table plus deterministic, seeded drift processes. ONLY
+//!    `sim::engine` may read it; everything that plans (Saturn, the
+//!    baselines, the CLI) sees the estimate.
+//!  * [`estimate::EstimateModel`] — the planner's belief: starts at the
+//!    profiled table and corrects from [`estimate::Observation`] records
+//!    the engine emits at rung boundaries, completions, and
+//!    introspection checkpoints.
+//!  * [`PerfModel`] — the pair, as the simulation engine consumes it.
+//!    `exact()` (no drift) reproduces the pre-split simulator bit for
+//!    bit; `oracle()` hands the planner the frozen truth at each replan
+//!    (the upper bound `bench_drift` measures degradation against).
+
+pub mod drift;
+pub mod estimate;
+
+pub use drift::{DriftConfig, TruthModel};
+pub use estimate::{EstimateModel, Observation};
+
+use crate::trials::ProfileTable;
+
+/// How the planner-facing table is produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimateSource {
+    /// Estimates frozen at the profiled table (correction off).
+    Profiled,
+    /// Online correction from observations (the default).
+    Corrected,
+    /// The truth itself, frozen at the current virtual time — an
+    /// oracle-informed planner (bench upper bound; unreachable live).
+    Oracle,
+}
+
+/// Truth + estimate, wired the way `sim::engine` drives them.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    truth: TruthModel,
+    pub estimate: EstimateModel,
+    source: EstimateSource,
+    /// Oracle mode: the truth table materialized at `oracle_now`.
+    oracle_table: Option<ProfileTable>,
+    oracle_now: f64,
+}
+
+impl PerfModel {
+    /// No drift: truth == estimate == the profiled table. The batch
+    /// `simulate`/`simulate_online` wrappers route through this, and it
+    /// is bit-identical to the pre-split engine. Correction is off —
+    /// with zero drift every factor is exactly 1.0 anyway, and a frozen
+    /// model skips the per-event table re-materialization entirely.
+    pub fn exact(profiles: &ProfileTable) -> PerfModel {
+        PerfModel::with_drift(profiles, DriftConfig::none(), false)
+    }
+
+    /// Drifting truth; the planner sees the correcting estimate
+    /// (`correction = true`) or the frozen profiled table.
+    pub fn with_drift(profiles: &ProfileTable, cfg: DriftConfig,
+                      correction: bool) -> PerfModel {
+        let source = if correction {
+            EstimateSource::Corrected
+        } else {
+            EstimateSource::Profiled
+        };
+        PerfModel {
+            truth: TruthModel::new(profiles.clone(), cfg),
+            estimate: EstimateModel::new(profiles.clone(), correction),
+            source,
+            oracle_table: None,
+            oracle_now: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Drifting truth with an ORACLE planner: every replan reads the
+    /// truth frozen at the current virtual time.
+    pub fn oracle(profiles: &ProfileTable, cfg: DriftConfig) -> PerfModel {
+        let mut m = PerfModel::with_drift(profiles, cfg, false);
+        m.source = EstimateSource::Oracle;
+        m.oracle_table = Some(m.truth.table_at(0.0));
+        m.oracle_now = 0.0;
+        m
+    }
+
+    pub fn source(&self) -> EstimateSource {
+        self.source
+    }
+
+    /// TRUE step time at `now` — the engine's charge. Nothing outside
+    /// `sim::engine` should call this: planners read [`PerfModel::table`].
+    pub fn true_step_time(&self, job: usize, tech: usize, gpus: u32,
+                          class: usize, now: f64) -> Option<f64> {
+        self.truth.step_time(job, tech, gpus, class, now)
+    }
+
+    /// Fold an observed stint into the estimate layer. A no-op in
+    /// oracle mode: the oracle planner reads the truth directly, so
+    /// surprise-vs-frozen-profiles bookkeeping would only mislead
+    /// (its reported estimate error is genuinely ~0).
+    pub fn observe(&mut self, obs: &Observation) {
+        if self.source == EstimateSource::Oracle {
+            return;
+        }
+        self.estimate.observe(obs);
+    }
+
+    /// Drop a departed job from the drift alarm (see
+    /// [`EstimateModel::retire_job`]).
+    pub fn retire_job(&mut self, job: usize) {
+        self.estimate.retire_job(job);
+    }
+
+    /// Bring the planner-facing table up to date for virtual time `now`.
+    /// The engine calls this before every policy replan; afterwards
+    /// [`PerfModel::table`] borrows immutably.
+    pub fn refresh(&mut self, now: f64) {
+        match self.source {
+            EstimateSource::Oracle => {
+                if self.oracle_table.is_none() || self.oracle_now != now {
+                    self.oracle_table = Some(self.truth.table_at(now));
+                    self.oracle_now = now;
+                }
+            }
+            _ => self.estimate.refresh(),
+        }
+    }
+
+    /// The planner-facing estimate table (see [`PerfModel::refresh`]).
+    pub fn table(&self) -> &ProfileTable {
+        match self.source {
+            EstimateSource::Oracle => self
+                .oracle_table
+                .as_ref()
+                .expect("refresh() before table() in oracle mode"),
+            _ => self.estimate.table(),
+        }
+    }
+
+    pub fn obs_seen(&self) -> usize {
+        self.estimate.obs_seen()
+    }
+
+    pub fn drift_alarm(&self) -> f64 {
+        self.estimate.drift_alarm()
+    }
+
+    pub fn estimate_mae(&self) -> f64 {
+        self.estimate.estimate_mae()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::trials::profile_analytic;
+    use crate::workload::toy_workload;
+
+    fn profiles() -> ProfileTable {
+        let jobs = toy_workload(4);
+        profile_analytic(&jobs, &default_library(), &ClusterSpec::p4d(1))
+    }
+
+    #[test]
+    fn exact_model_truth_equals_estimate_equals_profiles() {
+        let p = profiles();
+        let mut m = PerfModel::exact(&p);
+        m.refresh(0.0);
+        for (&(j, ti, g, c), e) in p.cells() {
+            let t = m.true_step_time(j, ti, g, c, 7777.0).unwrap();
+            let s = m.table().step_time(j, ti, g, c).unwrap();
+            assert_eq!(t.to_bits(), e.step_time_s.to_bits());
+            assert_eq!(s.to_bits(), e.step_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn drifting_truth_diverges_from_frozen_estimate() {
+        let p = profiles();
+        let mut m =
+            PerfModel::with_drift(&p, DriftConfig::uniform(9, 0.3), false);
+        m.refresh(36_000.0);
+        let mut diverged = 0;
+        for (&(j, ti, g, c), _) in p.cells() {
+            let t = m.true_step_time(j, ti, g, c, 36_000.0).unwrap();
+            let s = m.table().step_time(j, ti, g, c).unwrap();
+            if (t / s - 1.0).abs() > 0.02 {
+                diverged += 1;
+            }
+        }
+        assert!(diverged > 0, "30% drift moved no cell past 2%");
+    }
+
+    #[test]
+    fn oracle_table_tracks_the_truth_at_refresh_time() {
+        let p = profiles();
+        let cfg = DriftConfig::uniform(11, 0.2);
+        let mut m = PerfModel::oracle(&p, cfg);
+        for &now in &[0.0, 10_000.0, 50_000.0] {
+            m.refresh(now);
+            for (&(j, ti, g, c), _) in p.cells() {
+                let t = m.true_step_time(j, ti, g, c, now).unwrap();
+                let s = m.table().step_time(j, ti, g, c).unwrap();
+                assert_eq!(t.to_bits(), s.to_bits(),
+                           "oracle diverged at t={now}");
+            }
+        }
+    }
+}

@@ -62,12 +62,29 @@ pub struct SaturnPolicy {
     /// `solve_joint_with`). 1.0 = static plans (default; best on the
     /// Table 2 workloads — larger values under-allocate, bench E8).
     pub lookahead: f64,
+    /// Drift-triggered re-solve: when the estimate layer has NEW
+    /// observations since the last solve and reports a worst
+    /// observed/estimated mismatch beyond this |ln ratio|, re-solve even
+    /// though the cached plan still covers every pending job. `None`
+    /// disables the trigger. Zero drift never reaches any threshold, so
+    /// pre-drift runs are unchanged.
+    pub drift_threshold: Option<f64>,
+    /// Re-solves fired by the drift trigger alone (not by coverage gaps
+    /// or the fixed introspection interval).
+    pub drift_resolves: usize,
+    last_obs_seen: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
     decision_s: f64,
     pub last_stats: SolverStats,
     solves: usize,
+    /// Accumulated (lp_capped, limit_reached) across every solve.
+    pressure: (usize, usize),
 }
+
+/// Default |ln(observed/estimated)| beyond which Saturn policies re-plan
+/// without waiting for the introspection interval (~10% step-time drift).
+pub const DEFAULT_DRIFT_THRESHOLD: f64 = 0.10;
 
 impl SaturnPolicy {
     pub fn new(mode: SolverMode, introspect_every_s: Option<f64>) -> Self {
@@ -76,11 +93,15 @@ impl SaturnPolicy {
             introspect_every_s,
             migration_threshold: 0.15,
             lookahead: 1.0,
+            drift_threshold: Some(DEFAULT_DRIFT_THRESHOLD),
+            drift_resolves: 0,
+            last_obs_seen: 0,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
             decision_s: 0.0,
             last_stats: SolverStats::default(),
             solves: 0,
+            pressure: (0, 0),
         }
     }
 
@@ -99,6 +120,20 @@ impl SaturnPolicy {
     fn launch_from_cache(&self, ctx: &PlanContext) -> Vec<Launch> {
         let Some(plan) = &self.cached else { return Vec::new() };
         launch_from_plan(plan, ctx, false)
+    }
+}
+
+/// The drift trigger shared by the batch and online Saturn policies:
+/// re-solve when there is NEW evidence since the last solve AND the
+/// estimate layer's worst observed/estimated mismatch crossed the
+/// threshold. Both conditions matter: without fresh observations the
+/// estimate (and thus the plan) cannot have changed, and below the
+/// threshold a re-solve only churns checkpoints.
+pub fn drift_resolve_due(threshold: Option<f64>, last_obs_seen: usize,
+                         obs_seen: usize, drift_alarm: f64) -> bool {
+    match threshold {
+        Some(th) => obs_seen > last_obs_seen && drift_alarm > th,
+        None => false,
     }
 }
 
@@ -169,23 +204,32 @@ impl Policy for SaturnPolicy {
             .introspect_every_s
             .map(|i| ctx.now - self.last_solve_t >= i - 1e-9)
             .unwrap_or(false);
+        let drift_due = drift_resolve_due(self.drift_threshold,
+                                          self.last_obs_seen, ctx.obs_seen,
+                                          ctx.drift_alarm);
         let cache_covers = self
             .cached
             .as_ref()
             .map(|p| remaining.iter().all(|&(id, _)| p.plan_for(id).is_some()))
             .unwrap_or(false);
-        if cache_covers && !introspect_due {
+        if cache_covers && !introspect_due && !drift_due {
             let launches = self.launch_from_cache(ctx);
             self.decision_s += t0.elapsed().as_secs_f64();
             return launches;
+        }
+        if drift_due && cache_covers && !introspect_due {
+            self.drift_resolves += 1;
         }
 
         let (mut plan, stats) = solve_joint_with(&remaining, ctx.profiles,
                                                  ctx.cluster, self.mode,
                                                  self.lookahead);
+        self.pressure.0 += stats.lp_capped;
+        self.pressure.1 += stats.limit_reached;
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;
+        self.last_obs_seen = ctx.obs_seen;
 
         apply_migration_hysteresis(&mut plan, ctx, &remaining,
                                    self.migration_threshold);
@@ -202,6 +246,10 @@ impl Policy for SaturnPolicy {
 
     fn decision_time_s(&self) -> f64 {
         self.decision_s
+    }
+
+    fn solver_pressure(&self) -> (usize, usize) {
+        self.pressure
     }
 }
 

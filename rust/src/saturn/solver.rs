@@ -93,6 +93,14 @@ pub struct SolverStats {
     pub warm_misses: usize,
     /// Rolling-horizon windows solved (0 = single-shot formulation).
     pub windows: usize,
+    /// Node LPs that hit the simplex iteration cap (`LpInfo::capped`):
+    /// their objectives are not trusted as bounds, so a growing count
+    /// means the search is degrading quietly.
+    pub lp_capped: usize,
+    /// MILP solves stopped by a node/time limit — `LimitReached` or an
+    /// unproved incumbent. Under event-rate re-solving this is the
+    /// "solver can no longer keep up" signal the online metrics surface.
+    pub limit_reached: usize,
 }
 
 impl SolverStats {
@@ -112,6 +120,7 @@ impl SolverStats {
         self.lp_pivots += st.lp_pivots;
         self.warm_hits += st.warm_hits;
         self.warm_misses += st.warm_misses;
+        self.lp_capped += st.capped_lps;
     }
 }
 
@@ -517,6 +526,9 @@ fn plan_selection_with_engine(
     match result {
         MilpResult::Solved { x, proved_optimal, .. } => {
             stats.proved_optimal = proved_optimal;
+            if !proved_optimal {
+                stats.limit_reached += 1;
+            }
             let mut out = Vec::new();
             for (ji, (id, ps)) in plans.iter().enumerate() {
                 let c = (0..ps.len())
@@ -532,6 +544,10 @@ fn plan_selection_with_engine(
                 });
             }
             Some(out)
+        }
+        MilpResult::LimitReached { .. } => {
+            stats.limit_reached += 1;
+            None
         }
         _ => None,
     }

@@ -2,19 +2,30 @@
 //! and introspection points, asks the `Policy` for launch decisions, and
 //! enforces capacity/placement/checkpoint semantics.
 //!
-//! Two entrypoints share one event loop:
+//! Three entrypoints share one event loop:
 //!  * [`simulate`] — the paper's batch setting: every job known at t=0.
 //!  * [`simulate_online`] — the streaming setting (DESIGN.md §Online):
 //!    jobs arrive over virtual time, ASHA-style rung boundaries early-stop
 //!    the worst fraction of each HPO grid, and policies may opt into
 //!    preempt-and-replan on arrival/departure events (checkpoint penalties
 //!    charged whenever a relaunched job's (technique, gpus) changed).
+//!  * [`simulate_online_perf`] — the full estimate-vs-truth split
+//!    (DESIGN.md §4.4): running jobs are charged the [`PerfModel`]'s TRUE
+//!    step times (truth is read here and nowhere else), while policies
+//!    plan against its estimate table; wherever progress is banked the
+//!    engine emits [`Observation`] records that feed the estimate's
+//!    online correction. The other two entrypoints are zero-drift
+//!    wrappers and remain bit-identical to the pre-split engine
+//!    (`tests/prop_drift.rs` holds them to it).
 //!
 //! Determinism: given the same policy (and policy seed), the simulation is
 //! bit-reproducible — Table 2 rows in EXPERIMENTS.md cite seeds, and the
-//! `online` CLI replays traces to bit-identical schedules.
+//! `online` CLI replays traces to bit-identical schedules. Drift is a
+//! pure function of `(job, class, time, seed)`, so this holds with the
+//! perf split too.
 
 use crate::cluster::ClusterSpec;
+use crate::perf::{Observation, PerfModel};
 use crate::sim::placement::{FreeState, Placement};
 use crate::trials::ProfileTable;
 use crate::workload::arrivals::OnlineJob;
@@ -41,6 +52,10 @@ pub struct Running {
     /// Virtual time at which steps start accumulating (start + restart lag).
     pub resume_at: f64,
     pub planned_finish: f64,
+    /// Seconds of this stint already reported to the estimate layer
+    /// (surviving rung boundaries observe incrementally, so later
+    /// observations of the same stint never re-count earlier steps).
+    pub observed_s: f64,
 }
 
 /// Job + live progress (+ online metadata; batch mode uses the defaults).
@@ -81,13 +96,23 @@ impl JobProgress {
     }
 }
 
-/// Everything a policy may look at when planning.
+/// Everything a policy may look at when planning. `profiles` is the
+/// planner-facing ESTIMATE table (the perf layer's belief, never the
+/// truth) — Saturn and every baseline observe the cluster through the
+/// same interface, so comparisons stay fair under drift.
 pub struct PlanContext<'a> {
     pub now: f64,
     pub jobs: &'a [JobProgress],
     pub free: &'a FreeState,
     pub profiles: &'a ProfileTable,
     pub cluster: &'a ClusterSpec,
+    /// Observations delivered to the estimate layer so far (monotone).
+    /// Policies snapshot this to detect "new evidence since my last
+    /// solve" for drift-triggered re-solves.
+    pub obs_seen: usize,
+    /// Worst current |ln(observed/estimated)| across jobs' latest
+    /// observations — zero while estimates are perfect (e.g. no drift).
+    pub drift_alarm: f64,
 }
 
 /// Scheduling policy plugged into the simulator (Saturn + all baselines).
@@ -118,12 +143,26 @@ pub trait Policy {
     fn decision_time_s(&self) -> f64 {
         0.0
     }
+
+    /// Solver stress counters accumulated across the run, as
+    /// `(lp_capped, milp_limit_reached)`: node LPs that hit the simplex
+    /// iteration cap, and MILP solves stopped by a node/time limit.
+    /// Zero for solver-free policies; surfaced in [`OnlineSimResult`] so
+    /// silent plan degradation under event-rate re-solving is visible.
+    fn solver_pressure(&self) -> (usize, usize) {
+        (0, 0)
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Seconds charged when a running job is checkpointed and relaunched
-    /// under a different allocation (Gandiva/AntMan-style migration).
+    /// under a different allocation WITHIN the same GPU class — a
+    /// reshape-in-place that re-shards optimizer state among overlapping
+    /// ranks (Gandiva/AntMan-style migration). Cross-class moves charge
+    /// the destination class's cheaper
+    /// [`crate::cluster::GpuClass::reload_penalty_s`] instead: a clean
+    /// sequential checkpoint stream over the destination's PCIe.
     pub checkpoint_penalty_s: f64,
     /// Safety valve for runaway simulations.
     pub max_virtual_time_s: f64,
@@ -189,6 +228,17 @@ pub struct OnlineSimResult {
     pub peak_gpus: u32,
     pub launches: usize,
     pub policy_decision_s: f64,
+    /// Node LPs that hit the simplex iteration cap across the policy's
+    /// solves ([`Policy::solver_pressure`]) — solver stress under
+    /// event-rate re-solving, not silent degradation.
+    pub lp_capped: usize,
+    /// MILP solves stopped by a node/time limit across the run.
+    pub milp_limit_reached: usize,
+    /// Observations the engine delivered to the estimate layer.
+    pub observations: usize,
+    /// Mean |ln(observed/estimated)| across those observations — the
+    /// run's realized estimate error (0.0 without drift).
+    pub estimate_mae: f64,
 }
 
 impl OnlineSimResult {
@@ -222,12 +272,31 @@ pub fn simulate(jobs: &[Job], profiles: &ProfileTable, cluster: &ClusterSpec,
     }
 }
 
-/// Streaming event loop: arrivals, rung-boundary departures, completions
-/// and introspection points, in deterministic order. `jobs` must carry
-/// dense ids 0..n (policies index job state by id).
+/// Streaming event loop with a PERFECT performance model: truth and
+/// estimate are both the profiled table (zero drift). Bit-identical to
+/// the pre-split engine; see [`simulate_online_perf`] for the split.
 pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                        profiles: &ProfileTable, cluster: &ClusterSpec,
                        policy: &mut dyn Policy, cfg: &SimConfig)
+    -> OnlineSimResult {
+    let mut perf = PerfModel::exact(profiles);
+    simulate_online_perf(jobs, rungs, &mut perf, cluster, policy, cfg)
+}
+
+/// Streaming event loop: arrivals, rung-boundary departures, completions
+/// and introspection points, in deterministic order. `jobs` must carry
+/// dense ids 0..n (policies index job state by id).
+///
+/// The estimate-vs-truth split: running jobs are charged `perf`'s TRUE
+/// step times (sampled at each (re)launch instant — a stint runs at
+/// constant speed, and every introspective replan re-samples the drifted
+/// truth, which is the mid-run `Running::step_time` refresh); policies
+/// see only `perf`'s estimate table via [`PlanContext`]. Wherever the
+/// engine banks progress — completions, rung kills, preemption
+/// checkpoints — it emits an [`Observation`] to the estimate layer.
+pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
+                            perf: &mut PerfModel, cluster: &ClusterSpec,
+                            policy: &mut dyn Policy, cfg: &SimConfig)
     -> OnlineSimResult {
     for (i, oj) in jobs.iter().enumerate() {
         assert_eq!(oj.job.id, i, "online jobs must have dense ids");
@@ -267,7 +336,8 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         vec![vec![Vec::new(); n_rungs]; n_groups];
 
     // initial plan over the jobs already arrived at t=0
-    apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+    perf.refresh(now);
+    apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                &mut launches, &mut migrations, cfg);
 
     let max_iters = 400_000;
@@ -298,7 +368,8 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         if !t_next.is_finite() {
             // nothing running/arriving: force-plan; if still nothing, deadlock
             let before = launches;
-            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+            perf.refresh(now);
+            apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg);
             if launches == before {
                 panic!(
@@ -334,6 +405,10 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                 s.steps_done = s.job.total_steps();
                 s.finished_at = Some(now);
                 free.release(&r.placement);
+                if let Some(o) = stint_observation(&r, s.job.id, now) {
+                    perf.observe(&o);
+                }
+                perf.retire_job(s.job.id);
                 set_changed = true;
             }
         }
@@ -362,10 +437,26 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                             s.steps_done = (s.steps_done + done.max(0.0) as u64)
                                 .min(s.job.total_steps());
                             free.release(&r.placement);
+                            if let Some(o) =
+                                stint_observation(&r, s.job.id, now)
+                            {
+                                perf.observe(&o);
+                            }
                         }
                         s.finished_at = Some(now);
                         s.early_stopped = true;
+                        perf.retire_job(s.job.id);
                         set_changed = true;
+                    } else if let Some(r) = s.running.as_mut() {
+                        // survivor at a rung boundary: the natural point
+                        // a real system reads step timings — observe the
+                        // stint INCREMENT since the last report, then
+                        // mark it reported
+                        if let Some(o) = stint_observation(r, s.job.id, now)
+                        {
+                            perf.observe(&o);
+                            r.observed_s = now - r.resume_at;
+                        }
                     }
                 }
             }
@@ -391,8 +482,12 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                     s.steps_done = (s.steps_done + done.max(0.0) as u64)
                         .min(s.job.total_steps());
                     free.release(&r.placement);
+                    if let Some(o) = stint_observation(&r, s.job.id, now) {
+                        perf.observe(&o);
+                    }
                     if s.remaining_steps() == 0 {
                         s.finished_at = Some(now);
+                        perf.retire_job(s.job.id);
                     } else {
                         s.last_alloc = Some((r.tech, r.gpus, r.class));
                     }
@@ -402,11 +497,13 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                 next_introspect = Some(now + interval.unwrap());
             }
             let pre_launch = snapshot_allocs(&state);
-            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+            perf.refresh(now);
+            apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg);
             preemptions += count_migrations(&pre_launch, &state);
         } else {
-            apply_plan(policy, &mut state, &mut free, profiles, cluster, now,
+            perf.refresh(now);
+            apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg);
         }
     }
@@ -430,6 +527,7 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             }
         }
     }
+    let (lp_capped, milp_limit_reached) = policy.solver_pressure();
     OnlineSimResult {
         makespan_s: makespan,
         finish_times: state
@@ -450,7 +548,32 @@ pub fn simulate_online(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         peak_gpus,
         launches,
         policy_decision_s: policy.decision_time_s(),
+        lp_capped,
+        milp_limit_reached,
+        observations: perf.obs_seen(),
+        estimate_mae: perf.estimate_mae(),
     }
+}
+
+/// The observed record of one running stint ending (or being read) at
+/// `now`, covering only the NOT-yet-reported part (`Running::observed_s`
+/// tracks what surviving rung boundaries already reported): `None` while
+/// the checkpoint-restart lag has not elapsed or nothing new ran.
+fn stint_observation(r: &Running, job_id: usize, now: f64)
+    -> Option<Observation> {
+    let dur = now - r.resume_at - r.observed_s;
+    if dur <= 1e-9 || r.step_time <= 0.0 {
+        return None;
+    }
+    Some(Observation {
+        job_id,
+        tech: r.tech,
+        gpus: r.gpus,
+        class: r.class,
+        steps: dur / r.step_time,
+        step_time_s: r.step_time,
+        at_s: now,
+    })
 }
 
 /// Virtual time at which a RUNNING job crosses its next rung threshold,
@@ -492,11 +615,19 @@ fn count_migrations(before: &[Option<(usize, u32, usize)>],
 
 #[allow(clippy::too_many_arguments)]
 fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
-              free: &mut FreeState, profiles: &ProfileTable,
+              free: &mut FreeState, perf: &PerfModel,
               cluster: &ClusterSpec, now: f64, launches: &mut usize,
               migrations: &mut usize, cfg: &SimConfig) {
     let proposals = {
-        let ctx = PlanContext { now, jobs: state, free, profiles, cluster };
+        let ctx = PlanContext {
+            now,
+            jobs: state,
+            free,
+            profiles: perf.table(),
+            cluster,
+            obs_seen: perf.obs_seen(),
+            drift_alarm: perf.drift_alarm(),
+        };
         policy.plan(&ctx)
     };
     for l in proposals {
@@ -504,16 +635,32 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         if !s.is_pending() {
             continue; // policy asked for a running/finished job; ignore
         }
-        let Some(step_time) =
-            profiles.step_time(l.job_id, l.tech, l.gpus, l.class)
-        else {
+        // feasibility is judged on the ESTIMATE the policy planned with;
+        // the hardware then charges the TRUE step time (same support —
+        // drift perturbs magnitudes, never feasibility)
+        if perf.table().step_time(l.job_id, l.tech, l.gpus, l.class)
+            .is_none()
+        {
             continue; // infeasible plan; ignore defensively
+        }
+        let Some(step_time) =
+            perf.true_step_time(l.job_id, l.tech, l.gpus, l.class, now)
+        else {
+            continue;
         };
         let Some(placement) = free.place(l.class, l.gpus) else { continue };
-        // checkpoint/restart lag when the allocation changed shape
+        // checkpoint/restart lag when the allocation changed shape: a
+        // same-class reshape re-shards in place; a cross-class move is a
+        // cheaper clean reload into the destination class
         let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus, l.class))
             .unwrap_or(false);
-        let lag = if migrated { cfg.checkpoint_penalty_s } else { 0.0 };
+        let lag = match s.last_alloc {
+            Some((_, _, prev_class)) if migrated && prev_class != l.class => {
+                cluster.class(l.class).reload_penalty_s
+            }
+            _ if migrated => cfg.checkpoint_penalty_s,
+            _ => 0.0,
+        };
         if migrated {
             *migrations += 1;
         }
@@ -527,6 +674,7 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
             step_time,
             resume_at,
             planned_finish: resume_at + remaining * step_time,
+            observed_s: 0.0,
         });
         s.last_alloc = Some((l.tech, l.gpus, l.class));
         *launches += 1;
@@ -713,5 +861,63 @@ mod tests {
                                 &cluster, &mut Fifo, &SimConfig::default());
         assert!(r.peak_gpus <= cluster.total_gpus());
         assert!(r.gpu_utilization <= 1.0 + 1e-9);
+    }
+
+    // -- estimate-vs-truth split ------------------------------------------
+
+    #[test]
+    fn zero_drift_perf_path_matches_the_plain_wrapper() {
+        let (_, profiles, cluster) = setup(6);
+        let jobs = online_jobs(6, 1_000.0);
+        let rungs = RungConfig::halving();
+        let a = simulate_online(&jobs, Some(&rungs), &profiles, &cluster,
+                                &mut Fifo, &SimConfig::default());
+        let mut perf = crate::perf::PerfModel::with_drift(
+            &profiles, crate::perf::DriftConfig::none(), true);
+        let b = simulate_online_perf(&jobs, Some(&rungs), &mut perf,
+                                     &cluster, &mut Fifo,
+                                     &SimConfig::default());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.jct_s, b.jct_s);
+        assert_eq!(a.early_stopped, b.early_stopped);
+        assert_eq!(a.estimate_mae, 0.0);
+        assert_eq!(b.estimate_mae, 0.0);
+    }
+
+    #[test]
+    fn drifting_truth_emits_observations_and_shifts_the_makespan() {
+        let (_, profiles, cluster) = setup(6);
+        let jobs = online_jobs(6, 1_000.0);
+        let rungs = RungConfig::halving();
+        let base = simulate_online(&jobs, Some(&rungs), &profiles, &cluster,
+                                   &mut Fifo, &SimConfig::default());
+        let mut perf = crate::perf::PerfModel::with_drift(
+            &profiles, crate::perf::DriftConfig::uniform(5, 0.3), true);
+        let r = simulate_online_perf(&jobs, Some(&rungs), &mut perf,
+                                     &cluster, &mut Fifo,
+                                     &SimConfig::default());
+        assert!(r.observations > 0, "no observations under drift");
+        assert!(r.estimate_mae > 0.0, "drift produced no estimate error");
+        assert!((r.makespan_s - base.makespan_s).abs()
+                    > 1e-6 * base.makespan_s,
+                "30% drift left the makespan untouched");
+        assert_eq!(r.finish_times.len(), 6);
+    }
+
+    #[test]
+    fn drift_replay_is_bit_identical() {
+        let (_, profiles, cluster) = setup(6);
+        let jobs = online_jobs(6, 1_000.0);
+        let run = || {
+            let mut perf = crate::perf::PerfModel::with_drift(
+                &profiles, crate::perf::DriftConfig::uniform(13, 0.2), true);
+            simulate_online_perf(&jobs, Some(&RungConfig::halving()),
+                                 &mut perf, &cluster, &mut Fifo,
+                                 &SimConfig::default())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.estimate_mae, b.estimate_mae);
+        assert_eq!(a.observations, b.observations);
     }
 }

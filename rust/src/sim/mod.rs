@@ -8,7 +8,7 @@
 pub mod engine;
 pub mod placement;
 
-pub use engine::{simulate, simulate_online, JobProgress, Launch,
-                 OnlineSimResult, PlanContext, Policy, Running, RungConfig,
-                 SimConfig, SimResult};
+pub use engine::{simulate, simulate_online, simulate_online_perf,
+                 JobProgress, Launch, OnlineSimResult, PlanContext, Policy,
+                 Running, RungConfig, SimConfig, SimResult};
 pub use placement::{FreeState, Placement};

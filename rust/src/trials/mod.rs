@@ -116,6 +116,30 @@ impl ProfileTable {
         self.entries.insert((job, tech, gpus, class), e);
     }
 
+    /// Iterate every profiled cell as `(&(job, tech, gpus, class),
+    /// &StepEstimate)` (arbitrary order; the perf layer's hooks).
+    pub fn cells(
+        &self,
+    ) -> impl Iterator<Item = (&(usize, usize, u32, usize), &StepEstimate)>
+           + '_ {
+        self.entries.iter()
+    }
+
+    /// Clone the table with every cell's step time transformed by
+    /// `f(job, tech, gpus, class, step_time)` — how the estimate layer
+    /// materializes correction factors and the truth model freezes a
+    /// drifted snapshot. Memory/MFU diagnostics are left untouched.
+    pub fn with_scaled_step_times<F>(&self, mut f: F) -> ProfileTable
+    where
+        F: FnMut(usize, usize, u32, usize, f64) -> f64,
+    {
+        let mut t = self.clone();
+        for (k, e) in t.entries.iter_mut() {
+            e.step_time_s = f(k.0, k.1, k.2, k.3, e.step_time_s);
+        }
+        t
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
