@@ -1,0 +1,195 @@
+//! Bench E16: pluggable scheduling objectives (DESIGN.md §4.5).
+//!
+//! Three sections, emitted to `BENCH_objective.json` (override with
+//! `SATURN_BENCH_OUT`):
+//!
+//!  1. **Makespan-arm equivalence probe** — replays EXACTLY the
+//!     `bench_online` scenario under `--objective makespan`, through
+//!     both the historical path and the objective plumbing. CI asserts
+//!     the recorded makespans match `BENCH_online.json`'s online-saturn
+//!     row within 1e-6: the refactor is behavior-preserving by
+//!     construction.
+//!  2. **Objective sweep on a deadline-slack trace** — the same trace
+//!     generator with a tight 2 h slack, run under makespan vs
+//!     tardiness vs the wjct blend. The tardiness arm must show lower
+//!     weighted tardiness and no more deadline misses than the
+//!     makespan arm (CI asserts from the record).
+//!  3. **256-job rolling-horizon tardiness solve** — the PR 2 scale
+//!     bar with the richer objective: epigraph rows per deadlined job
+//!     must keep the solve sub-second.
+//!
+//! Run: `cargo bench --bench bench_objective`
+
+use saturn::bench::{fmt_s, print_header};
+use saturn::cluster::ClusterSpec;
+use saturn::objective::{JobTerms, Objective};
+use saturn::online::{profile_trace, run_trace, run_trace_obj,
+                     OnlineMetrics};
+use saturn::parallelism::default_library;
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::{solve_joint_obj, SolverMode};
+use saturn::sim::engine::RungConfig;
+use saturn::trials::profile_analytic;
+use saturn::util::json::Json;
+use saturn::workload::{generate_trace, toy_workload, ArrivalProcess,
+                       TraceConfig};
+
+// Tight enough that the makespan arm robustly accrues tardiness under
+// the trace's queueing (realized JCTs run well past 2 h), so the CI
+// comparison against the tardiness arm has signal.
+const TIGHT_SLACK_S: f64 = 2.0 * 3600.0;
+
+fn arm_json(tag: &str, m: &OnlineMetrics) -> Json {
+    Json::obj(vec![
+        ("objective", Json::str(tag)),
+        ("makespan_s", Json::num(m.makespan_s)),
+        ("avg_jct_s", Json::num(m.avg_jct_s)),
+        ("weighted_jct_s", Json::num(m.weighted_jct_s)),
+        ("total_tardiness_s", Json::num(m.total_tardiness_s)),
+        ("weighted_tardiness_s", Json::num(m.weighted_tardiness_s)),
+        ("deadline_misses", Json::num(m.deadline_misses as f64)),
+        ("early_stopped", Json::num(m.early_stopped as f64)),
+        ("solves", Json::num(m.solves.unwrap_or(0) as f64)),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1");
+
+    // ------------------------------------------------------------------
+    // 1. makespan-arm equivalence: EXACTLY the bench_online scenario
+    // ------------------------------------------------------------------
+    let cfg = TraceConfig {
+        seed: 42,
+        multijobs: 6,
+        process: ArrivalProcess::Poisson { rate_per_hour: 2.0 },
+        grid_lrs: 2,
+        grid_batches: 2,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: Some(24.0 * 3600.0),
+    };
+    let trace = generate_trace(&cfg);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+
+    print_header("makespan-arm equivalence (bench_online scenario)");
+    let (_, hist) = run_trace(&trace, Some(&rungs), &profiles, &cluster,
+                              "online-saturn", SolverMode::Joint);
+    let mut perf = PerfModel::exact(&profiles);
+    let (_, via_obj) = run_trace_obj(&trace, Some(&rungs), &mut perf,
+                                     &cluster, "online-saturn",
+                                     SolverMode::Joint, None,
+                                     Objective::Makespan);
+    println!("historical path makespan: {:.6} h",
+             hist.makespan_s / 3600.0);
+    println!("objective path makespan:  {:.6} h",
+             via_obj.makespan_s / 3600.0);
+    assert_eq!(hist.makespan_s.to_bits(), via_obj.makespan_s.to_bits(),
+               "objective plumbing changed the makespan path");
+
+    // ------------------------------------------------------------------
+    // 2. objective sweep on a deadline-slack trace (tight 2 h slack)
+    // ------------------------------------------------------------------
+    let tight_cfg = TraceConfig {
+        deadline_slack_s: Some(TIGHT_SLACK_S),
+        ..cfg.clone()
+    };
+    let tight = generate_trace(&tight_cfg);
+    let tight_profiles = profile_trace(&tight, &cluster);
+    print_header(&format!(
+        "objective sweep, {} jobs / {} multi-jobs, {:.0} h deadline slack",
+        tight.jobs.len(), tight.groups, TIGHT_SLACK_S / 3600.0));
+    let objectives = [
+        ("makespan", Objective::Makespan),
+        ("tardiness",
+         Objective::WeightedTardiness { deadline_weight: 1.0 }),
+        ("wjct", Objective::WeightedJct { alpha: 0.5 }),
+    ];
+    let mut arms: Vec<(&str, OnlineMetrics)> = Vec::new();
+    println!("{:<12} {:>12} {:>10} {:>10} {:>6} {:>8}", "objective",
+             "makespan(h)", "wJCT(h)", "wTard(h)", "miss", "solves");
+    for (tag, objective) in objectives {
+        let mut perf = PerfModel::exact(&tight_profiles);
+        let (_, m) = run_trace_obj(&tight, Some(&rungs), &mut perf,
+                                   &cluster, "online-saturn",
+                                   SolverMode::Joint, None, objective);
+        println!("{:<12} {:>12.3} {:>10.3} {:>10.4} {:>6} {:>8}", tag,
+                 m.makespan_s / 3600.0, m.weighted_jct_s / 3600.0,
+                 m.weighted_tardiness_s / 3600.0, m.deadline_misses,
+                 m.solves.unwrap_or(0));
+        arms.push((tag, m));
+    }
+    let mk = &arms[0].1;
+    let td = &arms[1].1;
+    println!("\ntardiness vs makespan arm: weighted tardiness \
+              {:.4} h -> {:.4} h, misses {} -> {}",
+             mk.weighted_tardiness_s / 3600.0,
+             td.weighted_tardiness_s / 3600.0, mk.deadline_misses,
+             td.deadline_misses);
+
+    // ------------------------------------------------------------------
+    // 3. 256-job rolling-horizon tardiness solve (PR 2 scale bar)
+    // ------------------------------------------------------------------
+    print_header("256-job rolling-horizon solve, tardiness objective");
+    let jobs256 = toy_workload(256);
+    let big = ClusterSpec::p4d(8);
+    let lib = default_library();
+    let profiles256 = profile_analytic(&jobs256, &lib, &big);
+    let rem: Vec<(usize, u64)> =
+        jobs256.iter().map(|j| (j.id, j.total_steps())).collect();
+    // heterogeneous deadlines/weights so every epigraph row activates
+    let terms: Vec<JobTerms> = rem
+        .iter()
+        .map(|&(id, _)| JobTerms {
+            weight: 1.0 + (id % 3) as f64,
+            due_in_s: Some(1800.0 * (1 + id % 16) as f64),
+            job_id: id,
+        })
+        .collect();
+    // min-filtered over reps EVEN in fast mode: CI asserts the recorded
+    // wall time, and a single sample on a shared runner is too noisy
+    let reps = if fast { 3 } else { 5 };
+    let mut wall = f64::INFINITY;
+    let mut windows = 0usize;
+    let mut planned = 0usize;
+    for _ in 0..reps {
+        let (plan, stats) = solve_joint_obj(
+            &rem, &profiles256, &big, SolverMode::rolling_default(), 1.0,
+            None, Objective::WeightedTardiness { deadline_weight: 1.0 },
+            &terms);
+        wall = wall.min(stats.wall_s);
+        windows = stats.windows;
+        planned = plan.choices.len();
+    }
+    assert_eq!(planned, 256, "rolling tardiness solve lost jobs");
+    println!("{:<44} {:>10}  [{} windows]{}",
+             "rolling/jobs=256 (tardiness)", fmt_s(wall), windows,
+             if wall < 1.0 { "" } else { "  ** >1s **" });
+
+    // machine-readable perf record
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_objective.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("objective")),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("jobs", Json::num(trace.jobs.len() as f64)),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("deadline_slack_s", Json::num(TIGHT_SLACK_S)),
+        ("makespan_probe", Json::obj(vec![
+            ("makespan_s", Json::num(hist.makespan_s)),
+            ("obj_path_makespan_s", Json::num(via_obj.makespan_s)),
+        ])),
+        ("arms",
+         Json::arr(arms.iter().map(|(tag, m)| arm_json(tag, m)))),
+        ("rolling_256", Json::obj(vec![
+            ("jobs", Json::num(256.0)),
+            ("wall_s", Json::num(wall)),
+            ("windows", Json::num(windows as f64)),
+            ("sub_second", Json::Bool(wall < 1.0)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("\nwrote {out}");
+}

@@ -11,13 +11,42 @@
 
 use crate::baselines::current_practice::best_free_node;
 use crate::baselines::optimus::greedy_allocation;
-use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::objective::Objective;
+use crate::sim::engine::{JobProgress, Launch, PlanContext, Policy};
 
 /// FIFO whole-node scheduling with tenant priorities: the highest-priority
 /// pending job (ties: earliest id = earliest arrival) takes the next free
 /// node. Running jobs are never disturbed.
+///
+/// The queue order is objective-aware (`PlanContext::objective`) so the
+/// baseline competes under the same goal as Saturn: `tardiness` serves
+/// earliest-deadline-first, `wjct` serves the highest weight per
+/// remaining step; `makespan` keeps the historical priority-then-id
+/// order bit for bit.
 #[derive(Default)]
 pub struct OnlineCurrentPractice;
+
+/// The FIFO baseline's queue key under a non-makespan objective
+/// (`None` = historical order). The baseline never profiles runtimes,
+/// so EDF uses the raw deadline instant and the JCT blend uses
+/// remaining steps as its work proxy.
+fn fifo_urgency(objective: &Objective, s: &JobProgress, now: f64)
+    -> Option<f64> {
+    match *objective {
+        Objective::Makespan => None,
+        // the alpha = 1 endpoint IS makespan: keep its ordering here
+        // too (matches Objective::urgency_key's degeneracy)
+        Objective::WeightedJct { alpha } if alpha >= 1.0 => None,
+        Objective::WeightedTardiness { .. } => Some(
+            s.deadline_s
+                .map(|d| s.arrival_s + d - now)
+                .unwrap_or(f64::INFINITY),
+        ),
+        Objective::WeightedJct { .. } => Some(
+            -(s.priority / (s.remaining_steps() as f64).max(1.0)),
+        ),
+    }
+}
 
 impl Policy for OnlineCurrentPractice {
     fn name(&self) -> &'static str {
@@ -28,10 +57,19 @@ impl Policy for OnlineCurrentPractice {
         let mut pending: Vec<_> =
             ctx.jobs.iter().filter(|s| s.is_pending()).collect();
         pending.sort_by(|a, b| {
-            b.priority
+            let historical = b
+                .priority
                 .partial_cmp(&a.priority)
                 .unwrap()
-                .then(a.job.id.cmp(&b.job.id))
+                .then(a.job.id.cmp(&b.job.id));
+            match (fifo_urgency(&ctx.objective, a, ctx.now),
+                   fifo_urgency(&ctx.objective, b, ctx.now)) {
+                (Some(ka), Some(kb)) => ka
+                    .partial_cmp(&kb)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(historical),
+                _ => historical,
+            }
         });
         let mut free = ctx.free.clone();
         let mut out = Vec::new();

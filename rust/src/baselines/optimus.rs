@@ -100,12 +100,34 @@ pub(crate) fn greedy_allocation(ctx: &PlanContext) -> Vec<Launch> {
         alloc[j] = Some((ci, next));
     }
 
-    // realize: check placement feasibility in allocation order
+    // realize: check placement feasibility in allocation order. When
+    // capacity is short, the objective decides who places first
+    // (PlanContext::objective): least slack under tardiness, most
+    // weight-per-second under the JCT blend; makespan keeps the
+    // historical biggest-allocation-first order bit for bit.
     let mut free = ctx.free.clone();
     let mut out = Vec::new();
     let mut jobs_sorted = pending.clone();
-    jobs_sorted.sort_by_key(|&j| {
-        std::cmp::Reverse(alloc[j].map(|(_, g)| g).unwrap_or(0))
+    let urgency = |j: usize| {
+        let s = &ctx.jobs[j];
+        let rt = alloc[j]
+            .and_then(|(ci, g)| runtime(j, ci, g))
+            .unwrap_or(f64::INFINITY);
+        ctx.objective
+            .urgency_key(s.priority, rt, s.arrival_s, s.deadline_s, ctx.now)
+    };
+    jobs_sorted.sort_by(|&a, &b| {
+        let historical = alloc[b]
+            .map(|(_, g)| g)
+            .unwrap_or(0)
+            .cmp(&alloc[a].map(|(_, g)| g).unwrap_or(0));
+        match (urgency(a), urgency(b)) {
+            (Some(ka), Some(kb)) => ka
+                .partial_cmp(&kb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(historical),
+            _ => historical,
+        }
     });
     for j in jobs_sorted {
         let Some((ci, g)) = alloc[j] else { continue };

@@ -209,9 +209,15 @@ impl ClusterSpec {
 
     /// Parse the CLI fleet syntax `a100:32,h100:16` (GPU counts per class;
     /// whole-node multiples of 8). Known classes: `a100`, `h100`.
+    ///
+    /// Every malformed spec returns a clear `Err` naming the offending
+    /// entry: unknown class names, zero/negative/non-numeric counts,
+    /// non-whole-node counts, and DUPLICATE class entries (which an
+    /// earlier version silently folded together) all refuse to parse.
     pub fn parse_fleet(spec: &str) -> Result<ClusterSpec, String> {
         let mut a100 = 0u32;
         let mut h100 = 0u32;
+        let mut seen: Vec<&str> = Vec::new();
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
@@ -221,22 +227,42 @@ impl ClusterSpec {
                 .split_once(':')
                 .ok_or_else(|| format!("bad fleet entry '{part}' \
                                         (expected class:gpus, e.g. a100:32)"))?;
-            let gpus: u32 = count.trim().parse().map_err(|_| {
-                format!("bad GPU count '{count}' in fleet entry '{part}'")
+            let name = name.trim();
+            let count = count.trim();
+            let gpus: i64 = count.parse().map_err(|_| {
+                format!("bad GPU count '{count}' in fleet entry '{part}' \
+                         (expected a whole number, e.g. a100:32)")
             })?;
-            if gpus == 0 || gpus % 8 != 0 {
+            if gpus <= 0 {
+                return Err(format!(
+                    "fleet entry '{part}': GPU count must be positive, \
+                     got {gpus}"));
+            }
+            if gpus % 8 != 0 {
                 return Err(format!(
                     "fleet entry '{part}': GPU count must be a positive \
                      multiple of 8 (whole nodes)"));
             }
-            match name.trim() {
-                "a100" => a100 += gpus / 8,
-                "h100" => h100 += gpus / 8,
+            if gpus / 8 > u32::MAX as i64 {
+                return Err(format!(
+                    "fleet entry '{part}': GPU count exceeds the \
+                     supported fleet size ({} nodes max)", u32::MAX));
+            }
+            if seen.contains(&name) {
+                return Err(format!(
+                    "duplicate GPU class '{name}' in fleet spec '{spec}' \
+                     (merge the entries into one, e.g. {name}:N)"));
+            }
+            let nodes = (gpus / 8) as u32;
+            match name {
+                "a100" => a100 = nodes,
+                "h100" => h100 = nodes,
                 other => {
                     return Err(format!(
                         "unknown GPU class '{other}' (known: a100, h100)"))
                 }
             }
+            seen.push(name);
         }
         if a100 == 0 && h100 == 0 {
             return Err(format!("empty fleet spec '{spec}'"));
@@ -484,6 +510,33 @@ mod tests {
         assert!(ClusterSpec::parse_fleet("a100").is_err()); // no count
         assert!(ClusterSpec::parse_fleet("").is_err()); // empty
         assert!(ClusterSpec::parse_fleet("a100:zero").is_err());
+    }
+
+    #[test]
+    fn parse_fleet_names_the_unknown_class() {
+        let err = ClusterSpec::parse_fleet("v100:8").unwrap_err();
+        assert!(err.contains("unknown GPU class 'v100'"), "{err}");
+        assert!(err.contains("a100"), "{err}"); // names the known set
+    }
+
+    #[test]
+    fn parse_fleet_rejects_zero_and_negative_counts() {
+        let err = ClusterSpec::parse_fleet("a100:0").unwrap_err();
+        assert!(err.contains("must be positive"), "{err}");
+        let err = ClusterSpec::parse_fleet("a100:-8").unwrap_err();
+        assert!(err.contains("must be positive"), "{err}");
+        // mixed with a valid entry the bad one still refuses
+        assert!(ClusterSpec::parse_fleet("h100:16,a100:-8").is_err());
+    }
+
+    #[test]
+    fn parse_fleet_rejects_duplicate_classes_instead_of_folding() {
+        // an earlier version summed "a100:8,a100:16" to 3 nodes silently
+        let err = ClusterSpec::parse_fleet("a100:8,a100:16").unwrap_err();
+        assert!(err.contains("duplicate GPU class 'a100'"), "{err}");
+        let err = ClusterSpec::parse_fleet("h100:8,a100:8,h100:8")
+            .unwrap_err();
+        assert!(err.contains("duplicate GPU class 'h100'"), "{err}");
     }
 
     #[test]

@@ -118,20 +118,22 @@ pub fn format_row(workload: &str, cells: &[(Cell, Cell)]) -> String {
 pub fn format_online_row(metrics: &[crate::online::OnlineMetrics]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<24} {:>10} {:>10} {:>10} {:>11} {:>8} {:>7} {:>7} {:>8}\n",
+        "{:<24} {:>10} {:>10} {:>10} {:>11} {:>8} {:>7} {:>7} {:>9} \
+         {:>8}\n",
         "system", "avgJCT(h)", "p95JCT(h)", "wJCT(h)", "makespan(h)",
-        "util(%)", "kills", "miss", "solves"));
+        "util(%)", "kills", "miss", "wTard(h)", "solves"));
     for m in metrics {
         let solves = match (m.solves, m.warm_solves) {
             (Some(s), Some(w)) => format!("{s}({w}w)"),
             _ => "-".to_string(),
         };
         out.push_str(&format!(
-            "{:<24} {:>10.2} {:>10.2} {:>10.2} {:>11.2} {:>8.0} {:>7} {:>7} {:>8}\n",
+            "{:<24} {:>10.2} {:>10.2} {:>10.2} {:>11.2} {:>8.0} {:>7} \
+             {:>7} {:>9.3} {:>8}\n",
             m.system, m.avg_jct_s / 3600.0, m.p95_jct_s / 3600.0,
             m.weighted_jct_s / 3600.0, m.makespan_s / 3600.0,
             m.gpu_utilization * 100.0, m.early_stopped, m.deadline_misses,
-            solves));
+            m.weighted_tardiness_s / 3600.0, solves));
     }
     out
 }

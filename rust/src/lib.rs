@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod models;
+pub mod objective;
 pub mod online;
 pub mod parallelism;
 pub mod perf;

@@ -12,12 +12,13 @@ use anyhow::{anyhow, bail, Result};
 use saturn::cluster::ClusterSpec;
 use saturn::coordinator::{real_grid, Coordinator};
 use saturn::exp;
-use saturn::online::{profile_trace, run_trace_perf, warm_cold_probe,
+use saturn::objective::{JobTerms, Objective};
+use saturn::online::{profile_trace, run_trace_obj, warm_cold_probe,
                      ONLINE_SYSTEMS};
 use saturn::parallelism::default_library;
 use saturn::perf::{DriftConfig, PerfModel};
 use saturn::saturn::introspect::DEFAULT_DRIFT_THRESHOLD;
-use saturn::saturn::solver::{check_fleet_feasibility, solve_joint,
+use saturn::saturn::solver::{check_fleet_feasibility, solve_joint_obj,
                              SolverMode};
 use saturn::sim::engine::RungConfig;
 use saturn::trials::profile_analytic;
@@ -44,14 +45,19 @@ fn main() -> Result<()> {
             println!("  plan      [--workload ...] [--nodes N]");
             println!("            [--fleet a100:32,h100:16]");
             println!("            [--mode joint|greedy|rolling]");
+            println!("            [--objective makespan|tardiness|wjct]");
+            println!("            [--alpha F] [--deadline-weight F]");
             println!("  online    [--seed N] [--multijobs N] [--rate-per-hour X]");
             println!("            [--burst N] [--tenants N] [--rungs 0.25,0.5]");
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
             println!("            [--nodes N] [--fleet a100:32,h100:16]");
             println!("            [--mode joint|greedy|rolling]");
+            println!("            [--objective makespan|tardiness|wjct]");
+            println!("            [--alpha F] [--deadline-weight F]");
             println!("            [--drift F] [--drift-seed N]");
             println!("            [--drift-correction on|off|oracle]");
             println!("            [--drift-threshold F]");
+            println!("            [--drift-tenant-spread F]");
             println!("            [--json PATH]");
             println!("  workload  [--workload ...]");
             println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
@@ -85,6 +91,15 @@ fn fleet_from_args(args: &Args) -> Result<ClusterSpec> {
     }
 }
 
+/// Resolve `--objective makespan|tardiness|wjct` with its `--alpha` /
+/// `--deadline-weight` knobs (README §Objectives).
+fn objective_from_args(args: &Args) -> Result<Objective> {
+    let name = args.str_or("objective", "makespan");
+    let alpha = args.f64_or("alpha", 0.5);
+    let deadline_weight = args.f64_or("deadline-weight", 1.0);
+    Objective::parse(&name, alpha, deadline_weight).map_err(|e| anyhow!(e))
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
     let workload = args.str_or("workload", "wikitext");
     let mode = match args.str_or("mode", "joint").as_str() {
@@ -92,6 +107,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         "rolling" => SolverMode::rolling_default(),
         _ => SolverMode::Joint,
     };
+    let objective = objective_from_args(args)?;
     let jobs = exp::workload_by_name(&workload);
     let cluster = fleet_from_args(args)?;
     let lib = default_library();
@@ -101,10 +117,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
     // surface memory-infeasible jobs as a CLI error, not a solver panic
     check_fleet_feasibility(&remaining, &profiles, &cluster)
         .map_err(|e| anyhow!(e))?;
-    let (plan, stats) = solve_joint(&remaining, &profiles, &cluster, mode);
-    println!("joint plan for '{workload}' on fleet [{}] \
-              ({} GPUs, {} node(s)):", cluster.fleet_desc(),
-             cluster.total_gpus(), cluster.total_nodes());
+    // batch jobs carry no deadlines/arrivals: neutral objective terms
+    let terms: Vec<JobTerms> = remaining
+        .iter()
+        .map(|&(id, _)| JobTerms::neutral(id))
+        .collect();
+    let (plan, stats) = solve_joint_obj(&remaining, &profiles, &cluster,
+                                        mode, 1.0, None, objective, &terms);
+    println!("joint plan for '{workload}' ({} objective) on fleet [{}] \
+              ({} GPUs, {} node(s)):", objective.name(),
+             cluster.fleet_desc(), cluster.total_gpus(),
+             cluster.total_nodes());
     println!("{:<24} {:>8} {:>6} {:>6} {:>12}", "job", "tech", "class",
              "gpus", "runtime");
     for p in &plan.choices {
@@ -138,6 +161,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         "rolling" => SolverMode::rolling_default(),
         _ => SolverMode::Joint,
     };
+    let objective = objective_from_args(args)?;
     let process = if burst > 0 {
         ArrivalProcess::Burst { rate_per_hour: rate, burst_size: burst }
     } else {
@@ -179,11 +203,15 @@ fn cmd_online(args: &Args) -> Result<()> {
     }
     let threshold = args.f64_or("drift-threshold", DEFAULT_DRIFT_THRESHOLD);
     let drift_threshold = if threshold > 0.0 { Some(threshold) } else { None };
-    let drift_cfg = if drift_mag > 0.0 {
+    // per-tenant drift profiles: tenant class k ramps at
+    // magnitude * (1 + spread * k); 0 = every tenant drifts alike
+    let tenant_spread = args.f64_or("drift-tenant-spread", 0.0);
+    let mut drift_cfg = if drift_mag > 0.0 {
         DriftConfig::uniform(drift_seed, drift_mag)
     } else {
         DriftConfig::none()
     };
+    drift_cfg.tenant_spread = tenant_spread;
 
     let cluster = fleet_from_args(args)?;
     println!("=== online: {} multi-jobs / {} jobs over {:.1} h on fleet \
@@ -194,16 +222,35 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("early stopping: rungs {:?}, kill fraction {:.0}%",
                  rc.fractions, rc.kill_fraction * 100.0);
     }
+    if !objective.is_makespan() {
+        println!("objective: {} ({})", objective.name(), match objective {
+            Objective::WeightedTardiness { deadline_weight } => {
+                format!("deadline weight {deadline_weight:.2}")
+            }
+            Objective::WeightedJct { alpha } => {
+                format!("alpha {alpha:.2}")
+            }
+            Objective::Makespan => unreachable!(),
+        });
+    }
     if drift_mag > 0.0 {
         println!("estimate drift: {:.0}% (seed {drift_seed}), correction \
-                  {correction}, re-solve threshold {:.2}",
+                  {correction}, re-solve threshold {:.2}, tenant spread \
+                  {tenant_spread:.2}",
                  drift_mag * 100.0, threshold.max(0.0));
     }
     let profiles = profile_trace(&trace, &cluster);
+    // tenant class per job (priority k+1 <-> class k) for the
+    // per-tenant drift profiles
+    let tenant_class: Vec<f64> =
+        trace.jobs.iter().map(|o| o.priority - 1.0).collect();
     let make_perf = || match correction.as_str() {
-        "off" => PerfModel::with_drift(&profiles, drift_cfg.clone(), false),
-        "oracle" => PerfModel::oracle(&profiles, drift_cfg.clone()),
-        _ => PerfModel::with_drift(&profiles, drift_cfg.clone(), true),
+        "off" => PerfModel::with_drift_tenants(
+            &profiles, drift_cfg.clone(), false, tenant_class.clone()),
+        "oracle" => PerfModel::oracle_tenants(
+            &profiles, drift_cfg.clone(), tenant_class.clone()),
+        _ => PerfModel::with_drift_tenants(
+            &profiles, drift_cfg.clone(), true, tenant_class.clone()),
     };
     // surface memory-infeasible jobs before the event loop would deadlock
     let all_jobs: Vec<(usize, u64)> = trace
@@ -218,9 +265,9 @@ fn cmd_online(args: &Args) -> Result<()> {
     let mut saturn_result = None;
     for sys in ONLINE_SYSTEMS {
         let mut perf = make_perf();
-        let (r, m) = run_trace_perf(&trace, rungs.as_ref(), &mut perf,
-                                    &cluster, sys, mode,
-                                    Some(drift_threshold));
+        let (r, m) = run_trace_obj(&trace, rungs.as_ref(), &mut perf,
+                                   &cluster, sys, mode,
+                                   Some(drift_threshold), objective);
         if sys == "online-saturn" {
             saturn_result = Some(r);
         }
@@ -245,9 +292,9 @@ fn cmd_online(args: &Args) -> Result<()> {
     // (first replay reused from the comparison loop above)
     let a = saturn_result.expect("online-saturn ran");
     let mut perf = make_perf();
-    let (b, _) = run_trace_perf(&trace, rungs.as_ref(), &mut perf, &cluster,
-                                "online-saturn", mode,
-                                Some(drift_threshold));
+    let (b, _) = run_trace_obj(&trace, rungs.as_ref(), &mut perf, &cluster,
+                               "online-saturn", mode,
+                               Some(drift_threshold), objective);
     if a.finish_times != b.finish_times || a.jct_s != b.jct_s
         || a.early_stopped != b.early_stopped || a.launches != b.launches {
         bail!("online replay diverged for seed {seed}");
@@ -266,6 +313,7 @@ fn cmd_online(args: &Args) -> Result<()> {
             ("seed", Json::num(seed as f64)),
             ("multijobs", Json::num(multijobs as f64)),
             ("jobs", Json::num(trace.jobs.len() as f64)),
+            ("objective", Json::str(objective.name())),
             ("drift", Json::num(drift_mag)),
             ("drift_correction", Json::str(&correction)),
             ("systems",

@@ -1,0 +1,261 @@
+//! The scheduling-objective axis (DESIGN.md §4.5): what the joint
+//! solver — and every policy competing against it — actually optimizes.
+//!
+//! The seed system hard-coded pure makespan. The online layer, however,
+//! carries tenant priorities and deadlines (`workload::arrivals`) that
+//! until this refactor only influenced FIFO tie-breaks and post-hoc
+//! reporting. [`Objective`] turns the goal into a first-class value
+//! threaded through the MILP (epigraph tardiness variables, blended
+//! completion-time coefficients), the launch ordering of every policy
+//! (earliest-deadline-first / weighted-slack instead of only
+//! priority-then-longest), and the metrics (`total_tardiness_s`,
+//! `weighted_tardiness_s`).
+//!
+//! Behavior preservation: [`Objective::Makespan`] — and any terms under
+//! which the other objectives degenerate to it (no deadlines, `alpha`
+//! = 1) — produces the HISTORICAL formulation and orderings bit for
+//! bit; `bench_objective` and `tests/prop_objective.rs` hold this to
+//! 1e-6/bit-identity.
+
+/// What the joint solve minimizes (see DESIGN.md §4.5 for the rows each
+/// variant adds to the plan-selection MILP).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Objective {
+    /// The paper's objective: minimize the makespan `M` alone.
+    #[default]
+    Makespan,
+    /// `min M + deadline_weight * sum_j (w_j / W) T_j` with per-job
+    /// epigraph tardiness variables `T_j >= C_j - due_j`, `T_j >= 0`
+    /// (only jobs carrying a deadline get one, so the rows stay sparse).
+    /// `W = sum_j w_j` keeps the tardiness term in the same seconds
+    /// scale as `M` regardless of job count.
+    WeightedTardiness { deadline_weight: f64 },
+    /// `min alpha * M + (1 - alpha) * sum_j (w_j / W) C_j`: the
+    /// makespan / priority-weighted-JCT trade-off knob. The completion
+    /// proxy (each job's remaining runtime; sunk waiting time is a
+    /// constant) is linear in the plan binaries, so no extra variables
+    /// are needed — the blend lands directly on the objective
+    /// coefficients. `alpha = 1` IS pure makespan (identical LP);
+    /// `alpha = 0` is pure weighted JCT.
+    WeightedJct { alpha: f64 },
+}
+
+impl Objective {
+    /// Stable tag used by the CLI, benches and JSON records.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Makespan => "makespan",
+            Objective::WeightedTardiness { .. } => "tardiness",
+            Objective::WeightedJct { .. } => "wjct",
+        }
+    }
+
+    /// Parse the CLI knob triple `--objective NAME [--alpha A]
+    /// [--deadline-weight W]`.
+    pub fn parse(name: &str, alpha: f64, deadline_weight: f64)
+        -> Result<Objective, String> {
+        match name {
+            "makespan" => Ok(Objective::Makespan),
+            "tardiness" => {
+                if deadline_weight <= 0.0 || !deadline_weight.is_finite() {
+                    return Err(format!(
+                        "--deadline-weight must be positive and finite, \
+                         got {deadline_weight}"));
+                }
+                Ok(Objective::WeightedTardiness { deadline_weight })
+            }
+            "wjct" => {
+                if !(0.0..=1.0).contains(&alpha) {
+                    return Err(format!(
+                        "--alpha must lie in [0, 1], got {alpha}"));
+                }
+                Ok(Objective::WeightedJct { alpha })
+            }
+            other => Err(format!(
+                "unknown objective '{other}' (makespan|tardiness|wjct)")),
+        }
+    }
+
+    pub fn is_makespan(&self) -> bool {
+        matches!(self, Objective::Makespan)
+    }
+
+    /// True when the formulation collapses to pure makespan for the
+    /// given job terms: no deadlines can ever activate a tardiness row,
+    /// and the `alpha = 1` endpoint of the JCT blend zeroes every
+    /// completion coefficient. Callers use this to stay on the
+    /// historical (bit-identical) solve path.
+    pub fn degenerates_to_makespan(&self, terms: &[JobTerms]) -> bool {
+        match *self {
+            Objective::Makespan => true,
+            Objective::WeightedTardiness { .. } => {
+                terms.iter().all(|t| t.due_in_s.is_none())
+            }
+            Objective::WeightedJct { alpha } => alpha >= 1.0,
+        }
+    }
+
+    /// Primary launch-ordering key for a pending job under this
+    /// objective — SMALLER launches first — or `None` under makespan,
+    /// where callers keep their historical order (longest-first /
+    /// priority-then-longest).
+    ///
+    /// Tardiness uses WEIGHTED slack: jobs still inside their deadline
+    /// rank by `slack / w` (earliest-deadline-first generalized by the
+    /// remaining work, with heavy tenants pulled forward), already-late
+    /// jobs rank ahead of everything by `-w / runtime` — once tardiness
+    /// is accruing, minimizing the weighted sum degenerates to
+    /// weighted-shortest-processing-time among the overdue. Deadline-
+    /// less jobs go last. The JCT blend ranks purely by
+    /// weight-per-second of remaining runtime (WSPT).
+    pub fn urgency_key(&self, priority: f64, runtime_s: f64, arrival_s: f64,
+                       deadline_s: Option<f64>, now: f64) -> Option<f64> {
+        match *self {
+            Objective::Makespan => None,
+            // the alpha = 1 endpoint IS makespan: keep its ordering too
+            Objective::WeightedJct { alpha } if alpha >= 1.0 => None,
+            Objective::WeightedTardiness { .. } => Some(match deadline_s {
+                Some(d) => {
+                    let slack = arrival_s + d - now - runtime_s;
+                    if slack >= 0.0 {
+                        // weighted slack (>= 0: after every overdue job)
+                        slack / priority.max(1e-9)
+                    } else {
+                        // overdue (< 0: ahead of every on-time job),
+                        // WSPT-ordered among themselves
+                        -(priority.max(1e-9) / runtime_s.max(1e-9))
+                    }
+                }
+                None => f64::INFINITY,
+            }),
+            Objective::WeightedJct { .. } => {
+                Some(-(priority.max(1e-9) / runtime_s.max(1e-9)))
+            }
+        }
+    }
+}
+
+/// Per-job objective inputs handed to the solver alongside the
+/// `(job_id, remaining_steps)` pairs. Entries are matched by job id;
+/// jobs without an entry (and the batch path, which passes an empty
+/// slice) get [`JobTerms::neutral`].
+///
+/// Time already elapsed since arrival is deliberately NOT a term: it
+/// is a per-job constant at each solve instant, so it drops out of
+/// every argmin the solver evaluates (deadlines already arrive as
+/// due-in-seconds relative to the solve instant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobTerms {
+    pub job_id: usize,
+    /// Tenant priority weight (>= 1 in traces; 1 = neutral).
+    pub weight: f64,
+    /// Seconds from "now" until the deadline (negative = already
+    /// overdue); `None` = no deadline.
+    pub due_in_s: Option<f64>,
+}
+
+impl JobTerms {
+    /// Neutral terms: weight 1, no deadline.
+    pub fn neutral(job_id: usize) -> JobTerms {
+        JobTerms { job_id, weight: 1.0, due_in_s: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_cli_triples() {
+        assert_eq!(Objective::parse("makespan", 0.5, 1.0).unwrap(),
+                   Objective::Makespan);
+        assert_eq!(Objective::parse("tardiness", 0.5, 2.0).unwrap(),
+                   Objective::WeightedTardiness { deadline_weight: 2.0 });
+        assert_eq!(Objective::parse("wjct", 0.25, 1.0).unwrap(),
+                   Objective::WeightedJct { alpha: 0.25 });
+    }
+
+    #[test]
+    fn parse_rejects_bad_knobs() {
+        assert!(Objective::parse("latency", 0.5, 1.0).is_err());
+        assert!(Objective::parse("wjct", 1.5, 1.0).is_err());
+        assert!(Objective::parse("wjct", -0.1, 1.0).is_err());
+        assert!(Objective::parse("tardiness", 0.5, 0.0).is_err());
+        assert!(Objective::parse("tardiness", 0.5, -1.0).is_err());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for (name, obj) in [
+            ("makespan", Objective::Makespan),
+            ("tardiness",
+             Objective::WeightedTardiness { deadline_weight: 1.0 }),
+            ("wjct", Objective::WeightedJct { alpha: 0.5 }),
+        ] {
+            assert_eq!(obj.name(), name);
+            assert_eq!(Objective::parse(name, 0.5, 1.0).unwrap().name(),
+                       name);
+        }
+    }
+
+    #[test]
+    fn degeneracy_covers_the_makespan_equivalent_corners() {
+        let no_deadline = [JobTerms::neutral(0), JobTerms::neutral(1)];
+        let with_deadline = [JobTerms {
+            due_in_s: Some(10.0),
+            ..JobTerms::neutral(0)
+        }];
+        let tard = Objective::WeightedTardiness { deadline_weight: 1.0 };
+        assert!(Objective::Makespan.degenerates_to_makespan(&with_deadline));
+        assert!(tard.degenerates_to_makespan(&no_deadline));
+        assert!(tard.degenerates_to_makespan(&[]));
+        assert!(!tard.degenerates_to_makespan(&with_deadline));
+        assert!(Objective::WeightedJct { alpha: 1.0 }
+            .degenerates_to_makespan(&with_deadline));
+        assert!(!Objective::WeightedJct { alpha: 0.5 }
+            .degenerates_to_makespan(&[]));
+    }
+
+    #[test]
+    fn makespan_has_no_urgency_key() {
+        assert!(Objective::Makespan
+            .urgency_key(2.0, 100.0, 0.0, Some(50.0), 10.0)
+            .is_none());
+        // the degenerate wjct endpoint keeps the makespan ordering too
+        assert!(Objective::WeightedJct { alpha: 1.0 }
+            .urgency_key(2.0, 100.0, 0.0, Some(50.0), 10.0)
+            .is_none());
+    }
+
+    #[test]
+    fn tardiness_urgency_is_weighted_least_slack_first() {
+        let o = Objective::WeightedTardiness { deadline_weight: 1.0 };
+        // tighter slack => smaller key => launches first
+        let tight = o.urgency_key(1.0, 3600.0, 0.0, Some(4000.0), 0.0);
+        let loose = o.urgency_key(1.0, 600.0, 0.0, Some(4000.0), 0.0);
+        let none = o.urgency_key(9.0, 600.0, 0.0, None, 0.0);
+        assert!(tight.unwrap() < loose.unwrap());
+        assert_eq!(none, Some(f64::INFINITY)); // deadline-less jobs last
+        // at equal slack, the heavier tenant launches first
+        let heavy = o.urgency_key(4.0, 3600.0, 0.0, Some(4000.0), 0.0);
+        assert!(heavy.unwrap() < tight.unwrap());
+        // overdue jobs rank ahead of everything with positive slack...
+        let late = o.urgency_key(1.0, 600.0, 0.0, Some(100.0), 5000.0);
+        assert!(late.unwrap() < tight.unwrap());
+        assert!(late.unwrap() < heavy.unwrap());
+        // ...and WSPT among themselves: heavy-short overdue jobs first
+        let late_heavy_short =
+            o.urgency_key(4.0, 300.0, 0.0, Some(100.0), 5000.0);
+        assert!(late_heavy_short.unwrap() < late.unwrap());
+    }
+
+    #[test]
+    fn wjct_urgency_is_weighted_shortest_first() {
+        let o = Objective::WeightedJct { alpha: 0.5 };
+        let heavy_short = o.urgency_key(4.0, 100.0, 0.0, None, 0.0);
+        let light_short = o.urgency_key(1.0, 100.0, 0.0, None, 0.0);
+        let heavy_long = o.urgency_key(4.0, 10_000.0, 0.0, None, 0.0);
+        assert!(heavy_short.unwrap() < light_short.unwrap());
+        assert!(light_short.unwrap() < heavy_long.unwrap());
+    }
+}

@@ -14,6 +14,7 @@ pub use scheduler::OnlineSaturn;
 
 use crate::baselines::{OnlineCurrentPractice, OnlineOptimus};
 use crate::cluster::ClusterSpec;
+use crate::objective::Objective;
 use crate::parallelism::default_library;
 use crate::perf::PerfModel;
 use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
@@ -39,6 +40,11 @@ pub struct OnlineMetrics {
     pub completed: usize,
     pub early_stopped: usize,
     pub deadline_misses: usize,
+    /// Sum over completed deadlined jobs of `(finish - deadline)+`.
+    pub total_tardiness_s: f64,
+    /// Priority-weighted mean tardiness (same denominator as
+    /// `weighted_jct_s`; see `OnlineSimResult::weighted_tardiness_s`).
+    pub weighted_tardiness_s: f64,
     pub preemptions: usize,
     pub migrations: usize,
     pub decision_s: f64,
@@ -76,6 +82,9 @@ impl OnlineMetrics {
             ("completed", Json::num(self.completed as f64)),
             ("early_stopped", Json::num(self.early_stopped as f64)),
             ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("total_tardiness_s", Json::num(self.total_tardiness_s)),
+            ("weighted_tardiness_s",
+             Json::num(self.weighted_tardiness_s)),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("migrations", Json::num(self.migrations as f64)),
             ("decision_s", Json::num(self.decision_s)),
@@ -136,7 +145,22 @@ pub fn run_trace_perf(trace: &Trace, rungs: Option<&RungConfig>,
                       system: &str, mode: SolverMode,
                       drift_threshold: Option<Option<f64>>)
     -> (OnlineSimResult, OnlineMetrics) {
-    let cfg = SimConfig::default();
+    run_trace_obj(trace, rungs, perf, cluster, system, mode,
+                  drift_threshold, Objective::Makespan)
+}
+
+/// As [`run_trace_perf`], with an explicit scheduling [`Objective`]
+/// handed to every policy through the engine's `PlanContext` — the
+/// `--objective` CLI path and `bench_objective` route here.
+/// `Objective::Makespan` reproduces [`run_trace_perf`] bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_obj(trace: &Trace, rungs: Option<&RungConfig>,
+                     perf: &mut PerfModel, cluster: &ClusterSpec,
+                     system: &str, mode: SolverMode,
+                     drift_threshold: Option<Option<f64>>,
+                     objective: Objective)
+    -> (OnlineSimResult, OnlineMetrics) {
+    let cfg = SimConfig { objective, ..SimConfig::default() };
     // Saturn-only diagnostics:
     // (solves, warm solves, basis hit rate, pivots, drift re-solves)
     let (result, sys, solver_probe) = match system {
@@ -188,6 +212,8 @@ pub fn run_trace_perf(trace: &Trace, rungs: Option<&RungConfig>,
         completed: result.completed.len(),
         early_stopped: result.early_stopped.len(),
         deadline_misses: result.deadline_misses,
+        total_tardiness_s: result.total_tardiness_s,
+        weighted_tardiness_s: result.weighted_tardiness_s,
         preemptions: result.preemptions,
         migrations: result.migrations,
         decision_s: result.policy_decision_s,
@@ -328,6 +354,37 @@ mod tests {
         assert!(parsed.get("estimate_mae").unwrap().as_f64().unwrap()
                     > 0.0);
         assert!(parsed.get("drift_resolves").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn objective_runs_complete_and_report_tardiness_metrics() {
+        let t = generate_trace(&TraceConfig {
+            seed: 9,
+            multijobs: 3,
+            deadline_slack_s: Some(1800.0),
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&t, &cluster);
+        for objective in [
+            Objective::Makespan,
+            Objective::WeightedTardiness { deadline_weight: 1.0 },
+            Objective::WeightedJct { alpha: 0.5 },
+        ] {
+            let mut perf = PerfModel::exact(&profiles);
+            let (r, m) = run_trace_obj(&t, None, &mut perf, &cluster,
+                                       "online-saturn", SolverMode::Joint,
+                                       None, objective);
+            assert_eq!(r.finish_times.len(), t.jobs.len(), "{}",
+                       objective.name());
+            assert!(m.total_tardiness_s >= 0.0);
+            assert!(m.weighted_tardiness_s >= 0.0);
+            let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+            assert!(parsed.get("total_tardiness_s").unwrap().as_f64()
+                        .is_some());
+            assert!(parsed.get("weighted_tardiness_s").unwrap().as_f64()
+                        .is_some());
+        }
     }
 
     #[test]

@@ -14,9 +14,9 @@ use std::time::Instant;
 
 use crate::saturn::introspect::{apply_migration_hysteresis,
                                 drift_resolve_due, launch_from_plan,
-                                DEFAULT_DRIFT_THRESHOLD};
+                                objective_terms, DEFAULT_DRIFT_THRESHOLD};
 use crate::saturn::plan::SaturnPlan;
-use crate::saturn::solver::{solve_joint_warm, SolverMode, SolverStats};
+use crate::saturn::solver::{solve_joint_obj, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
 
 pub struct OnlineSaturn {
@@ -167,9 +167,11 @@ impl Policy for OnlineSaturn {
         } else {
             self.mode
         };
-        let (mut plan, stats) = solve_joint_warm(&remaining, ctx.profiles,
-                                                 ctx.cluster, mode, 1.0,
-                                                 warm);
+        let terms = objective_terms(ctx, &remaining);
+        let (mut plan, stats) = solve_joint_obj(&remaining, ctx.profiles,
+                                                ctx.cluster, mode, 1.0,
+                                                warm, ctx.objective,
+                                                &terms);
         apply_migration_hysteresis(&mut plan, ctx, &remaining,
                                    self.migration_threshold);
         if stats.warm_used {

@@ -50,6 +50,12 @@ pub struct DriftConfig {
     pub interference_s: f64,
     /// Sigma of the static lognormal per-(job, class) mis-calibration.
     pub cell_noise: f64,
+    /// Per-tenant drift profiles (ROADMAP drift follow-up): a job of
+    /// tenant class `k` (see [`TruthModel::with_tenants`]) ramps at
+    /// `ramp_magnitude * (1 + tenant_spread * k)`, capped at 0.9 —
+    /// noisy tenants drift harder. 0 (the default) keeps every tenant
+    /// at the shared magnitude, bit for bit.
+    pub tenant_spread: f64,
 }
 
 impl DriftConfig {
@@ -64,6 +70,7 @@ impl DriftConfig {
             interference_mult: 1.0,
             interference_s: 0.0,
             cell_noise: 0.0,
+            tenant_spread: 0.0,
         }
     }
 
@@ -79,6 +86,7 @@ impl DriftConfig {
             interference_mult: 1.0 + 0.5 * magnitude,
             interference_s: 1800.0,
             cell_noise: 0.5 * magnitude,
+            tenant_spread: 0.0,
         }
     }
 
@@ -99,11 +107,23 @@ pub struct TruthModel {
     cfg: DriftConfig,
     /// Per-class interference windows as (start_s, end_s), ascending.
     windows: Vec<Vec<(f64, f64)>>,
+    /// Tenant class per job id (`DriftConfig::tenant_spread`); empty =
+    /// every job class 0 (the shared ramp magnitude).
+    tenant_class: Vec<f64>,
     active: bool,
 }
 
 impl TruthModel {
     pub fn new(profiles: ProfileTable, cfg: DriftConfig) -> Self {
+        TruthModel::with_tenants(profiles, cfg, Vec::new())
+    }
+
+    /// As [`TruthModel::new`] with per-job tenant classes (indexed by
+    /// job id; 0.0, 1.0, ... — traces map priority `k + 1` to class
+    /// `k`) driving the `tenant_spread` ramp scaling. An empty vector,
+    /// or `tenant_spread == 0`, is bit-identical to [`TruthModel::new`].
+    pub fn with_tenants(profiles: ProfileTable, cfg: DriftConfig,
+                        tenant_class: Vec<f64>) -> Self {
         let active = cfg.is_active();
         let n_classes = profiles.n_classes();
         let windows = (0..n_classes)
@@ -125,7 +145,7 @@ impl TruthModel {
                 out
             })
             .collect();
-        TruthModel { profiles, cfg, windows, active }
+        TruthModel { profiles, cfg, windows, tenant_class, active }
     }
 
     /// The underlying profiled table (the estimate layer's prior).
@@ -137,6 +157,20 @@ impl TruthModel {
         &self.cfg
     }
 
+    /// Effective ramp magnitude for `job`: the configured magnitude,
+    /// scaled by the job's tenant class (`DriftConfig::tenant_spread`)
+    /// and capped at 0.9. The zero-spread path returns the configured
+    /// value UNTOUCHED — no multiply, no cap — so that arm stays
+    /// bit-identical to the shared-magnitude model.
+    fn ramp_magnitude(&self, job: usize) -> f64 {
+        if self.cfg.tenant_spread == 0.0 {
+            return self.cfg.ramp_magnitude;
+        }
+        let class = self.tenant_class.get(job).copied().unwrap_or(0.0);
+        let scale = (1.0 + self.cfg.tenant_spread * class).max(0.0);
+        (self.cfg.ramp_magnitude * scale).min(0.9)
+    }
+
     /// Per-job slow multiplicative ramp at virtual time `now`.
     fn ramp(&self, job: usize, now: f64) -> f64 {
         if self.cfg.ramp_magnitude <= 0.0 {
@@ -146,7 +180,7 @@ impl TruthModel {
         let dir = if rng.bool(0.5) { 1.0 } else { -1.0 };
         let tau = self.cfg.ramp_tau_s * (0.5 + 1.5 * rng.f64());
         1.0 + dir
-            * self.cfg.ramp_magnitude
+            * self.ramp_magnitude(job)
             * (1.0 - (-now.max(0.0) / tau.max(1.0)).exp())
     }
 
@@ -252,6 +286,30 @@ mod tests {
     }
 
     #[test]
+    fn tenant_spread_scales_ramp_asymptotes_per_class() {
+        let p = table();
+        // ramps only: the asymptotic |multiplier - 1| IS the magnitude
+        let mut cfg = DriftConfig::none();
+        cfg.ramp_magnitude = 0.2;
+        cfg.tenant_spread = 1.0;
+        // job 0 -> tenant class 0 (magnitude 0.2),
+        // job 1 -> tenant class 1 (magnitude 0.4)
+        let t = TruthModel::with_tenants(p.clone(), cfg.clone(),
+                                         vec![0.0, 1.0]);
+        let mag = |job| (t.multiplier(job, 0, 1e12) - 1.0).abs();
+        assert!((mag(0) - 0.2).abs() < 1e-9, "class 0: {}", mag(0));
+        assert!((mag(1) - 0.4).abs() < 1e-9, "class 1: {}", mag(1));
+        // zero spread: tenants are ignored, bit for bit
+        cfg.tenant_spread = 0.0;
+        let plain = TruthModel::new(p.clone(), cfg.clone());
+        let spread0 = TruthModel::with_tenants(p, cfg, vec![0.0, 3.0]);
+        for job in 0..2 {
+            assert_eq!(plain.multiplier(job, 0, 5e3).to_bits(),
+                       spread0.multiplier(job, 0, 5e3).to_bits());
+        }
+    }
+
+    #[test]
     fn queries_are_pure_and_order_independent() {
         let p = table();
         let t = TruthModel::new(p, DriftConfig::uniform(42, 0.2));
@@ -272,6 +330,7 @@ mod tests {
             interference_mult: 1.5,
             interference_s: 600.0,
             ramp_tau_s: 7200.0,
+            tenant_spread: 0.0,
         };
         let t = TruthModel::new(p, cfg);
         let (start, _) = t.windows[0][0];

@@ -60,13 +60,24 @@ impl PerfModel {
     /// (`correction = true`) or the frozen profiled table.
     pub fn with_drift(profiles: &ProfileTable, cfg: DriftConfig,
                       correction: bool) -> PerfModel {
+        PerfModel::with_drift_tenants(profiles, cfg, correction, Vec::new())
+    }
+
+    /// As [`PerfModel::with_drift`] with per-job tenant classes for the
+    /// `DriftConfig::tenant_spread` ramp scaling (see
+    /// [`TruthModel::with_tenants`]). An empty vector — or zero spread
+    /// — is bit-identical to [`PerfModel::with_drift`].
+    pub fn with_drift_tenants(profiles: &ProfileTable, cfg: DriftConfig,
+                              correction: bool, tenant_class: Vec<f64>)
+        -> PerfModel {
         let source = if correction {
             EstimateSource::Corrected
         } else {
             EstimateSource::Profiled
         };
         PerfModel {
-            truth: TruthModel::new(profiles.clone(), cfg),
+            truth: TruthModel::with_tenants(profiles.clone(), cfg,
+                                            tenant_class),
             estimate: EstimateModel::new(profiles.clone(), correction),
             source,
             oracle_table: None,
@@ -77,7 +88,17 @@ impl PerfModel {
     /// Drifting truth with an ORACLE planner: every replan reads the
     /// truth frozen at the current virtual time.
     pub fn oracle(profiles: &ProfileTable, cfg: DriftConfig) -> PerfModel {
-        let mut m = PerfModel::with_drift(profiles, cfg, false);
+        PerfModel::oracle_tenants(profiles, cfg, Vec::new())
+    }
+
+    /// As [`PerfModel::oracle`] with per-job tenant classes (the
+    /// `--drift-tenant-spread` oracle arm drifts the same truth the
+    /// live arms face).
+    pub fn oracle_tenants(profiles: &ProfileTable, cfg: DriftConfig,
+                          tenant_class: Vec<f64>) -> PerfModel {
+        let mut m =
+            PerfModel::with_drift_tenants(profiles, cfg, false,
+                                          tenant_class);
         m.source = EstimateSource::Oracle;
         m.oracle_table = Some(m.truth.table_at(0.0));
         m.oracle_now = 0.0;

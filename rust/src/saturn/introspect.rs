@@ -5,14 +5,22 @@
 
 use std::time::Instant;
 
+use crate::objective::JobTerms;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
-use crate::saturn::solver::{solve_joint_with, SolverMode, SolverStats};
+use crate::saturn::solver::{solve_joint_obj, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
 
 /// Realize launches from a cached plan: pending jobs only, first-fit with
-/// backfill against a scratch copy of the free state. Order is
-/// longest-remaining first; `by_priority` (the online scheduler) puts
-/// tenant priority ahead of runtime.
+/// backfill against a scratch copy of the free state.
+///
+/// Ordering is objective-aware (`PlanContext::objective`): under
+/// makespan the historical order applies — longest-remaining first,
+/// with `by_priority` (the online scheduler) putting tenant priority
+/// ahead of runtime — while `tardiness` launches weighted-least-slack
+/// first (overdue jobs ahead of everything, WSPT among themselves; see
+/// `Objective::urgency_key`) and `wjct` launches by weight-per-second
+/// (weighted-shortest-processing-time), both falling back to the
+/// historical order on ties.
 pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
                                by_priority: bool) -> Vec<Launch> {
     let mut ordered: Vec<&JobPlan> = plan
@@ -25,7 +33,7 @@ pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
                 .unwrap_or(false)
         })
         .collect();
-    ordered.sort_by(|a, b| {
+    let historical = |a: &JobPlan, b: &JobPlan| {
         let runtime = b.runtime_s.partial_cmp(&a.runtime_s).unwrap();
         if by_priority {
             let pa = ctx.jobs[a.job_id].priority;
@@ -34,6 +42,18 @@ pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
         } else {
             runtime
         }
+    };
+    let urgency = |jp: &JobPlan| {
+        let s = &ctx.jobs[jp.job_id];
+        ctx.objective.urgency_key(s.priority, jp.runtime_s, s.arrival_s,
+                                  s.deadline_s, ctx.now)
+    };
+    ordered.sort_by(|a, b| match (urgency(a), urgency(b)) {
+        (Some(ka), Some(kb)) => ka
+            .partial_cmp(&kb)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| historical(a, b)),
+        _ => historical(a, b),
     });
     let mut free = ctx.free.clone();
     let mut launches = Vec::new();
@@ -48,6 +68,23 @@ pub(crate) fn launch_from_plan(plan: &SaturnPlan, ctx: &PlanContext,
         }
     }
     launches
+}
+
+/// Per-job [`JobTerms`] for the objective-aware solver, read off the
+/// live simulation state at `ctx.now` (deadlines become due-in-seconds
+/// relative to the solve instant). Shared by both Saturn policies.
+pub(crate) fn objective_terms(ctx: &PlanContext,
+                              remaining: &[(usize, u64)]) -> Vec<JobTerms> {
+    remaining
+        .iter()
+        .filter_map(|&(id, _)| {
+            ctx.jobs.get(id).map(|s| JobTerms {
+                job_id: id,
+                weight: s.priority,
+                due_in_s: s.deadline_s.map(|d| s.arrival_s + d - ctx.now),
+            })
+        })
+        .collect()
 }
 
 pub struct SaturnPolicy {
@@ -221,9 +258,11 @@ impl Policy for SaturnPolicy {
             self.drift_resolves += 1;
         }
 
-        let (mut plan, stats) = solve_joint_with(&remaining, ctx.profiles,
-                                                 ctx.cluster, self.mode,
-                                                 self.lookahead);
+        let terms = objective_terms(ctx, &remaining);
+        let (mut plan, stats) = solve_joint_obj(&remaining, ctx.profiles,
+                                                ctx.cluster, self.mode,
+                                                self.lookahead, None,
+                                                ctx.objective, &terms);
         self.pressure.0 += stats.lp_capped;
         self.pressure.1 += stats.limit_reached;
         self.last_stats = stats;

@@ -7,4 +7,4 @@ pub mod solver;
 
 pub use introspect::SaturnPolicy;
 pub use plan::{JobPlan, SaturnPlan};
-pub use solver::{solve_joint, SolverMode, SolverStats};
+pub use solver::{solve_joint, solve_joint_obj, SolverMode, SolverStats};

@@ -25,6 +25,7 @@
 //! perf split too.
 
 use crate::cluster::ClusterSpec;
+use crate::objective::Objective;
 use crate::perf::{Observation, PerfModel};
 use crate::sim::placement::{FreeState, Placement};
 use crate::trials::ProfileTable;
@@ -106,6 +107,11 @@ pub struct PlanContext<'a> {
     pub free: &'a FreeState,
     pub profiles: &'a ProfileTable,
     pub cluster: &'a ClusterSpec,
+    /// The scheduling objective every system competes under
+    /// ([`SimConfig::objective`]): Saturn threads it into the joint
+    /// MILP, baselines use it for queue ordering. `Makespan` reproduces
+    /// the historical behavior of every policy bit for bit.
+    pub objective: Objective,
     /// Observations delivered to the estimate layer so far (monotone).
     /// Policies snapshot this to detect "new evidence since my last
     /// solve" for drift-triggered re-solves.
@@ -166,11 +172,18 @@ pub struct SimConfig {
     pub checkpoint_penalty_s: f64,
     /// Safety valve for runaway simulations.
     pub max_virtual_time_s: f64,
+    /// Scheduling objective handed to every policy via
+    /// [`PlanContext::objective`] (see `objective::Objective`).
+    pub objective: Objective,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { checkpoint_penalty_s: 60.0, max_virtual_time_s: 1e9 }
+        SimConfig {
+            checkpoint_penalty_s: 60.0,
+            max_virtual_time_s: 1e9,
+            objective: Objective::Makespan,
+        }
     }
 }
 
@@ -218,6 +231,14 @@ pub struct OnlineSimResult {
     pub early_stopped: Vec<usize>,
     /// Completed jobs that blew their deadline.
     pub deadline_misses: usize,
+    /// Sum over completed deadlined jobs of `(finish - deadline)+`,
+    /// seconds — the tardiness currency the `tardiness` objective
+    /// minimizes (early-stopped jobs count 0, like `deadline_misses`).
+    pub total_tardiness_s: f64,
+    /// Priority-weighted mean tardiness: `sum_j w_j T_j / sum_j w_j`
+    /// over ALL jobs (deadline-less and early-stopped jobs count 0) —
+    /// the same denominator as the weighted-JCT metric.
+    pub weighted_tardiness_s: f64,
     /// Running jobs whose allocation changed across a replan.
     pub preemptions: usize,
     /// Launches that paid the checkpoint/restart penalty.
@@ -515,6 +536,9 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
     let mut completed = Vec::new();
     let mut early_stopped = Vec::new();
     let mut deadline_misses = 0usize;
+    let mut total_tardiness = 0.0f64;
+    let mut weighted_tardiness = 0.0f64;
+    let total_priority: f64 = state.iter().map(|s| s.priority).sum();
     for s in &state {
         if s.early_stopped {
             early_stopped.push(s.job.id);
@@ -524,6 +548,10 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                 if s.finished_at.unwrap() > s.arrival_s + d {
                     deadline_misses += 1;
                 }
+                let tard =
+                    (s.finished_at.unwrap() - (s.arrival_s + d)).max(0.0);
+                total_tardiness += tard;
+                weighted_tardiness += s.priority * tard;
             }
         }
     }
@@ -541,6 +569,9 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         completed,
         early_stopped,
         deadline_misses,
+        total_tardiness_s: total_tardiness,
+        weighted_tardiness_s: weighted_tardiness
+            / total_priority.max(1e-9),
         preemptions,
         migrations,
         gpu_utilization: busy_gpu_seconds
@@ -625,6 +656,7 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
             free,
             profiles: perf.table(),
             cluster,
+            objective: cfg.objective,
             obs_seen: perf.obs_seen(),
             drift_alarm: perf.drift_alarm(),
         };
@@ -851,6 +883,39 @@ mod tests {
         assert_eq!(a.jct_s, b.jct_s);
         assert_eq!(a.early_stopped, b.early_stopped);
         assert_eq!(a.launches, b.launches);
+    }
+
+    #[test]
+    fn tardiness_metrics_match_the_finish_times() {
+        let (_, profiles, cluster) = setup(4);
+        let mut jobs = online_jobs(4, 2_000.0);
+        // every even job is due the moment it arrives (tardiness = JCT),
+        // odd jobs carry no deadline (count 0 in both metrics)
+        for (i, oj) in jobs.iter_mut().enumerate() {
+            oj.deadline_s = if i % 2 == 0 { Some(0.0) } else { None };
+            oj.priority = 1.0 + i as f64;
+        }
+        let r = simulate_online(&jobs, None, &profiles, &cluster, &mut Fifo,
+                                &SimConfig::default());
+        let w_sum: f64 = jobs.iter().map(|j| j.priority).sum();
+        let mut total = 0.0;
+        let mut weighted = 0.0;
+        let mut late = 0usize;
+        for &(id, fin) in &r.finish_times {
+            let Some(d) = jobs[id].deadline_s else { continue };
+            let t = (fin - (jobs[id].arrival_s + d)).max(0.0);
+            total += t;
+            weighted += jobs[id].priority * t;
+            if fin > jobs[id].arrival_s + d {
+                late += 1;
+            }
+        }
+        assert!(total > 0.0, "zero-slack deadlines produced no tardiness");
+        assert!((r.total_tardiness_s - total).abs() <= 1e-9 * total);
+        let expect_w = weighted / w_sum;
+        assert!((r.weighted_tardiness_s - expect_w).abs()
+                    <= 1e-9 * expect_w.max(1.0));
+        assert_eq!(r.deadline_misses, late);
     }
 
     #[test]

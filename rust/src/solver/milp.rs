@@ -63,6 +63,13 @@ pub struct MilpOptions {
     /// time.
     pub threads: usize,
     pub engine: MilpEngine,
+    /// Root-node strong branching: score the top-k pseudo-cost
+    /// candidates by their ACTUAL dual-simplex child bounds before the
+    /// first branch, and seed the pseudo-costs with the observed
+    /// degradations. 0 (the default) disables — the root then branches
+    /// on the product rule's 1.0 defaults, i.e. most-fractional.
+    /// Revised engine only; the seed reference ignores it.
+    pub strong_branch_k: usize,
 }
 
 impl Default for MilpOptions {
@@ -74,6 +81,7 @@ impl Default for MilpOptions {
             warm_start: None,
             threads: 1,
             engine: MilpEngine::Revised,
+            strong_branch_k: 0,
         }
     }
 }
@@ -377,6 +385,23 @@ fn solve_revised(
                     }
                 }
             }
+            // root-node strong branching: at the tree's single
+            // all-defaults decision, replace the pseudo-cost pick with
+            // the candidate whose actual child bounds degrade most
+            let branch = match branch {
+                Some(pick)
+                    if node.over.is_empty()
+                        && opts.strong_branch_k > 0
+                        && !capped =>
+                {
+                    Some(strong_branch_root(&sx, lp, &x, integer_vars,
+                                            s.basis.as_ref(), objective,
+                                            opts.strong_branch_k, &mut pc,
+                                            &mut stats)
+                        .unwrap_or(pick))
+                }
+                other => other,
+            };
             match branch {
                 None => {
                     let better = match &incumbent {
@@ -460,6 +485,102 @@ fn solve_revised(
             (MilpResult::LimitReached { best_bound, nodes }, stats)
         }
     }
+}
+
+/// Root-node strong branching (`MilpOptions::strong_branch_k`): rank
+/// the fractional candidates by pseudo-cost product score (all-default
+/// at the root, so effectively most-fractional), take the top k, and
+/// for each solve BOTH child LPs from the root basis via the dual
+/// simplex to observe the true bound degradations. The winner by
+/// product rule is branched on, and every observed degradation seeds
+/// the pseudo-costs so the rest of the tree branches on real data
+/// instead of 1.0 defaults. Deterministic: candidates are ranked
+/// (score desc, var asc) and evaluated in that order. Returns `None`
+/// only if no candidate yielded a usable score (caller falls back to
+/// the pseudo-cost pick).
+#[allow(clippy::too_many_arguments)]
+fn strong_branch_root(
+    sx: &Simplex,
+    lp: &Lp,
+    x: &[f64],
+    integer_vars: &[usize],
+    basis: Option<&Basis>,
+    parent_obj: f64,
+    k: usize,
+    pc: &mut PseudoCosts,
+    stats: &mut MilpStats,
+) -> Option<(usize, f64, f64)> {
+    let mut cands: Vec<(usize, f64, f64)> = integer_vars
+        .iter()
+        .filter_map(|&j| {
+            let f = x[j] - x[j].floor();
+            if f > 1e-6 && f < 1.0 - 1e-6 {
+                Some((j, pc.score(j, f), f))
+            } else {
+                None
+            }
+        })
+        .collect();
+    cands.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    cands.truncate(k);
+    let mut best: Option<(usize, f64, f64)> = None;
+    for &(j, _, frac) in &cands {
+        let floor = x[j].floor();
+        let mut deg = [0.0f64; 2];
+        for (slot, up) in [(0usize, false), (1usize, true)] {
+            let mut lower = lp.lower.clone();
+            let mut upper = lp.upper.clone();
+            if up {
+                lower[j] = floor + 1.0;
+            } else {
+                upper[j] = floor;
+            }
+            if lower[j] > upper[j] {
+                deg[slot] = 1e18; // empty child: branching here prunes
+                continue;
+            }
+            let solved = match basis
+                .and_then(|b| sx.solve_warm(&lower, &upper, b))
+            {
+                Some(s) => {
+                    stats.warm_hits += 1;
+                    s
+                }
+                None => {
+                    stats.warm_misses += 1;
+                    sx.solve_cold(&lower, &upper)
+                }
+            };
+            stats.lp_pivots += solved.info.pivots;
+            match solved.result {
+                LpResult::Optimal { objective, .. } => {
+                    if solved.info.capped {
+                        // capped probe: objective untrusted, skip
+                        stats.capped_lps += 1;
+                    } else {
+                        deg[slot] = (objective - parent_obj).max(0.0);
+                        pc.record(j, frac, up, objective - parent_obj);
+                    }
+                }
+                LpResult::Infeasible => deg[slot] = 1e18,
+                LpResult::Unbounded => {}
+            }
+        }
+        let score = (deg[0] * frac).max(1e-6)
+            * (deg[1] * (1.0 - frac)).max(1e-6);
+        let take = match best {
+            Some((_, s, _)) => score > s + 1e-12,
+            None => true,
+        };
+        if take {
+            best = Some((j, score, frac));
+        }
+    }
+    best
 }
 
 // ---------------------------------------------------------------------------
@@ -942,6 +1063,33 @@ mod tests {
             assert_eq!(base.0, par.0, "threads={threads}");
             assert_eq!(base.1.nodes, par.1.nodes, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn strong_branching_preserves_the_optimum() {
+        let lp = knapsack_lp();
+        let ints = [0usize, 1, 2];
+        let base = solve(&lp, &ints, &MilpOptions::default());
+        let strong = solve(&lp, &ints, &MilpOptions {
+            strong_branch_k: 3,
+            ..Default::default()
+        });
+        let (_, a) = base.solution().expect("base solved");
+        let (_, b) = strong.solution().expect("strong solved");
+        assert_close(a, b);
+    }
+
+    #[test]
+    fn strong_branching_is_deterministic() {
+        let lp = knapsack_lp();
+        let ints = [0usize, 1, 2];
+        let opts =
+            MilpOptions { strong_branch_k: 2, ..Default::default() };
+        let a = solve_with_stats(&lp, &ints, &opts);
+        let b = solve_with_stats(&lp, &ints, &opts);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.nodes, b.1.nodes);
+        assert_eq!(a.1.lp_pivots, b.1.lp_pivots);
     }
 
     #[test]

@@ -94,6 +94,7 @@ fn stationary(seed: u64, noise: f64) -> DriftConfig {
         interference_mult: 1.0,
         interference_s: 0.0,
         cell_noise: noise,
+        tenant_spread: 0.0,
     }
 }
 
@@ -173,6 +174,74 @@ fn prop_correction_never_raises_stationary_estimate_error() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// per-tenant drift profiles (DriftConfig::tenant_spread)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_zero_tenant_spread_is_bit_identical() {
+    // the zero-spread arm with tenant classes attached must replay the
+    // plain drift run bit for bit, for every online system
+    forall(105, 4, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(seed as u64);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        let mut cfg = DriftConfig::uniform(seed as u64 + 1, 0.2);
+        cfg.tenant_spread = 0.0;
+        let tenants: Vec<f64> =
+            trace.jobs.iter().map(|o| o.priority - 1.0).collect();
+        for sys in ["online-current-practice", "online-optimus",
+                    "online-saturn"] {
+            let mut plain =
+                PerfModel::with_drift(&profiles, cfg.clone(), true);
+            let (a, ma) = run_trace_perf(&trace, Some(&rungs), &mut plain,
+                                         &cluster, sys, SolverMode::Joint,
+                                         None);
+            let mut spread0 = PerfModel::with_drift_tenants(
+                &profiles, cfg.clone(), true, tenants.clone());
+            let (b, mb) = run_trace_perf(&trace, Some(&rungs),
+                                         &mut spread0, &cluster, sys,
+                                         SolverMode::Joint, None);
+            if a.finish_times != b.finish_times {
+                return Err(format!("{sys}: finish times diverged"));
+            }
+            if ma.estimate_mae.to_bits() != mb.estimate_mae.to_bits() {
+                return Err(format!("{sys}: estimate MAE bits diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tenant_spread_changes_the_drifted_schedule() {
+    // a positive spread must actually reshape the truth: the run with
+    // per-tenant ramps diverges from the shared-magnitude run
+    let trace = trace_of_seed(42);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    // alternate tenant classes by job id so the spread is guaranteed
+    // to bite regardless of the trace's tenant draw
+    let tenants: Vec<f64> =
+        trace.jobs.iter().map(|o| (o.job.id % 2) as f64).collect();
+    let run = |spread: f64| {
+        let mut cfg = DriftConfig::uniform(7, 0.2);
+        cfg.tenant_spread = spread;
+        let mut perf = PerfModel::with_drift_tenants(
+            &profiles, cfg, true, tenants.clone());
+        run_trace_perf(&trace, Some(&rungs), &mut perf, &cluster,
+                       "online-saturn", SolverMode::Joint, None)
+            .0
+    };
+    let base = run(0.0);
+    let spread = run(1.5);
+    assert!(base.finish_times != spread.finish_times
+                || (base.makespan_s - spread.makespan_s).abs() > 1e-9,
+            "tenant spread 1.5 left the schedule untouched");
 }
 
 // ---------------------------------------------------------------------------

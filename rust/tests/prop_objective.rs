@@ -1,0 +1,285 @@
+//! Property/integration suite for the pluggable scheduling objectives
+//! (DESIGN.md §4.5), via the in-repo `util::prop` framework:
+//!
+//!  * **Behavior preservation** — under `Objective::Makespan` every
+//!    online system replays bit-identically through the objective
+//!    plumbing (the acceptance bar the `bench_objective` makespan arm
+//!    holds against BENCH_online at 1e-6);
+//!  * **Degeneracy** — `WeightedTardiness` with no deadlines and the
+//!    `alpha = 1` endpoint of `WeightedJct` produce the pure-makespan
+//!    plan bit for bit, across random workload sizes and weights;
+//!  * **Endpoints** — `alpha = 0` tracks the pure priority-weighted-JCT
+//!    lower bound (every job near its fastest plan), and the solver
+//!    improves its own tardiness currency against the makespan plan on
+//!    deadline-tight instances.
+
+use saturn::cluster::ClusterSpec;
+use saturn::objective::{JobTerms, Objective};
+use saturn::online::{profile_trace, run_trace, run_trace_obj,
+                     ONLINE_SYSTEMS};
+use saturn::parallelism::default_library;
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::{solve_joint, solve_joint_obj, SolverMode};
+use saturn::sim::engine::RungConfig;
+use saturn::trials::{profile_analytic, ProfileTable};
+use saturn::util::prop::{forall, IntRange};
+use saturn::workload::{generate_trace, toy_workload, TraceConfig};
+
+fn setup(n: usize)
+    -> (Vec<(usize, u64)>, ProfileTable, ClusterSpec) {
+    let jobs = toy_workload(n);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_analytic(&jobs, &default_library(), &cluster);
+    let rem = jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    (rem, profiles, cluster)
+}
+
+// ---------------------------------------------------------------------------
+// behavior preservation: makespan objective == the historical path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_makespan_objective_replays_every_system_bit_identically() {
+    forall(201, 5, &IntRange(0, 1000), |&seed| {
+        let trace = generate_trace(&TraceConfig {
+            seed: seed as u64,
+            multijobs: 3,
+            deadline_slack_s: Some(6.0 * 3600.0),
+            ..Default::default()
+        });
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        for sys in ONLINE_SYSTEMS {
+            let (a, ma) = run_trace(&trace, Some(&rungs), &profiles,
+                                    &cluster, sys, SolverMode::Joint);
+            let mut perf = PerfModel::exact(&profiles);
+            let (b, mb) = run_trace_obj(&trace, Some(&rungs), &mut perf,
+                                        &cluster, sys, SolverMode::Joint,
+                                        None, Objective::Makespan);
+            if a.finish_times != b.finish_times {
+                return Err(format!("{sys}: finish times diverged"));
+            }
+            if a.jct_s != b.jct_s || a.early_stopped != b.early_stopped {
+                return Err(format!("{sys}: departures diverged"));
+            }
+            if ma.makespan_s.to_bits() != mb.makespan_s.to_bits() {
+                return Err(format!("{sys}: makespan bits diverged"));
+            }
+            // tardiness metrics exist on both paths and agree
+            if ma.weighted_tardiness_s.to_bits()
+                != mb.weighted_tardiness_s.to_bits()
+            {
+                return Err(format!("{sys}: tardiness metric diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wjct_alpha_one_replays_like_makespan_for_every_system() {
+    // the alpha = 1 endpoint degenerates everywhere: the solver builds
+    // the makespan LP and EVERY policy (Saturn, Optimus, FIFO) keeps
+    // its historical queue ordering — so whole replays are identical
+    let trace = generate_trace(&TraceConfig {
+        seed: 31,
+        multijobs: 3,
+        deadline_slack_s: Some(4.0 * 3600.0),
+        ..Default::default()
+    });
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    for sys in ONLINE_SYSTEMS {
+        let mut perf_a = PerfModel::exact(&profiles);
+        let (a, _) = run_trace_obj(&trace, Some(&rungs), &mut perf_a,
+                                   &cluster, sys, SolverMode::Joint, None,
+                                   Objective::Makespan);
+        let mut perf_b = PerfModel::exact(&profiles);
+        let (b, _) = run_trace_obj(&trace, Some(&rungs), &mut perf_b,
+                                   &cluster, sys, SolverMode::Joint, None,
+                                   Objective::WeightedJct { alpha: 1.0 });
+        assert_eq!(a.finish_times, b.finish_times, "{sys}");
+        assert_eq!(a.jct_s, b.jct_s, "{sys}");
+        assert_eq!(a.early_stopped, b.early_stopped, "{sys}");
+    }
+}
+
+#[test]
+fn objective_arms_complete_identical_streams() {
+    // non-makespan objectives still depart every job and stay within
+    // capacity; weighted tardiness is finite and non-negative
+    let trace = generate_trace(&TraceConfig {
+        seed: 17,
+        multijobs: 3,
+        deadline_slack_s: Some(2.0 * 3600.0),
+        ..Default::default()
+    });
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    for objective in [
+        Objective::WeightedTardiness { deadline_weight: 1.0 },
+        Objective::WeightedJct { alpha: 0.5 },
+        Objective::WeightedJct { alpha: 0.0 },
+    ] {
+        for sys in ONLINE_SYSTEMS {
+            let mut perf = PerfModel::exact(&profiles);
+            let (r, m) = run_trace_obj(&trace, Some(&rungs), &mut perf,
+                                       &cluster, sys, SolverMode::Joint,
+                                       None, objective);
+            assert_eq!(r.finish_times.len(), trace.jobs.len(),
+                       "{sys}/{}", objective.name());
+            assert!(r.peak_gpus <= cluster.total_gpus());
+            assert!(m.weighted_tardiness_s.is_finite());
+            assert!(m.weighted_tardiness_s >= 0.0);
+            assert!(m.total_tardiness_s >= m.weighted_tardiness_s - 1e-9,
+                    "weighted mean cannot exceed the raw sum");
+        }
+    }
+}
+
+#[test]
+fn objective_replays_are_bit_identical() {
+    // determinism holds on the new code paths too
+    let trace = generate_trace(&TraceConfig {
+        seed: 23,
+        multijobs: 3,
+        deadline_slack_s: Some(3.0 * 3600.0),
+        ..Default::default()
+    });
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    for objective in [
+        Objective::WeightedTardiness { deadline_weight: 1.0 },
+        Objective::WeightedJct { alpha: 0.3 },
+    ] {
+        let run = || {
+            let mut perf = PerfModel::exact(&profiles);
+            run_trace_obj(&trace, Some(&rungs), &mut perf, &cluster,
+                          "online-saturn", SolverMode::Joint, None,
+                          objective)
+                .0
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.finish_times, b.finish_times, "{}",
+                   objective.name());
+        assert_eq!(a.jct_s, b.jct_s);
+        assert_eq!(a.total_tardiness_s.to_bits(),
+                   b.total_tardiness_s.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// degeneracy: the makespan-equivalent corners are bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tardiness_without_deadlines_degenerates_to_makespan() {
+    forall(202, 8, &IntRange(0, 1000), |&seed| {
+        let n = 4 + (seed as usize % 8);
+        let (rem, profiles, cluster) = setup(n);
+        let (mk, _) =
+            solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let terms: Vec<JobTerms> = rem
+            .iter()
+            .map(|&(id, _)| JobTerms {
+                weight: 1.0 + ((seed as usize + id) % 4) as f64,
+                ..JobTerms::neutral(id)
+            })
+            .collect();
+        let dw = 0.5 + (seed % 7) as f64;
+        let (td, _) = solve_joint_obj(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::WeightedTardiness { deadline_weight: dw }, &terms);
+        if mk.choices != td.choices {
+            return Err(format!("n={n}: choices diverged"));
+        }
+        if mk.predicted_makespan_s.to_bits()
+            != td.predicted_makespan_s.to_bits()
+        {
+            return Err(format!("n={n}: makespan bits diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wjct_alpha_one_degenerates_to_makespan() {
+    forall(203, 8, &IntRange(0, 1000), |&seed| {
+        let n = 4 + (seed as usize % 8);
+        let (rem, profiles, cluster) = setup(n);
+        let (mk, _) =
+            solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let terms: Vec<JobTerms> = rem
+            .iter()
+            .map(|&(id, _)| JobTerms {
+                weight: 1.0 + (id % 3) as f64,
+                due_in_s: Some(3600.0),
+                ..JobTerms::neutral(id)
+            })
+            .collect();
+        let (wj, _) = solve_joint_obj(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::WeightedJct { alpha: 1.0 }, &terms);
+        if mk.choices != wj.choices {
+            return Err(format!("n={n}: choices diverged"));
+        }
+        if mk.predicted_makespan_s.to_bits()
+            != wj.predicted_makespan_s.to_bits()
+        {
+            return Err(format!("n={n}: makespan bits diverged"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// endpoints: alpha = 0 is pure weighted JCT
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_wjct_alpha_zero_tracks_the_weighted_jct_bound() {
+    forall(204, 6, &IntRange(0, 1000), |&seed| {
+        let n = 4 + (seed as usize % 6);
+        let (rem, profiles, cluster) = setup(n);
+        let terms: Vec<JobTerms> = rem
+            .iter()
+            .map(|&(id, _)| JobTerms {
+                weight: 1.0 + ((seed as usize + id) % 4) as f64,
+                ..JobTerms::neutral(id)
+            })
+            .collect();
+        let (wj, _) = solve_joint_obj(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::WeightedJct { alpha: 0.0 }, &terms);
+        let w_of = |id: usize| {
+            terms.iter().find(|t| t.job_id == id).unwrap().weight
+        };
+        let w_sum: f64 = terms.iter().map(|t| t.weight).sum();
+        let chosen: f64 = wj
+            .choices
+            .iter()
+            .map(|p| w_of(p.job_id) / w_sum * p.runtime_s)
+            .sum();
+        let bound: f64 = rem
+            .iter()
+            .map(|&(id, steps)| {
+                let fastest = profiles
+                    .candidate_plans(id)
+                    .into_iter()
+                    .map(|(_, _, _, s)| s * steps as f64)
+                    .fold(f64::INFINITY, f64::min);
+                w_of(id) / w_sum * fastest
+            })
+            .sum();
+        if chosen > bound * 1.02 + 1.0 {
+            return Err(format!(
+                "n={n}: alpha=0 strayed from the wjct bound: \
+                 {chosen} vs {bound}"));
+        }
+        Ok(())
+    });
+}

@@ -171,6 +171,61 @@ fn prop_warm_dual_resolve_equals_cold_solve_on_bound_flips() {
 }
 
 #[test]
+fn prop_strong_branching_agrees_on_incumbents() {
+    // root-node strong branching (MilpOptions::strong_branch_k) may
+    // reshape the tree but never the answer: random binary programs
+    // must yield the same objective as the default revised engine AND
+    // the preserved seed engine
+    forall(74, 30, &RandomLpSeed, |&seed| {
+        let mut rng = Rng::new(seed as u64 + 11);
+        let n = 3 + rng.usize(6);
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_obj(j, rng.range(-20, 8) as f64);
+            lp.bound_le(j, 1.0);
+        }
+        lp.add(
+            (0..n).map(|j| (j, rng.range(1, 10) as f64)).collect(),
+            Cmp::Le,
+            rng.range(5, 30) as f64,
+        );
+        let ints: Vec<usize> = (0..n).collect();
+        let (base, _) =
+            solve_with_stats(&lp, &ints, &MilpOptions::default());
+        let (reference, _) = solve_with_stats(&lp, &ints, &MilpOptions {
+            engine: MilpEngine::DenseReference,
+            ..Default::default()
+        });
+        for k in [2usize, 4] {
+            let (strong, _) = solve_with_stats(&lp, &ints, &MilpOptions {
+                strong_branch_k: k,
+                ..Default::default()
+            });
+            for (tag, other) in [("revised", &base), ("seed", &reference)]
+            {
+                match (&strong, other) {
+                    (
+                        MilpResult::Solved { objective: a, .. },
+                        MilpResult::Solved { objective: b, .. },
+                    ) => {
+                        if (a - b).abs() > 1e-6 * b.abs().max(1.0) {
+                            return Err(format!(
+                                "k={k} vs {tag}: {a} vs {b}"));
+                        }
+                    }
+                    (MilpResult::Infeasible, MilpResult::Infeasible) => {}
+                    (a, b) => {
+                        return Err(format!(
+                            "k={k} vs {tag}: status {a:?} vs {b:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_milp_engines_and_thread_counts_agree() {
     forall(73, 40, &RandomLpSeed, |&seed| {
         // random binary programs with a knapsack row and an occasional
