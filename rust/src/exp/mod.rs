@@ -119,9 +119,10 @@ pub fn format_online_row(metrics: &[crate::online::OnlineMetrics]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "{:<24} {:>10} {:>10} {:>10} {:>11} {:>8} {:>7} {:>7} {:>9} \
-         {:>8}\n",
+         {:>8} {:>8} {:>8}\n",
         "system", "avgJCT(h)", "p95JCT(h)", "wJCT(h)", "makespan(h)",
-        "util(%)", "kills", "miss", "wTard(h)", "solves"));
+        "util(%)", "kills", "miss", "wTard(h)", "solves", "p50(ms)",
+        "p99(ms)"));
     for m in metrics {
         let solves = match (m.solves, m.warm_solves) {
             (Some(s), Some(w)) => format!("{s}({w}w)"),
@@ -129,11 +130,12 @@ pub fn format_online_row(metrics: &[crate::online::OnlineMetrics]) -> String {
         };
         out.push_str(&format!(
             "{:<24} {:>10.2} {:>10.2} {:>10.2} {:>11.2} {:>8.0} {:>7} \
-             {:>7} {:>9.3} {:>8}\n",
+             {:>7} {:>9.3} {:>8} {:>8.2} {:>8.2}\n",
             m.system, m.avg_jct_s / 3600.0, m.p95_jct_s / 3600.0,
             m.weighted_jct_s / 3600.0, m.makespan_s / 3600.0,
             m.gpu_utilization * 100.0, m.early_stopped, m.deadline_misses,
-            m.weighted_tardiness_s / 3600.0, solves));
+            m.weighted_tardiness_s / 3600.0, solves,
+            m.decision_p50_s * 1e3, m.decision_p99_s * 1e3));
     }
     out
 }

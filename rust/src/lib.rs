@@ -12,8 +12,9 @@
 //!    ([`online`], streaming arrivals + early-stopping departures), the
 //!    performance-model layer ([`perf`], estimate-vs-truth split with
 //!    drift and online correction), the baselines ([`baselines`]), the
-//!    cluster simulator ([`sim`]), and the PJRT execution runtime
-//!    ([`runtime`]).
+//!    cluster simulator ([`sim`]), the observability flight recorder
+//!    ([`obs`], structured tracing + metrics), and the PJRT execution
+//!    runtime ([`runtime`]).
 //!  * **L2** — `python/compile/model.py`: GPT-mini fwd/bwd+AdamW in JAX,
 //!    AOT-lowered to HLO text in `artifacts/`.
 //!  * **L1** — `python/compile/kernels/`: Pallas flash-attention, fused
@@ -30,6 +31,7 @@ pub mod data;
 pub mod exp;
 pub mod models;
 pub mod objective;
+pub mod obs;
 pub mod online;
 pub mod parallelism;
 pub mod perf;

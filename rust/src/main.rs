@@ -1,26 +1,29 @@
 //! `saturn` CLI: the leader entrypoint.
 //!
 //! Subcommands:
-//!   table2     reproduce paper Table 2 (simulated p4d fleet)
-//!   plan       solve one workload and print the joint plan
-//!   online     streaming multi-tenant HPO: arrivals + early stopping
-//!   workload   print the Table 1 HPO grids
-//!   e2e        real model selection over the AOT GPT-mini artifacts
-//!   info       runtime/artifact diagnostics
+//!   table2           reproduce paper Table 2 (simulated p4d fleet)
+//!   plan             solve one workload and print the joint plan
+//!   online           streaming multi-tenant HPO: arrivals + early stopping
+//!   trace-summarize  analyze a flight-recorder journal (README §Tracing)
+//!   workload         print the Table 1 HPO grids
+//!   e2e              real model selection over the AOT GPT-mini artifacts
+//!   info             runtime/artifact diagnostics
 
 use anyhow::{anyhow, bail, Result};
 use saturn::cluster::ClusterSpec;
 use saturn::coordinator::{real_grid, Coordinator};
 use saturn::exp;
 use saturn::objective::{JobTerms, Objective};
-use saturn::online::{profile_trace, run_trace_obj, warm_cold_probe,
+use saturn::obs::summary;
+use saturn::obs::trace::{chrome_trace, parse_jsonl, write_jsonl, Tracer};
+use saturn::online::{profile_trace, run_trace_sim, warm_cold_probe,
                      ONLINE_SYSTEMS};
 use saturn::parallelism::default_library;
 use saturn::perf::{DriftConfig, PerfModel};
 use saturn::saturn::introspect::DEFAULT_DRIFT_THRESHOLD;
-use saturn::saturn::solver::{check_fleet_feasibility, solve_joint_obj,
+use saturn::saturn::solver::{check_fleet_feasibility, solve_joint_traced,
                              SolverMode};
-use saturn::sim::engine::RungConfig;
+use saturn::sim::engine::{RungConfig, SimConfig};
 use saturn::trials::profile_analytic;
 use saturn::util::cli::Args;
 use saturn::util::json::Json;
@@ -34,6 +37,7 @@ fn main() -> Result<()> {
         Some("table2") => cmd_table2(&args),
         Some("plan") => cmd_plan(&args),
         Some("online") => cmd_online(&args),
+        Some("trace-summarize") => cmd_trace_summarize(&args),
         Some("workload") => cmd_workload(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("info") => cmd_info(),
@@ -47,6 +51,7 @@ fn main() -> Result<()> {
             println!("            [--mode joint|greedy|rolling]");
             println!("            [--objective makespan|tardiness|wjct]");
             println!("            [--alpha F] [--deadline-weight F]");
+            println!("            [--trace PATH] [--trace-chrome PATH]");
             println!("  online    [--seed N] [--multijobs N] [--rate-per-hour X]");
             println!("            [--burst N] [--tenants N] [--rungs 0.25,0.5]");
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
@@ -59,6 +64,9 @@ fn main() -> Result<()> {
             println!("            [--drift-threshold F]");
             println!("            [--drift-tenant-spread F]");
             println!("            [--json PATH]");
+            println!("            [--trace PATH] [--trace-chrome PATH]");
+            println!("            [--trace-system SYSTEM]");
+            println!("  trace-summarize <trace.jsonl> [--json PATH]");
             println!("  workload  [--workload ...]");
             println!("  e2e       [--model tiny|small] [--lanes N] [--steps N]");
             println!("  info");
@@ -89,6 +97,35 @@ fn fleet_from_args(args: &Args) -> Result<ClusterSpec> {
         Some(spec) => ClusterSpec::parse_fleet(spec).map_err(|e| anyhow!(e)),
         None => Ok(ClusterSpec::p4d(args.usize_or("nodes", 1) as u32)),
     }
+}
+
+/// Flight recorder from `--trace PATH` / `--trace-chrome PATH`: either
+/// flag turns the journal on (with wall stamps — the CLI is a terminal
+/// run, not a replay fixture); neither leaves it off at zero cost.
+fn tracer_from_args(args: &Args) -> Tracer {
+    if args.get("trace").is_some() || args.get("trace-chrome").is_some() {
+        Tracer::on()
+    } else {
+        Tracer::off()
+    }
+}
+
+/// Write the recorded journal to the `--trace` (JSONL) and/or
+/// `--trace-chrome` (Perfetto-loadable trace_event JSON) paths.
+fn write_trace_outputs(args: &Args, tracer: &Tracer) -> Result<()> {
+    if !tracer.is_enabled() {
+        return Ok(());
+    }
+    let events = tracer.events();
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, write_jsonl(&events))?;
+        println!("wrote {path} ({} trace events)", events.len());
+    }
+    if let Some(path) = args.get("trace-chrome") {
+        std::fs::write(path, chrome_trace(&events).to_string())?;
+        println!("wrote {path} (chrome trace)");
+    }
+    Ok(())
 }
 
 /// Resolve `--objective makespan|tardiness|wjct` with its `--alpha` /
@@ -122,8 +159,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
         .iter()
         .map(|&(id, _)| JobTerms::neutral(id))
         .collect();
-    let (plan, stats) = solve_joint_obj(&remaining, &profiles, &cluster,
-                                        mode, 1.0, None, objective, &terms);
+    let tracer = tracer_from_args(args);
+    let (plan, stats) =
+        solve_joint_traced(&remaining, &profiles, &cluster, mode, 1.0,
+                           None, objective, &terms, &tracer);
     println!("joint plan for '{workload}' ({} objective) on fleet [{}] \
               ({} GPUs, {} node(s)):", objective.name(),
              cluster.fleet_desc(), cluster.total_gpus(),
@@ -143,6 +182,25 @@ fn cmd_plan(args: &Args) -> Result<()> {
              stats.wall_s * 1e3, stats.milp_nodes, stats.lp_pivots,
              100.0 * stats.warm_hit_rate(), stats.windows.max(1),
              stats.proved_optimal);
+    write_trace_outputs(args, &tracer)?;
+    Ok(())
+}
+
+/// Analyze a flight-recorder journal offline: phase-time breakdown,
+/// re-solve cause histogram, decision-latency tails, utilization
+/// timeline (README §Tracing).
+fn cmd_trace_summarize(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).ok_or_else(|| {
+        anyhow!("usage: saturn trace-summarize <trace.jsonl> [--json PATH]")
+    })?;
+    let text = std::fs::read_to_string(path)?;
+    let events = parse_jsonl(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let s = summary::summarize(&events).map_err(|e| anyhow!(e))?;
+    print!("{}", summary::render(&s));
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, summary::to_json(&s).to_string())?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -261,13 +319,33 @@ fn cmd_online(args: &Args) -> Result<()> {
     check_fleet_feasibility(&all_jobs, &profiles, &cluster)
         .map_err(|e| anyhow!(e))?;
 
+    // flight recorder: --trace / --trace-chrome journal ONE system's
+    // run (--trace-system, default online-saturn); the others stay at
+    // the zero-cost off tracer so the comparison row is undisturbed
+    let tracer = tracer_from_args(args);
+    let trace_system = args.str_or("trace-system", "online-saturn");
+    if tracer.is_enabled()
+        && !ONLINE_SYSTEMS.contains(&trace_system.as_str())
+    {
+        bail!("--trace-system must be one of {ONLINE_SYSTEMS:?}, \
+               got '{trace_system}'");
+    }
     let mut metrics = Vec::new();
     let mut saturn_result = None;
     for sys in ONLINE_SYSTEMS {
         let mut perf = make_perf();
-        let (r, m) = run_trace_obj(&trace, rungs.as_ref(), &mut perf,
+        let sim_cfg = SimConfig {
+            objective,
+            trace: if sys == trace_system {
+                tracer.clone()
+            } else {
+                Tracer::off()
+            },
+            ..SimConfig::default()
+        };
+        let (r, m) = run_trace_sim(&trace, rungs.as_ref(), &mut perf,
                                    &cluster, sys, mode,
-                                   Some(drift_threshold), objective);
+                                   Some(drift_threshold), &sim_cfg);
         if sys == "online-saturn" {
             saturn_result = Some(r);
         }
@@ -292,9 +370,12 @@ fn cmd_online(args: &Args) -> Result<()> {
     // (first replay reused from the comparison loop above)
     let a = saturn_result.expect("online-saturn ran");
     let mut perf = make_perf();
-    let (b, _) = run_trace_obj(&trace, rungs.as_ref(), &mut perf, &cluster,
+    // the replay runs UNTRACED — passing bit-identity against a traced
+    // first run is exactly the recorder's determinism contract
+    let replay_cfg = SimConfig { objective, ..SimConfig::default() };
+    let (b, _) = run_trace_sim(&trace, rungs.as_ref(), &mut perf, &cluster,
                                "online-saturn", mode,
-                               Some(drift_threshold), objective);
+                               Some(drift_threshold), &replay_cfg);
     if a.finish_times != b.finish_times || a.jct_s != b.jct_s
         || a.early_stopped != b.early_stopped || a.launches != b.launches {
         bail!("online replay diverged for seed {seed}");
@@ -322,6 +403,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         std::fs::write(path, record.to_string())?;
         println!("wrote {path}");
     }
+    write_trace_outputs(args, &tracer)?;
     Ok(())
 }
 

@@ -1,0 +1,328 @@
+//! Process-wide metrics: counters, gauges, and log-bucketed histograms
+//! with true p50/p95/p99 percentiles (the end-of-run means in
+//! `OnlineMetrics` hide exactly the tail the ROADMAP's service-loop
+//! work cares about).
+//!
+//! The histogram is HdrHistogram-flavoured: geometric buckets growing by
+//! `2^(1/8)` (8 sub-buckets per octave, ~9% relative error) from 1 ns up
+//! past 1e9 s, with f64 WEIGHTED counts so duration-weighted series
+//! (e.g. queue depth over time) use the same machinery. Percentiles
+//! interpolate linearly inside the winning bucket and clamp to the
+//! observed `[min, max]`.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Smallest representable observation (1 ns); below this lands in the
+/// underflow bucket.
+const BUCKET_MIN: f64 = 1e-9;
+/// Sub-buckets per octave (relative error ~ `2^(1/8)-1` ~ 9%).
+const SUB_BUCKETS: usize = 8;
+/// 60 octaves x 8: covers 1e-9 .. ~1.15e9.
+const N_BUCKETS: usize = 60 * SUB_BUCKETS;
+
+/// Log-bucketed histogram over non-negative observations.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<f64>,
+    underflow: f64,
+    total: f64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0.0; N_BUCKETS],
+            underflow: 0.0,
+            total: 0.0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_index(x: f64) -> Option<usize> {
+        if x < BUCKET_MIN {
+            return None;
+        }
+        let i = ((x / BUCKET_MIN).log2() * SUB_BUCKETS as f64) as usize;
+        Some(i.min(N_BUCKETS - 1))
+    }
+
+    fn bucket_lo(i: usize) -> f64 {
+        BUCKET_MIN * (i as f64 / SUB_BUCKETS as f64).exp2()
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.observe_weighted(x, 1.0);
+    }
+
+    /// Weighted observation (weights <= 0 and NaN are ignored).
+    pub fn observe_weighted(&mut self, x: f64, w: f64) {
+        if w <= 0.0 || w.is_nan() || x.is_nan() {
+            return;
+        }
+        let x = x.max(0.0);
+        match Histogram::bucket_index(x) {
+            Some(i) => self.counts[i] += w,
+            None => self.underflow += w,
+        }
+        self.total += w;
+        self.sum += x * w;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> f64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total <= 0.0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            f64::NAN
+        } else {
+            self.sum / self.total
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.is_empty() {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.is_empty() {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile `q` in [0,1]; NaN when empty. Linear interpolation
+    /// inside the winning bucket, clamped to the observed range.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        let target = q.clamp(0.0, 1.0) * self.total;
+        let mut cum = self.underflow;
+        if cum >= target {
+            return self.min;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c <= 0.0 {
+                continue;
+            }
+            if cum + c >= target {
+                let lo = Histogram::bucket_lo(i);
+                let mut hi = Histogram::bucket_lo(i + 1);
+                if i + 1 == N_BUCKETS {
+                    // overflow clamps into the top bucket; stretch it
+                    // to the observed max so q=1 stays honest
+                    hi = hi.max(self.max);
+                }
+                let frac = ((target - cum) / c).clamp(0.0, 1.0);
+                let v = lo + frac * (hi - lo);
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.total)),
+            ("mean", Json::num(nan_to_zero(self.mean()))),
+            ("min", Json::num(nan_to_zero(self.min()))),
+            ("max", Json::num(nan_to_zero(self.max()))),
+            ("p50", Json::num(nan_to_zero(self.percentile(0.50)))),
+            ("p90", Json::num(nan_to_zero(self.percentile(0.90)))),
+            ("p95", Json::num(nan_to_zero(self.percentile(0.95)))),
+            ("p99", Json::num(nan_to_zero(self.percentile(0.99)))),
+        ])
+    }
+}
+
+fn nan_to_zero(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Box<Histogram>),
+}
+
+/// Named metric registry. Kind is fixed by the first write to a name;
+/// later writes of a DIFFERENT kind are silently ignored (telemetry
+/// must never panic the scheduler).
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let e =
+            m.entry(name.to_string()).or_insert(Metric::Counter(0));
+        if let Metric::Counter(c) = e {
+            *c += by;
+        }
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert(Metric::Gauge(v));
+        if let Metric::Gauge(g) = e {
+            *g = v;
+        }
+    }
+
+    pub fn observe(&self, name: &str, x: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Box::default()));
+        if let Metric::Hist(h) = e {
+            h.observe(x);
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.inner.lock().unwrap().get(name) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.inner.lock().unwrap().get(name) {
+            Some(Metric::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        match self.inner.lock().unwrap().get(name) {
+            Some(Metric::Hist(h)) => Some((**h).clone()),
+            _ => None,
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        Json::Obj(
+            m.iter()
+                .map(|(k, v)| {
+                    let j = match v {
+                        Metric::Counter(c) => Json::num(*c as f64),
+                        Metric::Gauge(g) => Json::num(*g),
+                        Metric::Hist(h) => h.to_json(),
+                    };
+                    (k.clone(), j)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Process-wide registry. Coarse aggregate telemetry only — parallel
+/// test binaries share it, so nothing asserts exact values on it; the
+/// engine keeps per-run histograms locally.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = Histogram::new();
+        assert!(h.percentile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.count(), 0.0);
+    }
+
+    #[test]
+    fn uniform_percentiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64);
+        }
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.10, "p50={p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.10, "p99={p99}");
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn weighted_observations_shift_the_median() {
+        let mut h = Histogram::new();
+        h.observe_weighted(1.0, 9.0);
+        h.observe_weighted(100.0, 1.0);
+        assert!(h.percentile(0.5) < 1.2, "{}", h.percentile(0.5));
+        assert!((h.mean() - 10.9).abs() < 1e-9);
+        h.observe_weighted(5.0, 0.0); // ignored
+        assert_eq!(h.count(), 10.0);
+    }
+
+    #[test]
+    fn tiny_and_huge_values_clamp() {
+        let mut h = Histogram::new();
+        h.observe(0.0); // underflow bucket
+        h.observe(1e12); // clamps to top bucket
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(1.0), 1e12);
+    }
+
+    #[test]
+    fn registry_kinds_are_sticky() {
+        let r = Registry::new();
+        r.inc("a", 2);
+        r.inc("a", 3);
+        assert_eq!(r.counter("a"), 5);
+        r.observe("a", 1.0); // wrong kind: ignored
+        assert_eq!(r.counter("a"), 5);
+        r.set_gauge("g", 7.5);
+        assert_eq!(r.gauge("g"), Some(7.5));
+        r.observe("h", 2.0);
+        r.observe("h", 4.0);
+        let h = r.histogram("h").unwrap();
+        assert_eq!(h.count(), 2.0);
+        assert!(r.snapshot().get("h").unwrap().get("p50").is_some());
+    }
+}

@@ -1,0 +1,22 @@
+//! Observability substrate: the flight recorder (§DESIGN 4.6).
+//!
+//! * [`trace`] — deterministic structured event journal (spans +
+//!   instants on sim-time, optional wall stamps), JSONL and Chrome
+//!   `trace_event` serialization, pairing/validation helpers.
+//! * [`metrics`] — counters, gauges, and log-bucketed histograms with
+//!   true tail percentiles; a process-wide registry for coarse
+//!   aggregates.
+//! * [`summary`] — journal → report: phase-time breakdown, re-solve
+//!   cause histogram, utilization timeline, tail-latency tables
+//!   (`saturn trace-summarize`).
+//!
+//! Everything — Saturn and every baseline, the engine, the MILP — logs
+//! through one `Tracer` handle threaded via `SimConfig`/`PlanContext`.
+//! With the tracer off (the default) every emission site is a single
+//! branch: replays are bit-identical to untraced builds.
+
+pub mod metrics;
+pub mod summary;
+pub mod trace;
+
+pub use trace::{TraceEvent, Tracer};

@@ -1,0 +1,417 @@
+//! Timeline analysis over a flight-recorder journal: the engine behind
+//! `saturn trace-summarize`. Everything here is derived from the JSONL
+//! journal ALONE — phase-time breakdown, re-solve cause histogram,
+//! queue-depth and decision-latency tails, per-bucket GPU utilization —
+//! so a trace file is a self-contained artifact.
+
+use crate::obs::metrics::Histogram;
+use crate::obs::trace::{paired_spans, validate, TraceEvent};
+use crate::util::json::Json;
+
+use std::collections::BTreeMap;
+
+/// Aggregated wall time for one solver phase.
+#[derive(Debug, Clone)]
+pub struct PhaseRow {
+    pub name: String,
+    pub count: usize,
+    pub total_wall_s: f64,
+}
+
+#[derive(Debug)]
+pub struct TraceSummary {
+    pub events: usize,
+    /// Sim-time horizon (run_end makespan when present, else max stamp).
+    pub horizon_s: f64,
+    /// Fleet size from the run_begin record (0 when absent).
+    pub total_gpus: f64,
+    /// Lifecycle instant counts by name (arrival, launch, complete, ...).
+    pub lifecycle: Vec<(String, usize)>,
+    /// Plan-call causes (every policy, every `sched/plan` span).
+    pub plan_causes: Vec<(String, usize)>,
+    /// Joint re-solve causes (`solver/resolve` spans).
+    pub resolve_causes: Vec<(String, usize)>,
+    /// Solver phase spans aggregated by name, sorted by total wall desc.
+    pub phases: Vec<PhaseRow>,
+    /// Wall duration of `sched/plan` spans (policy decision latency).
+    pub decision: Histogram,
+    /// Wall duration of joint re-solves (`solver/resolve`, falling back
+    /// to `solver/solve` for batch `plan` traces).
+    pub solve: Histogram,
+    /// Pending-queue depth sampled at each plan call.
+    pub queue_depth: Histogram,
+    /// (bucket start sim-time, mean busy GPUs over the bucket).
+    pub utilization: Vec<(f64, f64)>,
+}
+
+const UTIL_BUCKETS: usize = 12;
+
+/// Validate a journal and derive the report model from it.
+pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
+    validate(events)?;
+    let spans = paired_spans(events)?;
+
+    let mut total_gpus = 0.0;
+    let mut horizon_s: f64 = 0.0;
+    let mut lifecycle: BTreeMap<String, usize> = BTreeMap::new();
+    let mut queue_depth = Histogram::new();
+    let mut busy: Vec<(f64, f64)> = Vec::new();
+    for e in events {
+        horizon_s = horizon_s.max(e.t_s);
+        match (e.cat.as_str(), e.name.as_str()) {
+            ("meta", "run_begin") => {
+                if let Some(g) = e.args.get("gpus").and_then(Json::as_f64)
+                {
+                    total_gpus = g;
+                }
+            }
+            ("meta", "run_end") => {
+                if let Some(m) =
+                    e.args.get("makespan_s").and_then(Json::as_f64)
+                {
+                    horizon_s = horizon_s.max(m);
+                }
+            }
+            ("job", name) => {
+                *lifecycle.entry(name.to_string()).or_insert(0) += 1;
+            }
+            ("sched", "queue") => {
+                if let Some(d) =
+                    e.args.get("depth").and_then(Json::as_f64)
+                {
+                    queue_depth.observe(d);
+                }
+            }
+            ("metrics", "busy_gpus") => {
+                if let Some(b) =
+                    e.args.get("total").and_then(Json::as_f64)
+                {
+                    busy.push((e.t_s, b));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut plan_causes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut resolve_causes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut phase_agg: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+    let mut decision = Histogram::new();
+    let mut solve = Histogram::new();
+    let mut top_solve = Histogram::new();
+    for s in &spans {
+        match (s.cat.as_str(), s.name.as_str()) {
+            ("sched", "plan") => {
+                let cause = s
+                    .args
+                    .get("cause")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown");
+                *plan_causes.entry(cause.to_string()).or_insert(0) += 1;
+                if let Some(d) = s.wall_dur_s() {
+                    decision.observe(d.max(0.0));
+                }
+                if let Some(p) =
+                    s.args.get("pending").and_then(Json::as_f64)
+                {
+                    queue_depth.observe(p);
+                }
+            }
+            ("solver", name) => {
+                let agg = phase_agg
+                    .entry(name.to_string())
+                    .or_insert((0, 0.0));
+                agg.0 += 1;
+                if let Some(d) = s.wall_dur_s() {
+                    agg.1 += d.max(0.0);
+                }
+                if name == "resolve" {
+                    let cause = s
+                        .args
+                        .get("cause")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown");
+                    *resolve_causes
+                        .entry(cause.to_string())
+                        .or_insert(0) += 1;
+                    if let Some(d) = s.wall_dur_s() {
+                        solve.observe(d.max(0.0));
+                    }
+                } else if name == "solve" {
+                    if let Some(d) = s.wall_dur_s() {
+                        top_solve.observe(d.max(0.0));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if solve.is_empty() {
+        solve = top_solve;
+    }
+
+    let mut phases: Vec<PhaseRow> = phase_agg
+        .into_iter()
+        .map(|(name, (count, total_wall_s))| PhaseRow {
+            name,
+            count,
+            total_wall_s,
+        })
+        .collect();
+    phases.sort_by(|a, b| {
+        b.total_wall_s
+            .partial_cmp(&a.total_wall_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    Ok(TraceSummary {
+        events: events.len(),
+        horizon_s,
+        total_gpus,
+        lifecycle: lifecycle.into_iter().collect(),
+        plan_causes: plan_causes.into_iter().collect(),
+        resolve_causes: resolve_causes.into_iter().collect(),
+        phases,
+        decision,
+        solve,
+        queue_depth,
+        utilization: utilization_timeline(&busy, horizon_s),
+    })
+}
+
+/// Step-integrate `metrics/busy_gpus` samples into fixed sim-time
+/// buckets: each sample holds from its stamp to the next one's.
+fn utilization_timeline(
+    busy: &[(f64, f64)],
+    horizon_s: f64,
+) -> Vec<(f64, f64)> {
+    if busy.is_empty() || horizon_s <= 0.0 {
+        return Vec::new();
+    }
+    let width = horizon_s / UTIL_BUCKETS as f64;
+    let mut area = vec![0.0f64; UTIL_BUCKETS];
+    for (i, &(t0, b)) in busy.iter().enumerate() {
+        let t1 = busy
+            .get(i + 1)
+            .map(|&(t, _)| t)
+            .unwrap_or(horizon_s)
+            .min(horizon_s);
+        let (mut lo, hi) = (t0.min(horizon_s), t1);
+        while lo < hi {
+            let k = ((lo / width) as usize).min(UTIL_BUCKETS - 1);
+            let edge = (width * (k + 1) as f64).min(hi);
+            area[k] += b * (edge - lo);
+            lo = edge;
+        }
+    }
+    area.iter()
+        .enumerate()
+        .map(|(k, a)| (width * k as f64, a / width))
+        .collect()
+}
+
+fn fmt_ms(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.2}", x * 1e3)
+    }
+}
+
+fn push_tail(out: &mut String, label: &str, h: &Histogram) {
+    if h.is_empty() {
+        out.push_str(&format!("{label}: no wall-stamped samples\n"));
+        return;
+    }
+    out.push_str(&format!(
+        "{label}: n={} p50={} p90={} p95={} p99={} max={} ms\n",
+        h.count() as u64,
+        fmt_ms(h.percentile(0.50)),
+        fmt_ms(h.percentile(0.90)),
+        fmt_ms(h.percentile(0.95)),
+        fmt_ms(h.percentile(0.99)),
+        fmt_ms(h.max()),
+    ));
+}
+
+fn push_causes(out: &mut String, title: &str, causes: &[(String, usize)]) {
+    if causes.is_empty() {
+        return;
+    }
+    out.push_str(&format!("{title}:\n"));
+    for (cause, n) in causes {
+        out.push_str(&format!("  {cause:<14} {n:>6}\n"));
+    }
+}
+
+/// Human-readable report (the `trace-summarize` stdout).
+pub fn render(s: &TraceSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} events over {:.2} h sim-time\n",
+        s.events,
+        s.horizon_s / 3600.0
+    ));
+    if !s.lifecycle.is_empty() {
+        out.push_str("job lifecycle:\n");
+        for (name, n) in &s.lifecycle {
+            out.push_str(&format!("  {name:<14} {n:>6}\n"));
+        }
+    }
+    push_causes(&mut out, "plan causes", &s.plan_causes);
+    push_causes(&mut out, "re-solve causes", &s.resolve_causes);
+    if !s.phases.is_empty() {
+        out.push_str(
+            "solver phases (wall):\n  \
+             phase              count   total_ms    mean_ms\n",
+        );
+        for p in &s.phases {
+            let mean = if p.count > 0 {
+                p.total_wall_s / p.count as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  {:<18} {:>5} {:>10.2} {:>10.3}\n",
+                p.name,
+                p.count,
+                p.total_wall_s * 1e3,
+                mean * 1e3
+            ));
+        }
+    }
+    push_tail(&mut out, "decision latency", &s.decision);
+    push_tail(&mut out, "solve latency", &s.solve);
+    if !s.queue_depth.is_empty() {
+        out.push_str(&format!(
+            "queue depth at plan: p50={:.0} p95={:.0} max={:.0}\n",
+            s.queue_depth.percentile(0.50),
+            s.queue_depth.percentile(0.95),
+            s.queue_depth.max()
+        ));
+    }
+    if !s.utilization.is_empty() {
+        let fleet = if s.total_gpus > 0.0 {
+            s.total_gpus
+        } else {
+            s.utilization
+                .iter()
+                .map(|&(_, b)| b)
+                .fold(1.0f64, f64::max)
+        };
+        out.push_str(&format!(
+            "utilization (mean busy GPUs, fleet {fleet:.0}):\n"
+        ));
+        for &(t0, b) in &s.utilization {
+            let frac = (b / fleet).clamp(0.0, 1.0);
+            let bar = "#".repeat((frac * 40.0).round() as usize);
+            out.push_str(&format!(
+                "  {:>8.2}h | {bar:<40} {b:.1}\n",
+                t0 / 3600.0
+            ));
+        }
+    }
+    out
+}
+
+/// JSON form of the report (`trace-summarize --json`).
+pub fn to_json(s: &TraceSummary) -> Json {
+    let count_map = |xs: &[(String, usize)]| {
+        Json::Obj(
+            xs.iter()
+                .map(|(k, n)| (k.clone(), Json::num(*n as f64)))
+                .collect(),
+        )
+    };
+    Json::obj(vec![
+        ("events", Json::num(s.events as f64)),
+        ("horizon_s", Json::num(s.horizon_s)),
+        ("total_gpus", Json::num(s.total_gpus)),
+        ("lifecycle", count_map(&s.lifecycle)),
+        ("plan_causes", count_map(&s.plan_causes)),
+        ("resolve_causes", count_map(&s.resolve_causes)),
+        (
+            "phases",
+            Json::arr(s.phases.iter().map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(&p.name)),
+                    ("count", Json::num(p.count as f64)),
+                    ("total_wall_s", Json::num(p.total_wall_s)),
+                ])
+            })),
+        ),
+        ("decision_s", s.decision.to_json()),
+        ("solve_s", s.solve.to_json()),
+        ("queue_depth", s.queue_depth.to_json()),
+        (
+            "utilization",
+            Json::arr(s.utilization.iter().map(|&(t, b)| {
+                Json::obj(vec![
+                    ("t_s", Json::num(t)),
+                    ("busy_gpus", Json::num(b)),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Tracer;
+
+    #[test]
+    fn summarize_minimal_journal() {
+        let t = Tracer::on();
+        t.instant(
+            "meta",
+            "run_begin",
+            Json::obj(vec![("gpus", Json::num(8.0))]),
+        );
+        t.instant("job", "arrival", Json::obj(vec![]));
+        t.begin(
+            "sched",
+            "plan",
+            Json::obj(vec![
+                ("cause", Json::str("arrival")),
+                ("pending", Json::num(1.0)),
+            ]),
+        );
+        t.end("sched", "plan", Json::obj(vec![]));
+        t.set_time(10.0);
+        t.instant(
+            "metrics",
+            "busy_gpus",
+            Json::obj(vec![("total", Json::num(4.0))]),
+        );
+        t.set_time(100.0);
+        t.instant("job", "complete", Json::obj(vec![]));
+        t.instant(
+            "meta",
+            "run_end",
+            Json::obj(vec![("makespan_s", Json::num(100.0))]),
+        );
+        let s = summarize(&t.events()).unwrap();
+        assert_eq!(s.total_gpus, 8.0);
+        assert_eq!(s.horizon_s, 100.0);
+        assert_eq!(s.plan_causes, vec![("arrival".to_string(), 1)]);
+        assert!(!s.decision.is_empty());
+        assert_eq!(s.queue_depth.count(), 1.0);
+        assert_eq!(s.utilization.len(), 12);
+        let rendered = render(&s);
+        assert!(rendered.contains("p99"));
+        assert!(rendered.contains("plan causes"));
+        let j = to_json(&s);
+        assert!(j.get("decision_s").unwrap().get("p99").is_some());
+    }
+
+    #[test]
+    fn utilization_step_integration() {
+        // busy 4 GPUs over [0,60), 8 over [60,120); horizon 120
+        let samples = vec![(0.0, 4.0), (60.0, 8.0)];
+        let tl = utilization_timeline(&samples, 120.0);
+        assert_eq!(tl.len(), 12);
+        assert!((tl[0].1 - 4.0).abs() < 1e-9);
+        assert!((tl[11].1 - 8.0).abs() < 1e-9);
+    }
+}

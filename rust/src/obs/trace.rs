@@ -1,0 +1,499 @@
+//! Flight-recorder event journal: structured spans + instants stamped
+//! with deterministic sim-time and (optionally) wall-time.
+//!
+//! The `Tracer` is the single sink every layer records through: the
+//! engine stamps job lifecycle instants, the policies stamp re-solve
+//! spans with cause attribution, and the solver stamps per-phase spans
+//! (candidate generation, LP root, branch-and-bound, rolling windows,
+//! local search). A disabled tracer (`Tracer::off()`, the default) is a
+//! `None` behind the handle — `is_enabled()` is one branch and no
+//! emission site allocates, so replays with tracing off are bit-identical
+//! to untraced runs.
+//!
+//! Determinism contract: event `t_s` comes from an internal sim-time
+//! register that only the engine advances (`set_time`), so spans emitted
+//! deep inside the solver inherit the decision's sim-time and the journal
+//! is reproducible event-for-event given the same seeds. Wall stamps are
+//! measured from the tracer's epoch and never feed back into scheduling;
+//! `Tracer::deterministic()` omits them entirely so journal BYTES are
+//! stable across machines.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Chrome `trace_event` phase: `B`egin / `E`nd spans, `I`nstants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventPhase {
+    Begin,
+    End,
+    Instant,
+}
+
+impl EventPhase {
+    pub fn code(self) -> &'static str {
+        match self {
+            EventPhase::Begin => "B",
+            EventPhase::End => "E",
+            EventPhase::Instant => "I",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventPhase> {
+        match s {
+            "B" => Some(EventPhase::Begin),
+            "E" => Some(EventPhase::End),
+            "I" => Some(EventPhase::Instant),
+            _ => None,
+        }
+    }
+}
+
+/// One journal record. `seq` is a strictly increasing emission index
+/// (ties on `t_s` are common — many events fire at one sim instant),
+/// `t_s` is deterministic sim-time, `wall_s` is optional wall-clock
+/// seconds since the tracer's epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t_s: f64,
+    pub wall_s: Option<f64>,
+    pub phase: EventPhase,
+    pub cat: String,
+    pub name: String,
+    pub args: Json,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t", Json::num(self.t_s)),
+        ];
+        if let Some(w) = self.wall_s {
+            pairs.push(("wall", Json::num(w)));
+        }
+        pairs.push(("ph", Json::str(self.phase.code())));
+        pairs.push(("cat", Json::str(&self.cat)));
+        pairs.push(("name", Json::str(&self.name)));
+        pairs.push(("args", self.args.clone()));
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent, String> {
+        let seq = v
+            .get("seq")
+            .and_then(Json::as_f64)
+            .ok_or("missing 'seq'")? as u64;
+        let t_s =
+            v.get("t").and_then(Json::as_f64).ok_or("missing 't'")?;
+        let wall_s = v.get("wall").and_then(Json::as_f64);
+        let phase = v
+            .get("ph")
+            .and_then(Json::as_str)
+            .and_then(EventPhase::parse)
+            .ok_or("bad 'ph' (want B/E/I)")?;
+        let cat = v
+            .get("cat")
+            .and_then(Json::as_str)
+            .ok_or("missing 'cat'")?
+            .to_string();
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("missing 'name'")?
+            .to_string();
+        let args =
+            v.get("args").cloned().unwrap_or(Json::obj(Vec::new()));
+        Ok(TraceEvent { seq, t_s, wall_s, phase, cat, name, args })
+    }
+}
+
+#[derive(Debug)]
+struct State {
+    now_s: f64,
+    seq: u64,
+    events: Vec<TraceEvent>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    epoch: Instant,
+    wall: bool,
+    state: Mutex<State>,
+}
+
+/// Cheap cloneable handle; clones share one journal buffer. The default
+/// (`Tracer::off()`) carries no buffer at all, so the disabled hot path
+/// is a single `Option` check.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Tracer {
+    /// Disabled sink — every emission is a no-op.
+    pub fn off() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Enabled with wall-clock stamps (CLI default for `--trace`).
+    pub fn on() -> Tracer {
+        Tracer::enabled(true)
+    }
+
+    /// Enabled WITHOUT wall stamps: journal bytes depend only on the
+    /// seeds, so two runs of the same scenario diff clean.
+    pub fn deterministic() -> Tracer {
+        Tracer::enabled(false)
+    }
+
+    fn enabled(wall: bool) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                wall,
+                state: Mutex::new(State {
+                    now_s: 0.0,
+                    seq: 0,
+                    events: Vec::new(),
+                }),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Advance the sim-time register (engine only). Clamped monotone so
+    /// stale callers can never rewind the journal clock.
+    pub fn set_time(&self, t_s: f64) {
+        if let Some(inner) = &self.inner {
+            let mut st = inner.state.lock().unwrap();
+            if t_s > st.now_s {
+                st.now_s = t_s;
+            }
+        }
+    }
+
+    fn emit(&self, phase: EventPhase, cat: &str, name: &str, args: Json) {
+        if let Some(inner) = &self.inner {
+            let wall_s = if inner.wall {
+                Some(inner.epoch.elapsed().as_secs_f64())
+            } else {
+                None
+            };
+            let mut st = inner.state.lock().unwrap();
+            let ev = TraceEvent {
+                seq: st.seq,
+                t_s: st.now_s,
+                wall_s,
+                phase,
+                cat: cat.to_string(),
+                name: name.to_string(),
+                args,
+            };
+            st.seq += 1;
+            st.events.push(ev);
+        }
+    }
+
+    /// Point event at the current sim-time.
+    pub fn instant(&self, cat: &str, name: &str, args: Json) {
+        self.emit(EventPhase::Instant, cat, name, args);
+    }
+
+    /// Open a span. Every `begin` must be matched by an `end` with the
+    /// same `(cat, name)` — `validate` enforces the pairing.
+    pub fn begin(&self, cat: &str, name: &str, args: Json) {
+        self.emit(EventPhase::Begin, cat, name, args);
+    }
+
+    pub fn end(&self, cat: &str, name: &str, args: Json) {
+        self.emit(EventPhase::End, cat, name, args);
+    }
+
+    /// Snapshot of the journal so far.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => inner.state.lock().unwrap().events.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Drain the journal (leaves seq/time registers running).
+    pub fn take(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => {
+                std::mem::take(&mut inner.state.lock().unwrap().events)
+            }
+            None => Vec::new(),
+        }
+    }
+}
+
+/// One line per event; the canonical on-disk journal format.
+pub fn write_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL journal; empty lines are skipped, errors carry the
+/// 1-based line number.
+pub fn parse_jsonl(s: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut out = Vec::new();
+    for (i, line) in s.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(
+            TraceEvent::from_json(&v)
+                .map_err(|e| format!("line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Chrome `trace_event` JSON (Perfetto-loadable). All events land on the
+/// sim timeline (pid 0 / tid 0, microseconds of sim-time); span events
+/// that carry wall stamps are duplicated on a wall-clock track (tid 1)
+/// so solver phases can be read in real milliseconds too.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut arr = Vec::new();
+    for e in events {
+        arr.push(Json::obj(vec![
+            ("name", Json::str(&e.name)),
+            ("cat", Json::str(&e.cat)),
+            ("ph", Json::str(e.phase.code())),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(e.t_s * 1e6)),
+            ("args", e.args.clone()),
+        ]));
+        let wall_dup =
+            e.wall_s.filter(|_| e.phase != EventPhase::Instant);
+        if let Some(w) = wall_dup {
+            arr.push(Json::obj(vec![
+                ("name", Json::str(&e.name)),
+                ("cat", Json::str(&e.cat)),
+                ("ph", Json::str(e.phase.code())),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(1.0)),
+                ("ts", Json::num(w * 1e6)),
+                ("args", e.args.clone()),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// A paired begin/end span recovered from the journal.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub cat: String,
+    pub name: String,
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub wall0_s: Option<f64>,
+    pub wall1_s: Option<f64>,
+    /// Nesting depth at `begin` (0 = top-level span).
+    pub depth: usize,
+    pub args: Json,
+    pub end_args: Json,
+}
+
+impl Span {
+    /// Wall duration when both stamps are present.
+    pub fn wall_dur_s(&self) -> Option<f64> {
+        match (self.wall0_s, self.wall1_s) {
+            (Some(a), Some(b)) => Some(b - a),
+            _ => None,
+        }
+    }
+}
+
+/// Pair up begin/end events (strict stack discipline per journal order).
+/// Returned in END order. Errors on mismatched or unbalanced spans.
+pub fn paired_spans(events: &[TraceEvent]) -> Result<Vec<Span>, String> {
+    let mut stack: Vec<&TraceEvent> = Vec::new();
+    let mut out = Vec::new();
+    for e in events {
+        match e.phase {
+            EventPhase::Begin => stack.push(e),
+            EventPhase::End => {
+                let b = stack.pop().ok_or_else(|| {
+                    format!(
+                        "seq {}: end {}/{} with no open span",
+                        e.seq, e.cat, e.name
+                    )
+                })?;
+                if b.cat != e.cat || b.name != e.name {
+                    return Err(format!(
+                        "seq {}: end {}/{} closes {}/{}",
+                        e.seq, e.cat, e.name, b.cat, b.name
+                    ));
+                }
+                out.push(Span {
+                    cat: b.cat.clone(),
+                    name: b.name.clone(),
+                    t0_s: b.t_s,
+                    t1_s: e.t_s,
+                    wall0_s: b.wall_s,
+                    wall1_s: e.wall_s,
+                    depth: stack.len(),
+                    args: b.args.clone(),
+                    end_args: e.args.clone(),
+                });
+            }
+            EventPhase::Instant => {}
+        }
+    }
+    if let Some(b) = stack.pop() {
+        return Err(format!(
+            "unclosed span {}/{} (seq {})",
+            b.cat, b.name, b.seq
+        ));
+    }
+    Ok(out)
+}
+
+/// Journal invariants: strictly increasing `seq`, monotone sim-time,
+/// monotone wall-time, balanced spans.
+pub fn validate(events: &[TraceEvent]) -> Result<(), String> {
+    let mut last_seq: Option<u64> = None;
+    let mut last_t = f64::NEG_INFINITY;
+    let mut last_wall = f64::NEG_INFINITY;
+    for e in events {
+        if let Some(s) = last_seq {
+            if e.seq <= s {
+                return Err(format!(
+                    "seq not increasing: {} after {s}",
+                    e.seq
+                ));
+            }
+        }
+        last_seq = Some(e.seq);
+        if e.t_s < last_t {
+            return Err(format!(
+                "sim-time rewound at seq {}: {} < {last_t}",
+                e.seq, e.t_s
+            ));
+        }
+        last_t = e.t_s;
+        if let Some(w) = e.wall_s {
+            if w < last_wall {
+                return Err(format!(
+                    "wall-time rewound at seq {}: {w} < {last_wall}",
+                    e.seq
+                ));
+            }
+            last_wall = w;
+        }
+    }
+    paired_spans(events)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_tracer_is_inert() {
+        let t = Tracer::off();
+        assert!(!t.is_enabled());
+        t.set_time(5.0);
+        t.instant("a", "b", Json::obj(vec![]));
+        t.begin("a", "b", Json::obj(vec![]));
+        t.end("a", "b", Json::obj(vec![]));
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn spans_pair_and_validate() {
+        let t = Tracer::deterministic();
+        t.set_time(1.0);
+        t.begin("solver", "solve", Json::obj(vec![]));
+        t.begin("solver", "lp_root", Json::obj(vec![]));
+        t.end("solver", "lp_root", Json::obj(vec![]));
+        t.set_time(2.0);
+        t.instant("job", "complete", Json::obj(vec![]));
+        t.end("solver", "solve", Json::obj(vec![]));
+        let evs = t.events();
+        validate(&evs).unwrap();
+        let spans = paired_spans(&evs).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "lp_root");
+        assert_eq!(spans[0].depth, 1);
+        assert_eq!(spans[1].name, "solve");
+        assert_eq!(spans[1].depth, 0);
+        assert_eq!(spans[1].t0_s, 1.0);
+        assert_eq!(spans[1].t1_s, 2.0);
+    }
+
+    #[test]
+    fn unbalanced_spans_rejected() {
+        let t = Tracer::deterministic();
+        t.begin("a", "x", Json::obj(vec![]));
+        assert!(validate(&t.events()).is_err());
+        let t2 = Tracer::deterministic();
+        t2.begin("a", "x", Json::obj(vec![]));
+        t2.end("a", "y", Json::obj(vec![]));
+        assert!(validate(&t2.events()).is_err());
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let t = Tracer::on();
+        t.set_time(0.5);
+        t.begin(
+            "sched",
+            "plan",
+            Json::obj(vec![("cause", Json::str("arrival"))]),
+        );
+        t.end(
+            "sched",
+            "plan",
+            Json::obj(vec![("launches", Json::num(3.0))]),
+        );
+        t.instant("job", "launch", Json::obj(vec![]));
+        let evs = t.events();
+        let text = write_jsonl(&evs);
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(evs, back);
+    }
+
+    #[test]
+    fn set_time_is_monotone() {
+        let t = Tracer::deterministic();
+        t.set_time(3.0);
+        t.set_time(1.0); // stale caller must not rewind
+        t.instant("a", "b", Json::obj(vec![]));
+        assert_eq!(t.events()[0].t_s, 3.0);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let t = Tracer::on();
+        t.begin("solver", "solve", Json::obj(vec![]));
+        t.end("solver", "solve", Json::obj(vec![]));
+        t.instant("job", "arrival", Json::obj(vec![]));
+        let v = chrome_trace(&t.events());
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 span events duplicated on the wall track + 1 instant
+        assert_eq!(evs.len(), 5);
+        assert!(evs.iter().all(|e| e.get("ph").is_some()));
+    }
+}

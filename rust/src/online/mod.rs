@@ -48,6 +48,11 @@ pub struct OnlineMetrics {
     pub preemptions: usize,
     pub migrations: usize,
     pub decision_s: f64,
+    /// Median per-`plan()` decision latency (wall seconds; 0 when no
+    /// decisions were timed).
+    pub decision_p50_s: f64,
+    /// p99 per-`plan()` decision latency (wall seconds).
+    pub decision_p99_s: f64,
     /// Joint re-solves (Saturn only).
     pub solves: Option<usize>,
     /// Warm-started re-solves among them (Saturn only).
@@ -88,6 +93,8 @@ impl OnlineMetrics {
             ("preemptions", Json::num(self.preemptions as f64)),
             ("migrations", Json::num(self.migrations as f64)),
             ("decision_s", Json::num(self.decision_s)),
+            ("decision_p50_s", Json::num(self.decision_p50_s)),
+            ("decision_p99_s", Json::num(self.decision_p99_s)),
             ("solves", match self.solves {
                 Some(s) => Json::num(s as f64),
                 None => Json::Null,
@@ -161,19 +168,34 @@ pub fn run_trace_obj(trace: &Trace, rungs: Option<&RungConfig>,
                      objective: Objective)
     -> (OnlineSimResult, OnlineMetrics) {
     let cfg = SimConfig { objective, ..SimConfig::default() };
+    run_trace_sim(trace, rungs, perf, cluster, system, mode,
+                  drift_threshold, &cfg)
+}
+
+/// As [`run_trace_obj`], against an explicit engine [`SimConfig`] — the
+/// flight-recorder path (`saturn online --trace`) routes here so the
+/// `SimConfig::trace` handle reaches the engine and every policy. With
+/// the default config this reproduces [`run_trace_obj`] bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
+                     perf: &mut PerfModel, cluster: &ClusterSpec,
+                     system: &str, mode: SolverMode,
+                     drift_threshold: Option<Option<f64>>,
+                     cfg: &SimConfig)
+    -> (OnlineSimResult, OnlineMetrics) {
     // Saturn-only diagnostics:
     // (solves, warm solves, basis hit rate, pivots, drift re-solves)
     let (result, sys, solver_probe) = match system {
         "online-current-practice" => {
             let mut p = OnlineCurrentPractice;
             let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
-                                         &mut p, &cfg);
+                                         &mut p, cfg);
             (r, ONLINE_SYSTEMS[0], None)
         }
         "online-optimus" => {
             let mut p = OnlineOptimus::default();
             let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
-                                         &mut p, &cfg);
+                                         &mut p, cfg);
             (r, ONLINE_SYSTEMS[1], None)
         }
         "online-saturn" => {
@@ -182,7 +204,7 @@ pub fn run_trace_obj(trace: &Trace, rungs: Option<&RungConfig>,
                 p.drift_threshold = th;
             }
             let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
-                                         &mut p, &cfg);
+                                         &mut p, cfg);
             let probe = (p.solves(), p.warm_solves(), p.warm_hit_rate(),
                          p.total_stats.lp_pivots, p.drift_resolves);
             (r, ONLINE_SYSTEMS[2], Some(probe))
@@ -217,6 +239,8 @@ pub fn run_trace_obj(trace: &Trace, rungs: Option<&RungConfig>,
         preemptions: result.preemptions,
         migrations: result.migrations,
         decision_s: result.policy_decision_s,
+        decision_p50_s: result.decision_p50_s,
+        decision_p99_s: result.decision_p99_s,
         solves: solver_probe.map(|p| p.0),
         warm_solves: solver_probe.map(|p| p.1),
         warm_hit_rate: solver_probe.map(|p| p.2),

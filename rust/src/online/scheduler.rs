@@ -16,8 +16,9 @@ use crate::saturn::introspect::{apply_migration_hysteresis,
                                 drift_resolve_due, launch_from_plan,
                                 objective_terms, DEFAULT_DRIFT_THRESHOLD};
 use crate::saturn::plan::SaturnPlan;
-use crate::saturn::solver::{solve_joint_obj, SolverMode, SolverStats};
+use crate::saturn::solver::{solve_joint_traced, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::util::json::Json;
 
 pub struct OnlineSaturn {
     mode: SolverMode,
@@ -168,10 +169,40 @@ impl Policy for OnlineSaturn {
             self.mode
         };
         let terms = objective_terms(ctx, &remaining);
-        let (mut plan, stats) = solve_joint_obj(&remaining, ctx.profiles,
-                                                ctx.cluster, mode, 1.0,
-                                                warm, ctx.objective,
-                                                &terms);
+        if ctx.trace.is_enabled() {
+            // refine the engine-attributed cause: a re-solve forced by
+            // the drift alarm alone (the cache still covers everything
+            // and introspection is not due) is a drift-alarm episode
+            let cause = if drift_due && cache_ok && !introspect_due {
+                "drift-alarm"
+            } else {
+                ctx.cause.name()
+            };
+            ctx.trace.begin(
+                "solver",
+                "resolve",
+                Json::obj(vec![
+                    ("policy", Json::str("online-saturn")),
+                    ("cause", Json::str(cause)),
+                    ("jobs", Json::num(remaining.len() as f64)),
+                    ("warm", Json::Bool(warm.is_some())),
+                ]),
+            );
+        }
+        let (mut plan, stats) = solve_joint_traced(&remaining, ctx.profiles,
+                                                   ctx.cluster, mode, 1.0,
+                                                   warm, ctx.objective,
+                                                   &terms, ctx.trace);
+        if ctx.trace.is_enabled() {
+            ctx.trace.end(
+                "solver",
+                "resolve",
+                Json::obj(vec![
+                    ("nodes", Json::num(stats.milp_nodes as f64)),
+                    ("wall_s", Json::num(stats.wall_s)),
+                ]),
+            );
+        }
         apply_migration_hysteresis(&mut plan, ctx, &remaining,
                                    self.migration_threshold);
         if stats.warm_used {

@@ -7,8 +7,9 @@ use std::time::Instant;
 
 use crate::objective::JobTerms;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
-use crate::saturn::solver::{solve_joint_obj, SolverMode, SolverStats};
+use crate::saturn::solver::{solve_joint_traced, SolverMode, SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::util::json::Json;
 
 /// Realize launches from a cached plan: pending jobs only, first-fit with
 /// backfill against a scratch copy of the free state.
@@ -259,10 +260,40 @@ impl Policy for SaturnPolicy {
         }
 
         let terms = objective_terms(ctx, &remaining);
-        let (mut plan, stats) = solve_joint_obj(&remaining, ctx.profiles,
-                                                ctx.cluster, self.mode,
-                                                self.lookahead, None,
-                                                ctx.objective, &terms);
+        if ctx.trace.is_enabled() {
+            // drift-alarm re-solves are the ones the coverage/interval
+            // triggers would NOT have fired on their own
+            let cause = if drift_due && cache_covers && !introspect_due {
+                "drift-alarm"
+            } else {
+                ctx.cause.name()
+            };
+            ctx.trace.begin(
+                "solver",
+                "resolve",
+                Json::obj(vec![
+                    ("policy", Json::str("saturn")),
+                    ("cause", Json::str(cause)),
+                    ("jobs", Json::num(remaining.len() as f64)),
+                    ("warm", Json::Bool(false)),
+                ]),
+            );
+        }
+        let (mut plan, stats) = solve_joint_traced(&remaining, ctx.profiles,
+                                                   ctx.cluster, self.mode,
+                                                   self.lookahead, None,
+                                                   ctx.objective, &terms,
+                                                   ctx.trace);
+        if ctx.trace.is_enabled() {
+            ctx.trace.end(
+                "solver",
+                "resolve",
+                Json::obj(vec![
+                    ("nodes", Json::num(stats.milp_nodes as f64)),
+                    ("wall_s", Json::num(stats.wall_s)),
+                ]),
+            );
+        }
         self.pressure.0 += stats.lp_capped;
         self.pressure.1 += stats.limit_reached;
         self.last_stats = stats;

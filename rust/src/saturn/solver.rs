@@ -48,12 +48,14 @@ use std::time::Instant;
 
 use crate::cluster::ClusterSpec;
 use crate::objective::{JobTerms, Objective};
+use crate::obs::trace::Tracer;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
 use crate::sim::placement::FreeState;
 use crate::solver::lp::{Cmp, Lp};
 use crate::solver::milp::{solve as milp_solve, solve_with_stats,
                           MilpEngine, MilpOptions, MilpResult};
 use crate::trials::ProfileTable;
+use crate::util::json::Json;
 
 /// Above this many jobs the coordinate-descent schedule repair is skipped:
 /// each sweep re-simulates O(jobs x alternatives) list schedules, which
@@ -231,7 +233,46 @@ pub fn solve_joint_obj(
     objective: Objective,
     terms: &[JobTerms],
 ) -> (SaturnPlan, SolverStats) {
+    solve_joint_traced(jobs, profiles, cluster, mode, lookahead, warm,
+                       objective, terms, &Tracer::off())
+}
+
+/// [`solve_joint_obj`] with a flight-recorder sink: per-phase spans
+/// (candidate generation, plan selection — with LP-root/branch-and-bound
+/// sub-spans from the MILP engine and per-window spans under rolling
+/// horizon — list scheduling, local search) land on `trace`. With the
+/// tracer off this IS `solve_joint_obj`: every emission is one branch.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_joint_traced(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+    lookahead: f64,
+    warm: Option<&SaturnPlan>,
+    objective: Objective,
+    terms: &[JobTerms],
+    trace: &Tracer,
+) -> (SaturnPlan, SolverStats) {
     let start = Instant::now();
+    let traced = trace.is_enabled();
+    if traced {
+        let mode_name = match mode {
+            SolverMode::Joint => "joint",
+            SolverMode::Heuristic => "heuristic",
+            SolverMode::ExactSlots { .. } => "exact",
+            SolverMode::RollingHorizon { .. } => "rolling",
+        };
+        trace.begin(
+            "solver",
+            "solve",
+            Json::obj(vec![
+                ("jobs", Json::num(jobs.len() as f64)),
+                ("mode", Json::str(mode_name)),
+            ]),
+        );
+        trace.begin("solver", "candidates", Json::obj(Vec::new()));
+    }
     if let Err(e) = check_fleet_feasibility(jobs, profiles, cluster) {
         panic!("{e}");
     }
@@ -240,6 +281,15 @@ pub fn solve_joint_obj(
     let plans = expand_plans(jobs, profiles);
     let g_class = class_capacities(cluster);
     let obj = ObjSpec::new(objective, terms);
+    if traced {
+        let cands: usize = plans.iter().map(|(_, ps)| ps.len()).sum();
+        trace.end(
+            "solver",
+            "candidates",
+            Json::obj(vec![("plans", Json::num(cands as f64))]),
+        );
+        trace.begin("solver", "plan_selection", Json::obj(Vec::new()));
+    }
     // the greedy heuristic optimizes makespan only — never silently:
     // a user who asked for tardiness/wjct and lands here (explicitly
     // via --mode greedy, or through an MILP fallback) is told that
@@ -260,7 +310,7 @@ pub fn solve_joint_obj(
         SolverMode::Heuristic => greedy(),
         SolverMode::Joint => {
             match milp_choice(&plans, &g_class, kappa, warm, &obj,
-                              &mut stats) {
+                              trace, &mut stats) {
                 Some(c) => c,
                 None => greedy(), // fallback
             }
@@ -269,30 +319,72 @@ pub fn solve_joint_obj(
             // the exact time-indexed oracle stays makespan-only (small
             // validation instances; the objective axis is exercised
             // through the decomposition)
-            match exact_slot_choice(&plans, cluster, slots, &mut stats) {
+            match exact_slot_choice(&plans, cluster, slots, trace,
+                                    &mut stats) {
                 Some(c) => c,
                 None => greedy(),
             }
         }
         SolverMode::RollingHorizon { window, overlap } => {
             match rolling_choice(&plans, &g_class, kappa, warm, window,
-                                 overlap, &obj, &mut stats) {
+                                 overlap, &obj, trace, &mut stats) {
                 Some(c) => c,
                 None => greedy(),
             }
         }
     };
+    if traced {
+        trace.end(
+            "solver",
+            "plan_selection",
+            Json::obj(vec![(
+                "chosen",
+                Json::num(choices.len() as f64),
+            )]),
+        );
+        trace.begin("solver", "schedule", Json::obj(Vec::new()));
+    }
 
     let mut plan = build_schedule(choices, cluster);
+    if traced {
+        trace.end(
+            "solver",
+            "schedule",
+            Json::obj(vec![(
+                "makespan_s",
+                Json::num(plan.predicted_makespan_s),
+            )]),
+        );
+    }
     if kappa <= 1.0 + 1e-9
         && plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS
         && obj.makespan_like()
     {
         // static plans: repair against the realized list schedule (a
         // makespan-currency sweep, so only on makespan-like solves)
+        if traced {
+            trace.begin("solver", "local_search", Json::obj(Vec::new()));
+        }
         local_search(&mut plan, &plans, cluster);
+        if traced {
+            trace.end(
+                "solver",
+                "local_search",
+                Json::obj(vec![(
+                    "makespan_s",
+                    Json::num(plan.predicted_makespan_s),
+                )]),
+            );
+        }
     }
     stats.wall_s = start.elapsed().as_secs_f64();
+    if traced {
+        trace.end(
+            "solver",
+            "solve",
+            Json::obj(vec![("wall_s", Json::num(stats.wall_s))]),
+        );
+    }
     (plan, stats)
 }
 
@@ -381,7 +473,8 @@ pub fn solve_joint_reference(
     let zeros = vec![0.0; g_class.len()];
     let choices = match plan_selection_with_engine(
         &plans, &g_class, 1.0, 0.0, &zeros, None, 20_000, 10.0, 0.01,
-        MilpEngine::DenseReference, &ObjSpec::makespan(), 0.0, &mut stats)
+        MilpEngine::DenseReference, &ObjSpec::makespan(), 0.0,
+        &Tracer::off(), &mut stats)
     {
         Some(c) => c,
         None => greedy_choice(&plans, &g_class, 1.0),
@@ -412,7 +505,7 @@ pub fn plan_selection_probe(
     let zeros = vec![0.0; g_class.len()];
     let choices = plan_selection_with_engine(
         &plans, &g_class, 1.0, 0.0, &zeros, None, 200_000, 120.0, 1e-6,
-        engine, &ObjSpec::makespan(), 0.0, &mut stats)?;
+        engine, &ObjSpec::makespan(), 0.0, &Tracer::off(), &mut stats)?;
     stats.wall_s = start.elapsed().as_secs_f64();
     Some((probe_objective(&choices, &g_class), stats))
 }
@@ -449,7 +542,7 @@ pub fn plan_selection_probe_pooled(
     let zeros = vec![0.0];
     let choices = plan_selection_with_engine(
         &plans, &g_class, 1.0, 0.0, &zeros, None, 200_000, 120.0, 1e-6,
-        engine, &ObjSpec::makespan(), 0.0, &mut stats)?;
+        engine, &ObjSpec::makespan(), 0.0, &Tracer::off(), &mut stats)?;
     stats.wall_s = start.elapsed().as_secs_f64();
     Some((probe_objective(&choices, &g_class), stats))
 }
@@ -473,17 +566,19 @@ fn probe_objective(choices: &[JobPlan], g_class: &[f64]) -> f64 {
 // Level 1: plan selection
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn milp_choice(
     plans: &[(usize, Vec<Cand>)],
     g_class: &[f64],
     kappa: f64,
     warm: Option<&SaturnPlan>,
     obj: &ObjSpec,
+    trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     let zeros = vec![0.0; g_class.len()];
     plan_selection_milp(plans, g_class, kappa, 0.0, &zeros, warm,
-                        20_000, 10.0, obj, 0.0, stats)
+                        20_000, 10.0, obj, 0.0, trace, stats)
 }
 
 /// The plan-selection MILP over one slice of jobs. `m_floor` and
@@ -507,12 +602,13 @@ fn plan_selection_milp(
     time_limit_s: f64,
     obj: &ObjSpec,
     completion_offset: f64,
+    trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     plan_selection_with_engine(plans, g_class, kappa, m_floor, fixed_area,
                                warm, max_nodes, time_limit_s, 0.01,
                                MilpEngine::Revised, obj, completion_offset,
-                               stats)
+                               trace, stats)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -529,6 +625,7 @@ fn plan_selection_with_engine(
     engine: MilpEngine,
     obj: &ObjSpec,
     completion_offset: f64,
+    trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     debug_assert_eq!(g_class.len(), fixed_area.len());
@@ -721,6 +818,7 @@ fn plan_selection_with_engine(
         // re-solves already prune from a seeded incumbent, and k > 0
         // would perturb the bit-exact makespan replays the benches pin
         strong_branch_k: 0,
+        trace: trace.clone(),
     };
     let (result, milp_stats) = solve_with_stats(&lp, &ints, &opts);
     stats.absorb(&milp_stats);
@@ -779,6 +877,7 @@ fn rolling_choice(
     window: usize,
     overlap: usize,
     obj: &ObjSpec,
+    trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     let window = window.max(2);
@@ -832,9 +931,34 @@ fn rolling_choice(
             .zip(g_class)
             .map(|(a, g)| a / g.max(1e-9))
             .fold(0.0f64, f64::max);
-        let picks = plan_selection_milp(&slice, g_class, kappa, m_floor,
-                                        &fixed_area, warm, 4_000, 2.0,
-                                        obj, completion_offset, stats)?;
+        if trace.is_enabled() {
+            trace.begin(
+                "solver",
+                "window",
+                Json::obj(vec![
+                    ("index", Json::num(stats.windows as f64)),
+                    ("jobs", Json::num(slice.len() as f64)),
+                ]),
+            );
+        }
+        let picks = match plan_selection_milp(
+            &slice, g_class, kappa, m_floor, &fixed_area, warm, 4_000,
+            2.0, obj, completion_offset, trace, stats)
+        {
+            Some(p) => p,
+            None => {
+                // keep the span balanced before bubbling the failure
+                // up to the greedy fallback
+                if trace.is_enabled() {
+                    trace.end(
+                        "solver",
+                        "window",
+                        Json::obj(vec![("failed", Json::Bool(true))]),
+                    );
+                }
+                return None;
+            }
+        };
         stats.windows += 1;
         // commit everything except the overlap tail (the final window
         // commits everything)
@@ -850,6 +974,13 @@ fn rolling_choice(
             chosen[ji] = Some(jp);
         }
         k += commit;
+        if trace.is_enabled() {
+            trace.end(
+                "solver",
+                "window",
+                Json::obj(vec![("committed", Json::num(commit as f64))]),
+            );
+        }
     }
     chosen.into_iter().collect()
 }
@@ -911,6 +1042,7 @@ fn exact_slot_choice(
     plans: &[(usize, Vec<Cand>)],
     cluster: &ClusterSpec,
     slots: usize,
+    trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
     let g_class = class_capacities(cluster);
@@ -991,6 +1123,7 @@ fn exact_slot_choice(
         gap: 1e-3,
         max_nodes: 50_000,
         time_limit_s: 20.0,
+        trace: trace.clone(),
         ..Default::default()
     };
     match milp_solve(&lp, &ints, &opts) {

@@ -26,11 +26,16 @@
 
 use crate::cluster::ClusterSpec;
 use crate::objective::Objective;
+use crate::obs::metrics::Histogram;
+use crate::obs::trace::Tracer;
 use crate::perf::{Observation, PerfModel};
 use crate::sim::placement::{FreeState, Placement};
 use crate::trials::ProfileTable;
+use crate::util::json::Json;
 use crate::workload::arrivals::OnlineJob;
 use crate::workload::Job;
+
+use std::time::Instant;
 
 /// A policy's decision: run `job_id` with `tech` on `gpus` GPUs of one
 /// GPU `class`.
@@ -97,6 +102,40 @@ impl JobProgress {
     }
 }
 
+/// Why the engine is asking the policy to (re)plan right now — the
+/// flight recorder's cause attribution for re-solve episodes. When an
+/// instant carries several event kinds the strongest wins
+/// (introspection > arrival > departure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanCause {
+    /// The t=0 planning call.
+    Initial,
+    /// A job arrived at this instant.
+    Arrival,
+    /// A job departed (completion or rung kill) at this instant.
+    Departure,
+    /// A periodic introspection point (preempt-everything replan).
+    Introspection,
+    /// Nothing runnable: the engine force-planned to avoid deadlock.
+    Idle,
+    /// An event instant that changed no membership (e.g. a surviving
+    /// rung crossing).
+    Tick,
+}
+
+impl ReplanCause {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanCause::Initial => "initial",
+            ReplanCause::Arrival => "arrival",
+            ReplanCause::Departure => "departure",
+            ReplanCause::Introspection => "introspection",
+            ReplanCause::Idle => "idle",
+            ReplanCause::Tick => "tick",
+        }
+    }
+}
+
 /// Everything a policy may look at when planning. `profiles` is the
 /// planner-facing ESTIMATE table (the perf layer's belief, never the
 /// truth) — Saturn and every baseline observe the cluster through the
@@ -119,6 +158,11 @@ pub struct PlanContext<'a> {
     /// Worst current |ln(observed/estimated)| across jobs' latest
     /// observations — zero while estimates are perfect (e.g. no drift).
     pub drift_alarm: f64,
+    /// Why this planning call fired (trace cause attribution).
+    pub cause: ReplanCause,
+    /// Flight-recorder sink ([`SimConfig::trace`]); policies stamp
+    /// re-solve spans through it. Off (no-op) by default.
+    pub trace: &'a Tracer,
 }
 
 /// Scheduling policy plugged into the simulator (Saturn + all baselines).
@@ -175,6 +219,10 @@ pub struct SimConfig {
     /// Scheduling objective handed to every policy via
     /// [`PlanContext::objective`] (see `objective::Objective`).
     pub objective: Objective,
+    /// Flight-recorder sink. `Tracer::off()` (the default) makes every
+    /// emission a no-op and keeps replays bit-identical to untraced
+    /// builds; wall stamps never feed back into scheduling decisions.
+    pub trace: Tracer,
 }
 
 impl Default for SimConfig {
@@ -183,6 +231,7 @@ impl Default for SimConfig {
             checkpoint_penalty_s: 60.0,
             max_virtual_time_s: 1e9,
             objective: Objective::Makespan,
+            trace: Tracer::off(),
         }
     }
 }
@@ -249,6 +298,12 @@ pub struct OnlineSimResult {
     pub peak_gpus: u32,
     pub launches: usize,
     pub policy_decision_s: f64,
+    /// Median / 99th-percentile wall latency of a single policy
+    /// decision (`Policy::plan` call), from the engine's log-bucketed
+    /// histogram — the ROADMAP's service-loop metric. 0.0 when the
+    /// policy was never called.
+    pub decision_p50_s: f64,
+    pub decision_p99_s: f64,
     /// Node LPs that hit the simplex iteration cap across the policy's
     /// solves ([`Policy::solver_pressure`]) — solver stress under
     /// event-rate re-solving, not silent degradation.
@@ -356,10 +411,33 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
     let mut cohorts: Vec<Vec<Vec<f64>>> =
         vec![vec![Vec::new(); n_rungs]; n_groups];
 
+    let trace = &cfg.trace;
+    let mut decision = Histogram::new();
+
     // initial plan over the jobs already arrived at t=0
     perf.refresh(now);
+    if trace.is_enabled() {
+        trace.set_time(now);
+        trace.instant(
+            "meta",
+            "run_begin",
+            Json::obj(vec![
+                ("policy", Json::str(policy.name())),
+                ("jobs", Json::num(state.len() as f64)),
+                ("gpus", Json::num(cluster.total_gpus() as f64)),
+            ]),
+        );
+        for s in state.iter().filter(|s| s.arrived) {
+            trace.instant(
+                "job",
+                "arrival",
+                Json::obj(vec![("job", Json::num(s.job.id as f64))]),
+            );
+        }
+    }
     apply_plan(policy, &mut state, &mut free, perf, cluster, now,
-               &mut launches, &mut migrations, cfg);
+               &mut launches, &mut migrations, cfg,
+               ReplanCause::Initial, &mut decision);
 
     let max_iters = 400_000;
     for _ in 0..max_iters {
@@ -391,7 +469,8 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             let before = launches;
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
-                       &mut launches, &mut migrations, cfg);
+                       &mut launches, &mut migrations, cfg,
+                       ReplanCause::Idle, &mut decision);
             if launches == before {
                 panic!(
                     "policy '{}' deadlocked at t={now:.1}s with {} pending jobs",
@@ -411,8 +490,34 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             .sum();
         peak_gpus = peak_gpus.max(busy);
         busy_gpu_seconds += busy as f64 * (t_next - now);
+        if trace.is_enabled() {
+            // sample holds over [now, t_next): stamp the interval start
+            let mut by_class = vec![0u32; cluster.n_classes()];
+            for r in state.iter().filter_map(|s| s.running.as_ref()) {
+                by_class[r.class] += r.gpus;
+            }
+            trace.instant(
+                "metrics",
+                "busy_gpus",
+                Json::obj(vec![
+                    ("total", Json::num(busy as f64)),
+                    (
+                        "by_class",
+                        Json::arr(
+                            by_class
+                                .iter()
+                                .map(|&g| Json::num(g as f64)),
+                        ),
+                    ),
+                ]),
+            );
+        }
         now = t_next;
-        let mut set_changed = false; // any arrival/departure at this instant
+        if trace.is_enabled() {
+            trace.set_time(now);
+        }
+        let mut arrived_now = false;
+        let mut departed_now = false;
 
         // (1) completions due now
         for s in state.iter_mut() {
@@ -430,7 +535,17 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                     perf.observe(&o);
                 }
                 perf.retire_job(s.job.id);
-                set_changed = true;
+                departed_now = true;
+                if trace.is_enabled() {
+                    trace.instant(
+                        "job",
+                        "complete",
+                        Json::obj(vec![(
+                            "job",
+                            Json::num(s.job.id as f64),
+                        )]),
+                    );
+                }
             }
         }
 
@@ -467,7 +582,17 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                         s.finished_at = Some(now);
                         s.early_stopped = true;
                         perf.retire_job(s.job.id);
-                        set_changed = true;
+                        departed_now = true;
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "job",
+                                "rung_kill",
+                                Json::obj(vec![
+                                    ("job", Json::num(s.job.id as f64)),
+                                    ("rung", Json::num(rung as f64)),
+                                ]),
+                            );
+                        }
                     } else if let Some(r) = s.running.as_mut() {
                         // survivor at a rung boundary: the natural point
                         // a real system reads step timings — observe the
@@ -478,6 +603,16 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                             perf.observe(&o);
                             r.observed_s = now - r.resume_at;
                         }
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "job",
+                                "rung_cross",
+                                Json::obj(vec![
+                                    ("job", Json::num(s.job.id as f64)),
+                                    ("rung", Json::num(rung as f64)),
+                                ]),
+                            );
+                        }
                     }
                 }
             }
@@ -487,13 +622,34 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         for s in state.iter_mut() {
             if !s.arrived && s.arrival_s <= now + 1e-9 {
                 s.arrived = true;
-                set_changed = true;
+                arrived_now = true;
+                if trace.is_enabled() {
+                    trace.instant(
+                        "job",
+                        "arrival",
+                        Json::obj(vec![(
+                            "job",
+                            Json::num(s.job.id as f64),
+                        )]),
+                    );
+                }
             }
         }
 
         // (4) replan: periodic introspection always preempts everything;
         // arrival/departure events do so only when the policy opts in.
         let introspect_now = next_introspect == Some(now);
+        let set_changed = arrived_now || departed_now;
+        // strongest event at this instant wins the cause attribution
+        let cause = if introspect_now {
+            ReplanCause::Introspection
+        } else if arrived_now {
+            ReplanCause::Arrival
+        } else if departed_now {
+            ReplanCause::Departure
+        } else {
+            ReplanCause::Tick
+        };
         if introspect_now || (set_changed && policy.replan_on_events()) {
             // checkpoint-everything: bank progress, mark all unfinished
             // jobs pending, let the policy replan from scratch.
@@ -509,8 +665,28 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
                     if s.remaining_steps() == 0 {
                         s.finished_at = Some(now);
                         perf.retire_job(s.job.id);
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "job",
+                                "complete",
+                                Json::obj(vec![(
+                                    "job",
+                                    Json::num(s.job.id as f64),
+                                )]),
+                            );
+                        }
                     } else {
                         s.last_alloc = Some((r.tech, r.gpus, r.class));
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "job",
+                                "preempt",
+                                Json::obj(vec![(
+                                    "job",
+                                    Json::num(s.job.id as f64),
+                                )]),
+                            );
+                        }
                     }
                 }
             }
@@ -520,12 +696,14 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             let pre_launch = snapshot_allocs(&state);
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
-                       &mut launches, &mut migrations, cfg);
+                       &mut launches, &mut migrations, cfg, cause,
+                       &mut decision);
             preemptions += count_migrations(&pre_launch, &state);
         } else {
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
-                       &mut launches, &mut migrations, cfg);
+                       &mut launches, &mut migrations, cfg, cause,
+                       &mut decision);
         }
     }
 
@@ -533,6 +711,17 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         .iter()
         .map(|s| s.finished_at.expect("all jobs finished"))
         .fold(0.0, f64::max);
+    if trace.is_enabled() {
+        trace.set_time(makespan);
+        trace.instant(
+            "meta",
+            "run_end",
+            Json::obj(vec![
+                ("makespan_s", Json::num(makespan)),
+                ("launches", Json::num(launches as f64)),
+            ]),
+        );
+    }
     let mut completed = Vec::new();
     let mut early_stopped = Vec::new();
     let mut deadline_misses = 0usize;
@@ -556,6 +745,7 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         }
     }
     let (lp_capped, milp_limit_reached) = policy.solver_pressure();
+    let finite = |x: f64| if x.is_nan() { 0.0 } else { x };
     OnlineSimResult {
         makespan_s: makespan,
         finish_times: state
@@ -579,6 +769,8 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         peak_gpus,
         launches,
         policy_decision_s: policy.decision_time_s(),
+        decision_p50_s: finite(decision.percentile(0.50)),
+        decision_p99_s: finite(decision.percentile(0.99)),
         lp_capped,
         milp_limit_reached,
         observations: perf.obs_seen(),
@@ -648,7 +840,22 @@ fn count_migrations(before: &[Option<(usize, u32, usize)>],
 fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
               free: &mut FreeState, perf: &PerfModel,
               cluster: &ClusterSpec, now: f64, launches: &mut usize,
-              migrations: &mut usize, cfg: &SimConfig) {
+              migrations: &mut usize, cfg: &SimConfig,
+              cause: ReplanCause, decision: &mut Histogram) {
+    let trace = &cfg.trace;
+    if trace.is_enabled() {
+        let pending = state.iter().filter(|s| s.is_pending()).count();
+        trace.begin(
+            "sched",
+            "plan",
+            Json::obj(vec![
+                ("policy", Json::str(policy.name())),
+                ("cause", Json::str(cause.name())),
+                ("pending", Json::num(pending as f64)),
+            ]),
+        );
+    }
+    let t0 = Instant::now();
     let proposals = {
         let ctx = PlanContext {
             now,
@@ -659,9 +866,16 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
             objective: cfg.objective,
             obs_seen: perf.obs_seen(),
             drift_alarm: perf.drift_alarm(),
+            cause,
+            trace,
         };
         policy.plan(&ctx)
     };
+    // wall time of the decision only feeds telemetry, never the sim
+    let dt = t0.elapsed().as_secs_f64();
+    decision.observe(dt);
+    crate::obs::metrics::global().observe("engine.decision_s", dt);
+    let before = *launches;
     for l in proposals {
         let Some(s) = state.get_mut(l.job_id) else { continue };
         if !s.is_pending() {
@@ -710,6 +924,39 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         });
         s.last_alloc = Some((l.tech, l.gpus, l.class));
         *launches += 1;
+        if trace.is_enabled() {
+            trace.instant(
+                "job",
+                "launch",
+                Json::obj(vec![
+                    ("job", Json::num(l.job_id as f64)),
+                    ("tech", Json::num(l.tech as f64)),
+                    ("gpus", Json::num(l.gpus as f64)),
+                    ("class", Json::num(l.class as f64)),
+                    ("lag_s", Json::num(lag)),
+                ]),
+            );
+            if migrated {
+                trace.instant(
+                    "job",
+                    "migrate",
+                    Json::obj(vec![
+                        ("job", Json::num(l.job_id as f64)),
+                        ("lag_s", Json::num(lag)),
+                    ]),
+                );
+            }
+        }
+    }
+    if trace.is_enabled() {
+        trace.end(
+            "sched",
+            "plan",
+            Json::obj(vec![(
+                "launches",
+                Json::num((*launches - before) as f64),
+            )]),
+        );
     }
 }
 

@@ -29,8 +29,10 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::obs::trace::Tracer;
 use crate::solver::dense;
 use crate::solver::lp::{Basis, Lp, LpResult, Simplex, Solved};
+use crate::util::json::Json;
 use crate::util::threadpool::scope_map;
 
 /// Nodes per frontier batch. Fixed (NOT derived from `threads`) so that
@@ -70,6 +72,10 @@ pub struct MilpOptions {
     /// on the product rule's 1.0 defaults, i.e. most-fractional.
     /// Revised engine only; the seed reference ignores it.
     pub strong_branch_k: usize,
+    /// Flight-recorder handle (`obs::trace`). Off by default; when
+    /// enabled the revised engine emits `solver/lp_root` and
+    /// `solver/bnb` spans. Never affects the search itself.
+    pub trace: Tracer,
 }
 
 impl Default for MilpOptions {
@@ -82,6 +88,7 @@ impl Default for MilpOptions {
             threads: 1,
             engine: MilpEngine::Revised,
             strong_branch_k: 0,
+            trace: Tracer::default(),
         }
     }
 }
@@ -259,9 +266,30 @@ fn solve_revised(
 ) -> (MilpResult, MilpStats) {
     let start = Instant::now();
     let mut stats = MilpStats::default();
+    let traced = opts.trace.is_enabled();
+    if traced {
+        opts.trace.begin(
+            "solver",
+            "lp_root",
+            Json::obj(vec![
+                ("rows", Json::num(lp.constraints.len() as f64)),
+                ("vars", Json::num(lp.n as f64)),
+            ]),
+        );
+    }
     let sx = Simplex::new(lp);
     let root = sx.solve_cold(&lp.lower, &lp.upper);
     stats.lp_pivots += root.info.pivots;
+    if traced {
+        opts.trace.end(
+            "solver",
+            "lp_root",
+            Json::obj(vec![(
+                "pivots",
+                Json::num(root.info.pivots as f64),
+            )]),
+        );
+    }
     let root_obj = match &root.result {
         LpResult::Infeasible => {
             stats.best_bound = f64::INFINITY;
@@ -293,6 +321,9 @@ fn solve_revised(
         branched: None,
     });
 
+    if traced {
+        opts.trace.begin("solver", "bnb", Json::obj(vec![]));
+    }
     loop {
         if stats.nodes >= opts.max_nodes
             || start.elapsed().as_secs_f64() > opts.time_limit_s
@@ -454,6 +485,16 @@ fn solve_revised(
         }
     }
 
+    if traced {
+        opts.trace.end(
+            "solver",
+            "bnb",
+            Json::obj(vec![
+                ("nodes", Json::num(stats.nodes as f64)),
+                ("warm_hits", Json::num(stats.warm_hits as f64)),
+            ]),
+        );
+    }
     let proved = heap.is_empty();
     let frontier = heap.peek().map(|n| n.bound);
     let nodes = stats.nodes;

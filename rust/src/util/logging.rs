@@ -1,6 +1,13 @@
 //! Leveled stderr logger wired to the `log` crate facade.
 //!
-//! `SATURN_LOG=debug|info|warn|error` selects the level (default `info`).
+//! `SATURN_LOG` selects levels, `env_logger`-style: a bare level
+//! (`debug`) sets the default, and comma-separated
+//! `module::path=level` entries override it per module prefix —
+//! `SATURN_LOG=info,saturn::solver=debug` keeps the process at `info`
+//! while the solver logs at `debug`. Longest matching prefix wins, and
+//! a prefix only matches at a `::` boundary (`saturn::sim` does not
+//! capture `saturn::simulate`). Default `info`.
+//!
 //! Timestamps are monotonic seconds since process start — enough for
 //! correlating coordinator/executor events without pulling in `chrono`.
 
@@ -11,11 +18,75 @@ use log::{Level, LevelFilter, Metadata, Record};
 
 struct StderrLogger {
     start: Instant,
+    default: LevelFilter,
+    /// Per-module overrides, longest prefix first.
+    modules: Vec<(String, LevelFilter)>,
+}
+
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.trim() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Parse a `SATURN_LOG` spec into (default level, per-module overrides).
+/// Unrecognized fragments are ignored rather than erroring — a logging
+/// knob must never take the process down.
+fn parse_spec(spec: &str) -> (LevelFilter, Vec<(String, LevelFilter)>) {
+    let mut default = LevelFilter::Info;
+    let mut modules: Vec<(String, LevelFilter)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            None => {
+                if let Some(lvl) = parse_level(part) {
+                    default = lvl;
+                }
+            }
+            Some((module, lvl)) => {
+                if let Some(lvl) = parse_level(lvl) {
+                    let module = module.trim();
+                    if !module.is_empty() {
+                        modules.push((module.to_string(), lvl));
+                    }
+                }
+            }
+        }
+    }
+    // longest prefix first so the most specific override wins
+    modules.sort_by(|a, b| {
+        b.0.len().cmp(&a.0.len()).then_with(|| a.0.cmp(&b.0))
+    });
+    (default, modules)
+}
+
+impl StderrLogger {
+    /// Effective level for a log target: the longest module override
+    /// whose prefix matches at a path boundary, else the default.
+    fn level_for(&self, target: &str) -> LevelFilter {
+        for (prefix, lvl) in &self.modules {
+            let boundary = target.len() == prefix.len()
+                || target[prefix.len()..].starts_with("::");
+            if target.starts_with(prefix.as_str()) && boundary {
+                return *lvl;
+            }
+        }
+        self.default
+    }
 }
 
 impl log::Log for StderrLogger {
-    fn enabled(&self, _: &Metadata) -> bool {
-        true
+    fn enabled(&self, meta: &Metadata) -> bool {
+        meta.level() <= self.level_for(meta.target())
     }
 
     fn log(&self, record: &Record) {
@@ -39,25 +110,78 @@ static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger (idempotent). Called by `main.rs` and examples.
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let logger = LOGGER.get_or_init(|| {
+        let spec = std::env::var("SATURN_LOG").unwrap_or_default();
+        let (default, modules) = parse_spec(&spec);
+        StderrLogger { start: Instant::now(), default, modules }
+    });
     if log::set_logger(logger).is_ok() {
-        let level = match std::env::var("SATURN_LOG").as_deref() {
-            Ok("trace") => LevelFilter::Trace,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("error") => LevelFilter::Error,
-            _ => LevelFilter::Info,
-        };
-        log::set_max_level(level);
+        // the facade's fast-path gate must admit the most verbose
+        // module; per-target filtering happens in `enabled`
+        let max = logger
+            .modules
+            .iter()
+            .map(|&(_, lvl)| lvl)
+            .fold(logger.default, |a, b| a.max(b));
+        log::set_max_level(max);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn bare_level_sets_the_default() {
+        let (default, modules) = parse_spec("debug");
+        assert_eq!(default, LevelFilter::Debug);
+        assert!(modules.is_empty());
+    }
+
+    #[test]
+    fn per_module_overrides_parse_and_apply() {
+        let (default, modules) =
+            parse_spec("info,saturn::solver=debug,saturn=warn");
+        assert_eq!(default, LevelFilter::Info);
+        let lg = StderrLogger {
+            start: Instant::now(),
+            default,
+            modules,
+        };
+        assert_eq!(lg.level_for("saturn::solver"), LevelFilter::Debug);
+        assert_eq!(lg.level_for("saturn::solver::milp"),
+                   LevelFilter::Debug);
+        assert_eq!(lg.level_for("saturn::sim"), LevelFilter::Warn);
+        assert_eq!(lg.level_for("other::crate"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn prefixes_match_only_at_path_boundaries() {
+        let (default, modules) = parse_spec("info,saturn::sim=trace");
+        let lg = StderrLogger {
+            start: Instant::now(),
+            default,
+            modules,
+        };
+        assert_eq!(lg.level_for("saturn::sim"), LevelFilter::Trace);
+        assert_eq!(lg.level_for("saturn::sim::engine"),
+                   LevelFilter::Trace);
+        // NOT a boundary match: simulate != sim::*
+        assert_eq!(lg.level_for("saturn::simulate"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn garbage_fragments_are_ignored() {
+        let (default, modules) =
+            parse_spec("bogus,=debug,saturn=notalevel,warn");
+        assert_eq!(default, LevelFilter::Warn);
+        assert!(modules.is_empty());
     }
 }
