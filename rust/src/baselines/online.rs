@@ -13,23 +13,6 @@ use crate::baselines::current_practice::best_free_node;
 use crate::baselines::optimus::greedy_allocation;
 use crate::objective::Objective;
 use crate::sim::engine::{JobProgress, Launch, PlanContext, Policy};
-use crate::util::json::Json;
-
-/// Emit a `sched/queue` depth instant so baseline planning decisions
-/// land in the same journal as Saturn's re-solves (one branch when
-/// tracing is off).
-fn trace_queue_depth(ctx: &PlanContext, policy: &str, depth: usize) {
-    if ctx.trace.is_enabled() {
-        ctx.trace.instant(
-            "sched",
-            "queue",
-            Json::obj(vec![
-                ("policy", Json::str(policy)),
-                ("depth", Json::num(depth as f64)),
-            ]),
-        );
-    }
-}
 
 /// FIFO whole-node scheduling with tenant priorities: the highest-priority
 /// pending job (ties: earliest id = earliest arrival) takes the next free
@@ -73,7 +56,6 @@ impl Policy for OnlineCurrentPractice {
     fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
         let mut pending: Vec<_> =
             ctx.jobs.iter().filter(|s| s.is_pending()).collect();
-        trace_queue_depth(ctx, "online-current-practice", pending.len());
         pending.sort_by(|a, b| {
             let historical = b
                 .priority
@@ -118,11 +100,6 @@ impl Policy for OnlineOptimus {
     }
 
     fn plan(&mut self, ctx: &PlanContext) -> Vec<Launch> {
-        if ctx.trace.is_enabled() {
-            let depth =
-                ctx.jobs.iter().filter(|s| s.is_pending()).count();
-            trace_queue_depth(ctx, "online-optimus", depth);
-        }
         greedy_allocation(ctx)
     }
 

@@ -75,13 +75,6 @@ pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
             ("job", name) => {
                 *lifecycle.entry(name.to_string()).or_insert(0) += 1;
             }
-            ("sched", "queue") => {
-                if let Some(d) =
-                    e.args.get("depth").and_then(Json::as_f64)
-                {
-                    queue_depth.observe(d);
-                }
-            }
             ("metrics", "busy_gpus") => {
                 if let Some(b) =
                     e.args.get("total").and_then(Json::as_f64)

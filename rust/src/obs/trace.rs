@@ -181,12 +181,14 @@ impl Tracer {
 
     fn emit(&self, phase: EventPhase, cat: &str, name: &str, args: Json) {
         if let Some(inner) = &self.inner {
+            let mut st = inner.state.lock().unwrap();
+            // stamp under the lock: wall times must be monotone in seq
+            // order even with concurrent emitters (validate enforces it)
             let wall_s = if inner.wall {
                 Some(inner.epoch.elapsed().as_secs_f64())
             } else {
                 None
             };
-            let mut st = inner.state.lock().unwrap();
             let ev = TraceEvent {
                 seq: st.seq,
                 t_s: st.now_s,

@@ -74,10 +74,10 @@ impl StderrLogger {
     /// whose prefix matches at a path boundary, else the default.
     fn level_for(&self, target: &str) -> LevelFilter {
         for (prefix, lvl) in &self.modules {
-            let boundary = target.len() == prefix.len()
-                || target[prefix.len()..].starts_with("::");
-            if target.starts_with(prefix.as_str()) && boundary {
-                return *lvl;
+            if let Some(rest) = target.strip_prefix(prefix.as_str()) {
+                if rest.is_empty() || rest.starts_with("::") {
+                    return *lvl;
+                }
             }
         }
         self.default
@@ -175,6 +175,20 @@ mod tests {
                    LevelFilter::Trace);
         // NOT a boundary match: simulate != sim::*
         assert_eq!(lg.level_for("saturn::simulate"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn targets_shorter_than_a_prefix_do_not_panic() {
+        let (default, modules) = parse_spec("info,saturn::solver=debug");
+        let lg = StderrLogger {
+            start: Instant::now(),
+            default,
+            modules,
+        };
+        // shorter than the override prefix: must fall back, not slice
+        assert_eq!(lg.level_for("saturn"), LevelFilter::Info);
+        assert_eq!(lg.level_for("saturn::perf"), LevelFilter::Info);
+        assert_eq!(lg.level_for(""), LevelFilter::Info);
     }
 
     #[test]
