@@ -1,0 +1,212 @@
+//! Bench E16: failure-aware vs failure-blind scheduling (DESIGN.md
+//! §4.7).
+//!
+//! Replays the `bench_online` trace while a seeded [`FaultConfig`]
+//! kills nodes (exponential MTBF per node, transient repairs + flaky
+//! hosts) and crashes jobs, rolling victims back to their last periodic
+//! checkpoint. Sweeps per-node MTBF in {off, 2 h, 8 h} and compares
+//! online-Saturn with failure awareness ON (failure-triggered re-solves
+//! against the degraded fleet) vs OFF (the stale-plan ablation) on
+//! goodput, lost work, and recovery latency. Each faulted cell is
+//! averaged over several fault seeds so one lucky outage schedule
+//! cannot flip the comparison.
+//!
+//! The zero-fault probe runs the fault entry point on the exact
+//! `bench_online` scenario and must reproduce `BENCH_online.json`'s
+//! online-saturn makespan within 1e-6 — the fault layer is a strict
+//! generalization of the fault-free engine (asserted bitwise here, and
+//! `tests/prop_faults.rs` holds every system to it bit-for-bit).
+//!
+//! Emits `BENCH_faults.json` (override with `SATURN_BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_faults`
+
+use saturn::cluster::ClusterSpec;
+use saturn::faults::FaultConfig;
+use saturn::online::{profile_trace, run_trace_faults, run_trace_perf,
+                     OnlineMetrics};
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::SolverMode;
+use saturn::sim::engine::{RungConfig, SimConfig};
+use saturn::util::json::Json;
+use saturn::workload::{generate_trace, ArrivalProcess, Trace, TraceConfig};
+
+const MTBFS: [f64; 3] = [0.0, 2.0, 8.0];
+const FAULT_SEEDS: [u64; 3] = [1, 2, 3];
+const CHECKPOINT_S: f64 = 900.0;
+
+struct ArmMean {
+    mtbf_hours: f64,
+    aware: bool,
+    seeds: usize,
+    makespan_s: f64,
+    avg_jct_s: f64,
+    goodput: f64,
+    failures: f64,
+    fault_preemptions: f64,
+    lost_work_gpu_s: f64,
+    mean_recovery_s: f64,
+    solver_fallbacks: f64,
+}
+
+fn run_cell(trace: &Trace, rungs: &RungConfig, cluster: &ClusterSpec,
+            mut perf: PerfModel, mtbf_hours: f64, fault_seed: u64,
+            aware: bool) -> OnlineMetrics {
+    let cfg = SimConfig {
+        faults: if mtbf_hours > 0.0 {
+            FaultConfig::uniform(fault_seed, mtbf_hours)
+        } else {
+            FaultConfig::none()
+        },
+        checkpoint_interval_s: CHECKPOINT_S,
+        ..SimConfig::default()
+    };
+    let (_, m) = run_trace_faults(trace, Some(rungs), &mut perf, cluster,
+                                  SolverMode::Joint, &cfg, aware);
+    m
+}
+
+/// Mean over fault seeds of one (MTBF, awareness) arm.
+fn run_arm(trace: &Trace, rungs: &RungConfig, cluster: &ClusterSpec,
+           profiles: &saturn::trials::ProfileTable, seeds: &[u64],
+           mtbf_hours: f64, aware: bool) -> ArmMean {
+    let mut ms = Vec::new();
+    for &fs in seeds {
+        ms.push(run_cell(trace, rungs, cluster, PerfModel::exact(profiles),
+                         mtbf_hours, fs, aware));
+        if mtbf_hours == 0.0 {
+            break; // zero faults is seed-independent; one run suffices
+        }
+    }
+    let n = ms.len() as f64;
+    ArmMean {
+        mtbf_hours,
+        aware,
+        seeds: ms.len(),
+        makespan_s: ms.iter().map(|m| m.makespan_s).sum::<f64>() / n,
+        avg_jct_s: ms.iter().map(|m| m.avg_jct_s).sum::<f64>() / n,
+        goodput: ms.iter().map(|m| m.goodput).sum::<f64>() / n,
+        failures: ms.iter().map(|m| m.failures as f64).sum::<f64>() / n,
+        fault_preemptions: ms
+            .iter()
+            .map(|m| m.fault_preemptions as f64)
+            .sum::<f64>()
+            / n,
+        lost_work_gpu_s: ms.iter().map(|m| m.lost_work_gpu_s).sum::<f64>()
+            / n,
+        mean_recovery_s: ms.iter().map(|m| m.mean_recovery_s).sum::<f64>()
+            / n,
+        solver_fallbacks: ms
+            .iter()
+            .map(|m| m.solver_fallbacks.unwrap_or(0) as f64)
+            .sum::<f64>()
+            / n,
+    }
+}
+
+fn arm_json(a: &ArmMean) -> Json {
+    Json::obj(vec![
+        ("mtbf_hours", Json::num(a.mtbf_hours)),
+        ("failure_aware", Json::Bool(a.aware)),
+        ("seeds", Json::num(a.seeds as f64)),
+        ("makespan_s_mean", Json::num(a.makespan_s)),
+        ("avg_jct_s_mean", Json::num(a.avg_jct_s)),
+        ("goodput_mean", Json::num(a.goodput)),
+        ("failures_mean", Json::num(a.failures)),
+        ("fault_preemptions_mean", Json::num(a.fault_preemptions)),
+        ("lost_work_gpu_s_mean", Json::num(a.lost_work_gpu_s)),
+        ("mean_recovery_s_mean", Json::num(a.mean_recovery_s)),
+        ("solver_fallbacks_mean", Json::num(a.solver_fallbacks)),
+    ])
+}
+
+fn main() {
+    // EXACTLY the bench_online scenario, so the zero-fault probe is
+    // directly comparable to BENCH_online.json's online-saturn row
+    let cfg = TraceConfig {
+        seed: 42,
+        multijobs: 6,
+        process: ArrivalProcess::Poisson { rate_per_hour: 2.0 },
+        grid_lrs: 2,
+        grid_batches: 2,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: Some(24.0 * 3600.0),
+    };
+    let trace = generate_trace(&cfg);
+    let rungs = RungConfig::halving();
+    let fast = std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1");
+    let seeds: &[u64] = if fast { &FAULT_SEEDS[..1] } else { &FAULT_SEEDS };
+
+    // zero-fault probe on the bench_online cluster: the fault entry
+    // point must be a bitwise no-op when faults are off
+    let probe_cluster = ClusterSpec::p4d(1);
+    let probe_profiles = profile_trace(&trace, &probe_cluster);
+    let mut base_perf = PerfModel::exact(&probe_profiles);
+    let (_, base) = run_trace_perf(&trace, Some(&rungs), &mut base_perf,
+                                   &probe_cluster, "online-saturn",
+                                   SolverMode::Joint, None);
+    let probe = run_cell(&trace, &rungs, &probe_cluster,
+                         PerfModel::exact(&probe_profiles), 0.0, 0, true);
+    assert_eq!(probe.makespan_s.to_bits(), base.makespan_s.to_bits(),
+               "zero-fault run diverged from the fault-free engine");
+    assert_eq!(probe.goodput.to_bits(),
+               probe.gpu_utilization.to_bits(),
+               "goodput must equal utilization without faults");
+
+    // the fault sweep runs on two nodes so a node death degrades the
+    // fleet instead of erasing it
+    let cluster = ClusterSpec::p4d(2);
+    let profiles = profile_trace(&trace, &cluster);
+
+    println!("=== fault bench: {} jobs / {} multi-jobs, per-node MTBF in \
+              {MTBFS:?} h, {} fault seed(s), checkpoint every {:.0} s ===",
+             trace.jobs.len(), trace.groups, seeds.len(), CHECKPOINT_S);
+
+    let mut arms: Vec<ArmMean> = Vec::new();
+    for &mtbf in &MTBFS {
+        for &aware in &[true, false] {
+            arms.push(run_arm(&trace, &rungs, &cluster, &profiles, seeds,
+                              mtbf, aware));
+        }
+    }
+
+    println!("{:<10} {:>12} {:>12} {:>10} {:>10} {:>12} {:>12}",
+             "mtbf(h)", "aware good.", "blind good.", "gain(%)",
+             "failures", "lost(gpu-h)", "recovery(s)");
+    for (i, &mtbf) in MTBFS.iter().enumerate() {
+        let on = &arms[2 * i];
+        let off = &arms[2 * i + 1];
+        println!("{:<10.1} {:>12.4} {:>12.4} {:>10.2} {:>10.1} {:>12.2} \
+                  {:>12.0}",
+                 mtbf, on.goodput, off.goodput,
+                 100.0 * (on.goodput / off.goodput.max(1e-12) - 1.0),
+                 on.failures, on.lost_work_gpu_s / 3600.0,
+                 on.mean_recovery_s);
+    }
+
+    println!("\nzero-fault probe: makespan {:.6} h (must match \
+              BENCH_online's online-saturn within 1e-6)",
+             probe.makespan_s / 3600.0);
+
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("trace_seed", Json::num(cfg.seed as f64)),
+        ("jobs", Json::num(trace.jobs.len() as f64)),
+        ("gpus", Json::num(cluster.total_gpus() as f64)),
+        ("mtbf_hours", Json::arr(MTBFS.iter().map(|&m| Json::num(m)))),
+        ("fault_seeds",
+         Json::arr(seeds.iter().map(|&s| Json::num(s as f64)))),
+        ("checkpoint_interval_s", Json::num(CHECKPOINT_S)),
+        ("arms", Json::arr(arms.iter().map(arm_json))),
+        ("zero_probe", Json::obj(vec![
+            ("makespan_s", Json::num(probe.makespan_s)),
+            ("avg_jct_s", Json::num(probe.avg_jct_s)),
+            ("goodput", Json::num(probe.goodput)),
+        ])),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("wrote {out}");
+}

@@ -1,0 +1,431 @@
+//! Seeded fault injection (DESIGN.md §4.7): per-node exponential-MTBF
+//! failures with transient-vs-permanent repair timers, flapping hosts
+//! quarantined by an exponential-backoff blacklist, and per-job crash
+//! hazards.
+//!
+//! Every query is a pure function of `(seed, entity, now)` — exactly the
+//! [`crate::perf::drift`] `TruthModel` discipline — so faulted replays
+//! are bit-identical and a [`FaultConfig::none`] run takes zero extra
+//! float operations on the engine's hot path (`tests/prop_faults.rs`
+//! holds the engine to both).
+//!
+//! The model pre-draws each node's downtime windows at construction
+//! (non-overlapping, ascending, quarantine extensions already folded in),
+//! so `node_down(class, node, now)` is order-independent: the engine may
+//! ask at any instant, in any order, across any replay, and always sees
+//! the same fleet. Crash instants are re-derived per query from the job's
+//! own stream; crashes that land while a job is not running are harmless
+//! (the engine only consults running jobs).
+
+use crate::cluster::ClusterSpec;
+use crate::util::rng::Rng;
+
+/// Fault processes are drawn over this horizon of virtual time (60
+/// days) — far beyond any simulated trace, mirroring the drift model's
+/// interference horizon.
+const FAULT_HORIZON_S: f64 = 60.0 * 24.0 * 3600.0;
+/// Cap on pre-drawn outage windows per node (with the horizon above,
+/// only pathological MTBFs ever hit it).
+const MAX_OUTAGES_PER_NODE: usize = 64;
+/// Cap on crash instants scanned per job stream.
+const MAX_CRASHES_PER_JOB: usize = 64;
+/// Floor on outage length: sub-minute blips would thrash the event loop
+/// without exercising any interesting recovery behavior.
+const MIN_OUTAGE_S: f64 = 60.0;
+/// Cap on the blacklist backoff exponent (2^8 * base).
+const MAX_BACKOFF_EXP: u32 = 8;
+
+/// Knobs of the seeded fault layer. `none()` (all zeros) disables it;
+/// [`FaultConfig::is_active`] gates every engine hook so the disabled
+/// path stays bit-identical to the fault-free engine.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// Mean time between failures PER NODE, hours. 0 disables node
+    /// failures.
+    pub mtbf_hours: f64,
+    /// Fraction of node failures that are transient (mean outage
+    /// `repair_s`); the rest wait for a replacement (`replace_s`).
+    pub transient_fraction: f64,
+    /// Mean outage of a transient failure, seconds.
+    pub repair_s: f64,
+    /// Mean outage of a permanent failure (node replacement), seconds.
+    pub replace_s: f64,
+    /// Per-job crash hazard while running, events per hour. 0 disables.
+    pub crash_per_hour: f64,
+    /// Fraction of nodes that flap: their MTBF is divided by
+    /// `flaky_accel`.
+    pub flaky_fraction: f64,
+    /// MTBF acceleration of flaky nodes (>= 1).
+    pub flaky_accel: f64,
+    /// Blacklist quarantine: a node failing again within
+    /// `blacklist_window_s` of its last repair has its outage extended
+    /// by `blacklist_base_s * 2^k` (k = consecutive rapid re-failures,
+    /// capped) — the scheduler sees a flapping host held out of service
+    /// for exponentially longer each time. 0 disables.
+    pub blacklist_base_s: f64,
+    pub blacklist_window_s: f64,
+}
+
+impl FaultConfig {
+    /// Faults off. The engine's zero-fault path is bit-identical to the
+    /// pre-fault engine under this config.
+    pub fn none() -> Self {
+        FaultConfig {
+            seed: 0,
+            mtbf_hours: 0.0,
+            transient_fraction: 0.0,
+            repair_s: 0.0,
+            replace_s: 0.0,
+            crash_per_hour: 0.0,
+            flaky_fraction: 0.0,
+            flaky_accel: 1.0,
+            blacklist_base_s: 0.0,
+            blacklist_window_s: 0.0,
+        }
+    }
+
+    /// The standard sweep configuration (`bench_faults`, `saturn online
+    /// --faults`): mostly-transient node failures at the given per-node
+    /// MTBF, a quarter of the fleet flapping 6x as often, a small crash
+    /// hazard, and a 30-minute base quarantine.
+    pub fn uniform(seed: u64, mtbf_hours: f64) -> Self {
+        FaultConfig {
+            seed,
+            mtbf_hours: mtbf_hours.max(0.0),
+            transient_fraction: 0.8,
+            repair_s: 900.0,
+            replace_s: 4.0 * 3600.0,
+            crash_per_hour: if mtbf_hours > 0.0 { 0.01 } else { 0.0 },
+            flaky_fraction: 0.25,
+            flaky_accel: 6.0,
+            blacklist_base_s: 1800.0,
+            blacklist_window_s: 3600.0,
+        }
+    }
+
+    /// Whether any fault process is enabled.
+    pub fn is_active(&self) -> bool {
+        self.mtbf_hours > 0.0 || self.crash_per_hour > 0.0
+    }
+}
+
+/// The pre-drawn fault universe of one run: per-node downtime windows
+/// plus per-job crash streams, all pure in `(seed, entity, now)`.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    cfg: FaultConfig,
+    /// Per class, per node: `(fail_s, back_s)` downtime windows,
+    /// ascending and non-overlapping; blacklist quarantine extensions
+    /// are already folded into `back_s`.
+    outages: Vec<Vec<Vec<(f64, f64)>>>,
+    /// Quarantine extensions applied during window generation (flapping
+    /// nodes held out of service beyond their repair time).
+    quarantines: usize,
+    active: bool,
+}
+
+impl FaultModel {
+    pub fn new(cfg: FaultConfig, cluster: &ClusterSpec) -> Self {
+        let active = cfg.is_active();
+        let mut quarantines = 0usize;
+        let outages: Vec<Vec<Vec<(f64, f64)>>> = (0..cluster.n_classes())
+            .map(|ci| {
+                let nodes = cluster.class(ci).nodes as usize;
+                (0..nodes)
+                    .map(|ni| {
+                        node_windows(&cfg, ci, ni, &mut quarantines)
+                    })
+                    .collect()
+            })
+            .collect();
+        FaultModel { cfg, outages, quarantines, active }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Blacklist quarantine extensions drawn across the whole fleet.
+    pub fn quarantines(&self) -> usize {
+        self.quarantines
+    }
+
+    /// The pre-drawn downtime windows of one node (diagnostics/tests).
+    pub fn outages(&self, class: usize, node: usize) -> &[(f64, f64)] {
+        self.outages
+            .get(class)
+            .and_then(|c| c.get(node))
+            .map(|w| w.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Whether `node` of `class` is out of service at `now`. Pure and
+    /// order-independent.
+    pub fn node_down(&self, class: usize, node: usize, now: f64) -> bool {
+        self.outages
+            .get(class)
+            .and_then(|c| c.get(node))
+            .map(|ws| ws.iter().any(|&(a, b)| now >= a && now < b))
+            .unwrap_or(false)
+    }
+
+    /// Earliest node fail/repair instant strictly after `now`, across
+    /// the fleet. `None` once every pre-drawn window is in the past —
+    /// and because every outage has a finite `back_s`, a down node
+    /// always has a future repair event, so the engine can never
+    /// deadlock waiting on capacity.
+    pub fn next_node_event_after(&self, now: f64) -> Option<f64> {
+        let mut best = f64::INFINITY;
+        for class in &self.outages {
+            for node in class {
+                for &(a, b) in node {
+                    if a > now + 1e-9 && a < best {
+                        best = a;
+                    }
+                    if b > now + 1e-9 && b < best {
+                        best = b;
+                    }
+                }
+            }
+        }
+        best.is_finite().then_some(best)
+    }
+
+    /// Next crash instant of `job` strictly after `now` (virtual-time
+    /// Poisson stream, re-derived per query).
+    pub fn next_crash_after(&self, job: usize, now: f64) -> Option<f64> {
+        self.crash_scan(job, |t| t > now + 1e-9)
+    }
+
+    /// Whether a crash instant of `job` lands at `now` (within the
+    /// engine's event tolerance).
+    pub fn crash_due(&self, job: usize, now: f64) -> bool {
+        self.crash_scan(job, |t| (t - now).abs() < 1e-9).is_some()
+    }
+
+    fn crash_scan(&self, job: usize,
+                  pred: impl Fn(f64) -> bool) -> Option<f64> {
+        if !self.active || self.cfg.crash_per_hour <= 0.0 {
+            return None;
+        }
+        let mut rng =
+            Rng::new(self.cfg.seed ^ 0xC4A5_11E5).fork(job as u64);
+        let rate = self.cfg.crash_per_hour / 3600.0;
+        let mut t = 0.0f64;
+        for _ in 0..MAX_CRASHES_PER_JOB {
+            t += rng.exp(rate.max(1e-12));
+            if t > FAULT_HORIZON_S {
+                return None;
+            }
+            if pred(t) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+/// Draw one node's downtime windows: exponential inter-failure gaps at
+/// the node's effective MTBF (flaky nodes fail `flaky_accel` times as
+/// often), exponential outage lengths (transient repair vs permanent
+/// replacement), and the exponential-backoff blacklist — a node failing
+/// again within `blacklist_window_s` of its last repair stays
+/// quarantined for `base * 2^k` extra seconds.
+fn node_windows(cfg: &FaultConfig, class: usize, node: usize,
+                quarantines: &mut usize) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    if cfg.mtbf_hours <= 0.0 {
+        return out;
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xFA17_0BAD)
+        .fork(((class as u64) << 20) | node as u64);
+    let flaky = cfg.flaky_fraction > 0.0 && rng.bool(cfg.flaky_fraction);
+    let accel = if flaky { cfg.flaky_accel.max(1.0) } else { 1.0 };
+    let mtbf_s = cfg.mtbf_hours * 3600.0 / accel;
+    let mut t = 0.0f64;
+    let mut rapid = 0u32;
+    let mut last_back = f64::NEG_INFINITY;
+    while out.len() < MAX_OUTAGES_PER_NODE {
+        t += rng.exp(1.0 / mtbf_s.max(1.0));
+        if t > FAULT_HORIZON_S {
+            break;
+        }
+        let transient = rng.bool(cfg.transient_fraction);
+        let mean = if transient { cfg.repair_s } else { cfg.replace_s };
+        let mut down = rng.exp(1.0 / mean.max(1.0)).max(MIN_OUTAGE_S);
+        if cfg.blacklist_base_s > 0.0
+            && t - last_back <= cfg.blacklist_window_s
+        {
+            rapid = (rapid + 1).min(MAX_BACKOFF_EXP);
+            down += cfg.blacklist_base_s * (1u64 << rapid) as f64;
+            *quarantines += 1;
+        } else {
+            rapid = 0;
+        }
+        last_back = t + down;
+        out.push((t, t + down));
+        t += down;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn model(mtbf_h: f64, seed: u64) -> FaultModel {
+        FaultModel::new(FaultConfig::uniform(seed, mtbf_h),
+                        &ClusterSpec::p4d(2))
+    }
+
+    #[test]
+    fn none_is_inactive_and_eventless() {
+        let m = FaultModel::new(FaultConfig::none(),
+                                &ClusterSpec::p4d(2));
+        assert!(!m.is_active());
+        assert!(m.next_node_event_after(0.0).is_none());
+        assert!(m.next_crash_after(0, 0.0).is_none());
+        assert!(!m.node_down(0, 0, 1e6));
+        assert!(!m.crash_due(0, 1e6));
+        assert_eq!(m.quarantines(), 0);
+    }
+
+    #[test]
+    fn windows_are_ascending_disjoint_and_finite() {
+        let m = model(2.0, 7);
+        let mut any = false;
+        for ni in 0..2 {
+            let ws = m.outages(0, ni);
+            any |= !ws.is_empty();
+            let mut prev_back = f64::NEG_INFINITY;
+            for &(a, b) in ws {
+                assert!(a > 0.0 && b > a, "degenerate window {a}..{b}");
+                assert!(a >= prev_back, "windows overlap");
+                assert!(b - a >= MIN_OUTAGE_S - 1e-9);
+                prev_back = b;
+            }
+        }
+        assert!(any, "2h MTBF drew no outages over the horizon");
+    }
+
+    #[test]
+    fn queries_are_pure_and_order_independent() {
+        let a = model(2.0, 11);
+        let b = model(2.0, 11);
+        // interrogate b in reverse order first: answers must not depend
+        // on query history
+        let probes = [0.0, 9e5, 3e4, 7.7e5, 123.0];
+        for &t in probes.iter().rev() {
+            let _ = b.node_down(0, 1, t);
+            let _ = b.next_crash_after(3, t);
+        }
+        for &t in &probes {
+            assert_eq!(a.node_down(0, 1, t), b.node_down(0, 1, t));
+            assert_eq!(a.next_node_event_after(t),
+                       b.next_node_event_after(t));
+            assert_eq!(a.next_crash_after(3, t), b.next_crash_after(3, t));
+        }
+    }
+
+    #[test]
+    fn node_down_matches_the_windows_and_events_bound_transitions() {
+        let m = model(1.0, 3);
+        let ws = m.outages(0, 0).to_vec();
+        assert!(!ws.is_empty());
+        for &(a, b) in &ws {
+            assert!(!m.node_down(0, 0, a - 1.0));
+            assert!(m.node_down(0, 0, a + 1e-6));
+            assert!(m.node_down(0, 0, (a + b) / 2.0));
+            assert!(!m.node_down(0, 0, b + 1e-6));
+            // while down, the next event is the repair (or earlier on
+            // another node) — never past it
+            let next = m.next_node_event_after((a + b) / 2.0).unwrap();
+            assert!(next <= b + 1e-9);
+        }
+    }
+
+    #[test]
+    fn crash_stream_instants_answer_crash_due() {
+        let cfg = FaultConfig {
+            crash_per_hour: 2.0,
+            ..FaultConfig::uniform(4, 0.0)
+        };
+        let m = FaultModel::new(cfg, &ClusterSpec::p4d(1));
+        let t1 = m.next_crash_after(5, 0.0).expect("2/h crash stream");
+        assert!(m.crash_due(5, t1));
+        assert!(!m.crash_due(5, t1 + 1.0));
+        let t2 = m.next_crash_after(5, t1).expect("second crash");
+        assert!(t2 > t1 + 1e-9);
+        // distinct jobs get distinct streams
+        let other = m.next_crash_after(6, 0.0).expect("stream for job 6");
+        assert!((other - t1).abs() > 1e-9);
+    }
+
+    #[test]
+    fn flapping_quarantine_extends_rapid_refailures() {
+        // force flapping everywhere with an enormous blacklist window:
+        // every re-failure within the window must extend the outage by
+        // at least the base quarantine
+        let cfg = FaultConfig {
+            seed: 9,
+            mtbf_hours: 0.5,
+            transient_fraction: 1.0,
+            repair_s: 120.0,
+            replace_s: 120.0,
+            crash_per_hour: 0.0,
+            flaky_fraction: 1.0,
+            flaky_accel: 4.0,
+            blacklist_base_s: 1800.0,
+            blacklist_window_s: FAULT_HORIZON_S,
+        };
+        let m = FaultModel::new(cfg.clone(), &ClusterSpec::p4d(1));
+        assert!(m.quarantines() > 0, "no quarantine ever triggered");
+        // after the first failure, every window is quarantine-extended:
+        // base * 2^1 on top of the drawn outage at minimum
+        for ni in 0..1 {
+            for (i, &(a, b)) in m.outages(0, ni).iter().enumerate() {
+                if i > 0 {
+                    assert!(b - a >= 2.0 * cfg.blacklist_base_s,
+                            "window {i} not quarantined: {}s", b - a);
+                }
+            }
+        }
+        // without the blacklist the same seed yields strictly shorter
+        // outages
+        let plain = FaultModel::new(
+            FaultConfig { blacklist_base_s: 0.0, ..cfg },
+            &ClusterSpec::p4d(1));
+        assert_eq!(plain.quarantines(), 0);
+        let long: f64 = m.outages(0, 0).iter().map(|w| w.1 - w.0).sum();
+        let short: f64 =
+            plain.outages(0, 0).iter().map(|w| w.1 - w.0).sum();
+        assert!(long > short, "quarantine did not lengthen downtime");
+    }
+
+    #[test]
+    fn flaky_fleet_fails_more_often() {
+        // all-flaky vs no-flaky at the same seed: acceleration must
+        // produce at least as many outage windows fleet-wide
+        let mk = |flaky: f64| {
+            FaultModel::new(
+                FaultConfig {
+                    flaky_fraction: flaky,
+                    flaky_accel: 8.0,
+                    ..FaultConfig::uniform(13, 8.0)
+                },
+                &ClusterSpec::p4d(2),
+            )
+        };
+        let count = |m: &FaultModel| -> usize {
+            (0..2).map(|ni| m.outages(0, ni).len()).sum()
+        };
+        assert!(count(&mk(1.0)) > count(&mk(0.0)),
+                "8x acceleration did not add outages");
+    }
+}

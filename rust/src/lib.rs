@@ -29,6 +29,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod faults;
 pub mod models;
 pub mod objective;
 pub mod obs;

@@ -13,6 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use saturn::cluster::ClusterSpec;
 use saturn::coordinator::{real_grid, Coordinator};
 use saturn::exp;
+use saturn::faults::FaultConfig;
 use saturn::objective::{JobTerms, Objective};
 use saturn::obs::summary;
 use saturn::obs::trace::{chrome_trace, parse_jsonl, write_jsonl, Tracer};
@@ -63,6 +64,8 @@ fn main() -> Result<()> {
             println!("            [--drift-correction on|off|oracle]");
             println!("            [--drift-threshold F]");
             println!("            [--drift-tenant-spread F]");
+            println!("            [--faults] [--mtbf H] [--fault-seed N]");
+            println!("            [--checkpoint-interval S]");
             println!("            [--json PATH]");
             println!("            [--trace PATH] [--trace-chrome PATH]");
             println!("            [--trace-system SYSTEM]");
@@ -271,6 +274,21 @@ fn cmd_online(args: &Args) -> Result<()> {
     };
     drift_cfg.tenant_spread = tenant_spread;
 
+    // fault-injection knobs (DESIGN.md §4.7): --faults (or an explicit
+    // --mtbf) turns on the seeded node-failure + crash-hazard layer;
+    // --checkpoint-interval sets the rollback granularity (0 =
+    // continuous checkpointing, i.e. no lost work)
+    let faults_on = args.has("faults") || args.get("mtbf").is_some();
+    let mtbf_h = args.f64_or("mtbf", 8.0);
+    let fault_seed = args.u64_or("fault-seed", seed);
+    let checkpoint_interval_s =
+        args.f64_or("checkpoint-interval", 1800.0);
+    let fault_cfg = if faults_on {
+        FaultConfig::uniform(fault_seed, mtbf_h)
+    } else {
+        FaultConfig::none()
+    };
+
     let cluster = fleet_from_args(args)?;
     println!("=== online: {} multi-jobs / {} jobs over {:.1} h on fleet \
               [{}], seed {seed} ===",
@@ -296,6 +314,11 @@ fn cmd_online(args: &Args) -> Result<()> {
                   {correction}, re-solve threshold {:.2}, tenant spread \
                   {tenant_spread:.2}",
                  drift_mag * 100.0, threshold.max(0.0));
+    }
+    if faults_on {
+        println!("fault injection: per-node MTBF {mtbf_h:.1} h (seed \
+                  {fault_seed}), checkpoint every {checkpoint_interval_s:.0} \
+                  s");
     }
     let profiles = profile_trace(&trace, &cluster);
     // tenant class per job (priority k+1 <-> class k) for the
@@ -336,6 +359,8 @@ fn cmd_online(args: &Args) -> Result<()> {
         let mut perf = make_perf();
         let sim_cfg = SimConfig {
             objective,
+            faults: fault_cfg.clone(),
+            checkpoint_interval_s,
             trace: if sys == trace_system {
                 tracer.clone()
             } else {
@@ -365,6 +390,16 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("estimate layer: {} observation(s), mean |ln(obs/est)| \
                   {:.4}", sat.observations, sat.estimate_mae);
     }
+    if faults_on {
+        println!("fault layer: {} node failure(s), {} fault \
+                  preemption(s), {:.1} GPU-h lost, mean recovery {:.0} s, \
+                  goodput {:.4} (utilization {:.4}), {} greedy \
+                  fallback(s)",
+                 sat.failures, sat.fault_preemptions,
+                 sat.lost_work_gpu_s / 3600.0, sat.mean_recovery_s,
+                 sat.goodput, sat.gpu_utilization,
+                 sat.solver_fallbacks.unwrap_or(0));
+    }
 
     // determinism: the acceptance bar is a bit-identical double replay
     // (first replay reused from the comparison loop above)
@@ -372,7 +407,12 @@ fn cmd_online(args: &Args) -> Result<()> {
     let mut perf = make_perf();
     // the replay runs UNTRACED — passing bit-identity against a traced
     // first run is exactly the recorder's determinism contract
-    let replay_cfg = SimConfig { objective, ..SimConfig::default() };
+    let replay_cfg = SimConfig {
+        objective,
+        faults: fault_cfg.clone(),
+        checkpoint_interval_s,
+        ..SimConfig::default()
+    };
     let (b, _) = run_trace_sim(&trace, rungs.as_ref(), &mut perf, &cluster,
                                "online-saturn", mode,
                                Some(drift_threshold), &replay_cfg);
@@ -397,6 +437,10 @@ fn cmd_online(args: &Args) -> Result<()> {
             ("objective", Json::str(objective.name())),
             ("drift", Json::num(drift_mag)),
             ("drift_correction", Json::str(&correction)),
+            ("faults", Json::Bool(faults_on)),
+            ("mtbf_hours",
+             Json::num(if faults_on { mtbf_h } else { 0.0 })),
+            ("checkpoint_interval_s", Json::num(checkpoint_interval_s)),
             ("systems",
              Json::arr(metrics.iter().map(|m| m.to_json()))),
         ]);

@@ -73,6 +73,23 @@ pub struct OnlineMetrics {
     pub estimate_mae: f64,
     /// Re-solves fired by the drift trigger alone (Saturn only).
     pub drift_resolves: Option<usize>,
+    /// Node-down events the run hit (fault layer; 0 without faults).
+    pub failures: usize,
+    /// Jobs killed by node deaths or crash hazards (checkpoint
+    /// rollbacks).
+    pub fault_preemptions: usize,
+    /// GPU-seconds re-run because fault kills rolled progress back past
+    /// the last periodic checkpoint.
+    pub lost_work_gpu_s: f64,
+    /// Mean seconds from a fault kill to the victim's relaunch.
+    pub mean_recovery_s: f64,
+    /// (busy - lost) GPU-seconds over capacity x makespan; equals
+    /// `gpu_utilization` when faults are off.
+    pub goodput: f64,
+    /// Plan selections that degraded to the greedy heuristic
+    /// (`SolverStats::greedy_fallbacks`, Saturn only) — the visible
+    /// count of "solver kept going instead of keeping up".
+    pub solver_fallbacks: Option<usize>,
 }
 
 impl OnlineMetrics {
@@ -118,6 +135,16 @@ impl OnlineMetrics {
             ("estimate_mae", Json::num(self.estimate_mae)),
             ("drift_resolves", match self.drift_resolves {
                 Some(d) => Json::num(d as f64),
+                None => Json::Null,
+            }),
+            ("failures", Json::num(self.failures as f64)),
+            ("fault_preemptions",
+             Json::num(self.fault_preemptions as f64)),
+            ("lost_work_gpu_s", Json::num(self.lost_work_gpu_s)),
+            ("mean_recovery_s", Json::num(self.mean_recovery_s)),
+            ("goodput", Json::num(self.goodput)),
+            ("solver_fallbacks", match self.solver_fallbacks {
+                Some(f) => Json::num(f as f64),
                 None => Json::Null,
             }),
         ])
@@ -183,8 +210,6 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
                      drift_threshold: Option<Option<f64>>,
                      cfg: &SimConfig)
     -> (OnlineSimResult, OnlineMetrics) {
-    // Saturn-only diagnostics:
-    // (solves, warm solves, basis hit rate, pivots, drift re-solves)
     let (result, sys, solver_probe) = match system {
         "online-current-practice" => {
             let mut p = OnlineCurrentPractice;
@@ -205,14 +230,50 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
             }
             let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
                                          &mut p, cfg);
-            let probe = (p.solves(), p.warm_solves(), p.warm_hit_rate(),
-                         p.total_stats.lp_pivots, p.drift_resolves);
+            let probe = saturn_probe(&p);
             (r, ONLINE_SYSTEMS[2], Some(probe))
         }
         other => panic!("unknown online system '{other}' \
                          (online-current-practice|online-optimus|online-saturn)"),
     };
+    let metrics = assemble_metrics(trace, &result, sys, solver_probe);
+    (result, metrics)
+}
 
+/// As the online-Saturn arm of [`run_trace_sim`], with the policy's
+/// failure awareness pinned — the `bench_faults` aware-vs-blind pair and
+/// the `--faults` CLI path route here. With `failure_aware = true` and a
+/// fault-free [`SimConfig`] this reproduces [`run_trace_sim`] bit for
+/// bit (a blind policy never sees a `ReplanCause::Failure` either, so
+/// the flag only matters once faults actually fire).
+pub fn run_trace_faults(trace: &Trace, rungs: Option<&RungConfig>,
+                        perf: &mut PerfModel, cluster: &ClusterSpec,
+                        mode: SolverMode, cfg: &SimConfig,
+                        failure_aware: bool)
+    -> (OnlineSimResult, OnlineMetrics) {
+    let mut p = OnlineSaturn::new(mode);
+    p.failure_aware = failure_aware;
+    let result = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
+                                      &mut p, cfg);
+    let probe = saturn_probe(&p);
+    let metrics = assemble_metrics(trace, &result, ONLINE_SYSTEMS[2],
+                                   Some(probe));
+    (result, metrics)
+}
+
+/// Saturn-only diagnostics: (solves, warm solves, basis hit rate,
+/// pivots, drift re-solves, greedy fallbacks).
+type SaturnProbe = (usize, usize, f64, usize, usize, usize);
+
+fn saturn_probe(p: &OnlineSaturn) -> SaturnProbe {
+    (p.solves(), p.warm_solves(), p.warm_hit_rate(),
+     p.total_stats.lp_pivots, p.drift_resolves,
+     p.total_stats.greedy_fallbacks)
+}
+
+fn assemble_metrics(trace: &Trace, result: &OnlineSimResult,
+                    sys: &'static str, solver_probe: Option<SaturnProbe>)
+    -> OnlineMetrics {
     let total_w: f64 = trace.jobs.iter().map(|j| j.priority).sum();
     let weighted = if total_w > 0.0 {
         result
@@ -224,7 +285,7 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
     } else {
         0.0
     };
-    let metrics = OnlineMetrics {
+    OnlineMetrics {
         system: sys,
         avg_jct_s: result.avg_jct_s(),
         p95_jct_s: result.p95_jct_s(),
@@ -250,8 +311,13 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
         observations: result.observations,
         estimate_mae: result.estimate_mae,
         drift_resolves: solver_probe.map(|p| p.4),
-    };
-    (result, metrics)
+        failures: result.failures,
+        fault_preemptions: result.fault_preemptions,
+        lost_work_gpu_s: result.lost_work_gpu_s,
+        mean_recovery_s: result.mean_recovery_s,
+        goodput: result.goodput,
+        solver_fallbacks: solver_probe.map(|p| p.5),
+    }
 }
 
 /// Warm-vs-cold re-solve comparison on one identical arrival event.
@@ -425,5 +491,49 @@ mod tests {
         // must be present and non-zero for the saturn system
         assert!(parsed.get("warm_hit_rate").unwrap().as_f64().unwrap() > 0.0);
         assert!(parsed.get("lp_pivots").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fault_free_fault_entry_reproduces_run_trace_bitwise() {
+        let (t, profiles, cluster) = trace();
+        let (_, base) = run_trace(&t, None, &profiles, &cluster,
+                                  "online-saturn", SolverMode::Joint);
+        let mut perf = PerfModel::exact(&profiles);
+        let (r, m) = run_trace_faults(&t, None, &mut perf, &cluster,
+                                      SolverMode::Joint,
+                                      &SimConfig::default(), true);
+        assert_eq!(m.makespan_s.to_bits(), base.makespan_s.to_bits());
+        assert_eq!(m.avg_jct_s.to_bits(), base.avg_jct_s.to_bits());
+        assert_eq!(m.failures, 0);
+        assert_eq!(m.fault_preemptions, 0);
+        assert_eq!(m.goodput.to_bits(), r.gpu_utilization.to_bits());
+        assert_eq!(m.solver_fallbacks, Some(0));
+    }
+
+    #[test]
+    fn faulted_run_surfaces_fault_metrics_in_json() {
+        use crate::faults::FaultConfig;
+        let (t, profiles, cluster) = trace();
+        let cfg = SimConfig {
+            faults: FaultConfig {
+                seed: 11,
+                crash_per_hour: 4.0,
+                ..FaultConfig::none()
+            },
+            checkpoint_interval_s: 600.0,
+            ..SimConfig::default()
+        };
+        let mut perf = PerfModel::exact(&profiles);
+        let (r, m) = run_trace_faults(&t, None, &mut perf, &cluster,
+                                      SolverMode::Joint, &cfg, true);
+        assert_eq!(r.finish_times.len(), t.jobs.len());
+        assert!(m.fault_preemptions > 0, "crash hazard never fired");
+        assert!(m.lost_work_gpu_s > 0.0);
+        assert!(m.goodput <= m.gpu_utilization + 1e-12);
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        for key in ["failures", "fault_preemptions", "lost_work_gpu_s",
+                    "mean_recovery_s", "goodput", "solver_fallbacks"] {
+            assert!(parsed.get(key).unwrap().as_f64().is_some(), "{key}");
+        }
     }
 }

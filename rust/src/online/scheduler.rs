@@ -13,11 +13,12 @@
 use std::time::Instant;
 
 use crate::saturn::introspect::{apply_migration_hysteresis,
-                                drift_resolve_due, launch_from_plan,
-                                objective_terms, DEFAULT_DRIFT_THRESHOLD};
+                                degraded_capacities, drift_resolve_due,
+                                launch_from_plan, objective_terms,
+                                DEFAULT_DRIFT_THRESHOLD};
 use crate::saturn::plan::SaturnPlan;
-use crate::saturn::solver::{solve_joint_traced, SolverMode, SolverStats};
-use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::saturn::solver::{solve_joint_live, SolverMode, SolverStats};
+use crate::sim::engine::{Launch, PlanContext, Policy, ReplanCause};
 use crate::util::json::Json;
 
 pub struct OnlineSaturn {
@@ -41,6 +42,13 @@ pub struct OnlineSaturn {
     pub drift_threshold: Option<f64>,
     /// Re-solves fired by the drift trigger alone.
     pub drift_resolves: usize,
+    /// Failure-aware mode (default): `ReplanCause::Failure` events
+    /// bypass the plan cache and re-solves read the fleet's DEGRADED
+    /// per-class capacities ([`degraded_capacities`]). `false` is the
+    /// failure-blind ablation arm of `bench_faults` — stale caches and
+    /// static capacity rows, as if the scheduler never heard of the
+    /// outage.
+    pub failure_aware: bool,
     last_obs_seen: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
@@ -63,6 +71,7 @@ impl OnlineSaturn {
             rolling_threshold: 64,
             drift_threshold: Some(DEFAULT_DRIFT_THRESHOLD),
             drift_resolves: 0,
+            failure_aware: true,
             last_obs_seen: 0,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
@@ -133,13 +142,21 @@ impl Policy for OnlineSaturn {
         let drift_due = drift_resolve_due(self.drift_threshold,
                                           self.last_obs_seen, ctx.obs_seen,
                                           ctx.drift_alarm);
+        // failure-aware: a fault event invalidates the cached plan (it
+        // was solved against a fleet that no longer exists)
+        let fault_due =
+            self.failure_aware && ctx.cause == ReplanCause::Failure;
         let cache_ok = self
             .cached
             .as_ref()
             .map(|p| {
-                let covers = remaining
-                    .iter()
-                    .all(|&(id, _)| p.plan_for(id).is_some());
+                // jobs the fleet cannot host at all count as covered:
+                // the solve shed them and they must not force a
+                // re-solve at every subsequent event
+                let covers = remaining.iter().all(|&(id, _)| {
+                    p.plan_for(id).is_some()
+                        || !ctx.profiles.feasible_anywhere(id)
+                });
                 let stale = p.choices.iter().any(|jp| {
                     ctx.jobs
                         .get(jp.job_id)
@@ -149,7 +166,7 @@ impl Policy for OnlineSaturn {
                 covers && !stale
             })
             .unwrap_or(false);
-        if cache_ok && !introspect_due && !drift_due {
+        if cache_ok && !introspect_due && !drift_due && !fault_due {
             let launches = self.launch_from_cache(ctx);
             self.decision_s += t0.elapsed().as_secs_f64();
             return launches;
@@ -189,10 +206,15 @@ impl Policy for OnlineSaturn {
                 ]),
             );
         }
-        let (mut plan, stats) = solve_joint_traced(&remaining, ctx.profiles,
-                                                   ctx.cluster, mode, 1.0,
-                                                   warm, ctx.objective,
-                                                   &terms, ctx.trace);
+        let live = if self.failure_aware {
+            degraded_capacities(ctx)
+        } else {
+            None
+        };
+        let (mut plan, stats) =
+            solve_joint_live(&remaining, ctx.profiles, ctx.cluster, mode,
+                             1.0, warm, ctx.objective, &terms, ctx.trace,
+                             live.as_deref());
         if ctx.trace.is_enabled() {
             ctx.trace.end(
                 "solver",
@@ -216,6 +238,8 @@ impl Policy for OnlineSaturn {
         self.total_stats.wall_s += stats.wall_s;
         self.total_stats.lp_capped += stats.lp_capped;
         self.total_stats.limit_reached += stats.limit_reached;
+        self.total_stats.shed_jobs += stats.shed_jobs;
+        self.total_stats.greedy_fallbacks += stats.greedy_fallbacks;
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;

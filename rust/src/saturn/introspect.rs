@@ -7,8 +7,8 @@ use std::time::Instant;
 
 use crate::objective::JobTerms;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
-use crate::saturn::solver::{solve_joint_traced, SolverMode, SolverStats};
-use crate::sim::engine::{Launch, PlanContext, Policy};
+use crate::saturn::solver::{solve_joint_live, SolverMode, SolverStats};
+use crate::sim::engine::{Launch, PlanContext, Policy, ReplanCause};
 use crate::util::json::Json;
 
 /// Realize launches from a cached plan: pending jobs only, first-fit with
@@ -88,6 +88,22 @@ pub(crate) fn objective_terms(ctx: &PlanContext,
         .collect()
 }
 
+/// Per-class LIVE GPU capacities for the solver's area rows while the
+/// fleet is degraded (nodes down), `None` while every node is in
+/// service — the healthy-fleet path hands the solver its static
+/// capacities and stays bit-identical to the fault-free build. Shared
+/// by both Saturn policies.
+pub(crate) fn degraded_capacities(ctx: &PlanContext) -> Option<Vec<f64>> {
+    let degraded = (0..ctx.free.n_classes()).any(|ci| {
+        ctx.free.live_capacity(ci) != ctx.free.class_capacity(ci)
+    });
+    degraded.then(|| {
+        (0..ctx.free.n_classes())
+            .map(|ci| ctx.free.live_capacity(ci) as f64)
+            .collect()
+    })
+}
+
 pub struct SaturnPolicy {
     mode: SolverMode,
     /// `None` disables introspection (ablation arm of bench E8).
@@ -110,6 +126,11 @@ pub struct SaturnPolicy {
     /// Re-solves fired by the drift trigger alone (not by coverage gaps
     /// or the fixed introspection interval).
     pub drift_resolves: usize,
+    /// Failure-aware mode (default): a `ReplanCause::Failure` event
+    /// bypasses the plan cache and the re-solve reads the fleet's
+    /// DEGRADED per-class capacities. `false` is the failure-blind
+    /// ablation arm (`bench_faults`): stale caches, static capacities.
+    pub failure_aware: bool,
     last_obs_seen: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
@@ -133,6 +154,7 @@ impl SaturnPolicy {
             lookahead: 1.0,
             drift_threshold: Some(DEFAULT_DRIFT_THRESHOLD),
             drift_resolves: 0,
+            failure_aware: true,
             last_obs_seen: 0,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
@@ -245,12 +267,23 @@ impl Policy for SaturnPolicy {
         let drift_due = drift_resolve_due(self.drift_threshold,
                                           self.last_obs_seen, ctx.obs_seen,
                                           ctx.drift_alarm);
+        // failure-aware: a fault event invalidates the cached plan (the
+        // fleet it was solved against no longer exists)
+        let fault_due =
+            self.failure_aware && ctx.cause == ReplanCause::Failure;
+        // jobs the fleet cannot host at all count as covered: they were
+        // shed by the solve and must not force a re-solve at every event
         let cache_covers = self
             .cached
             .as_ref()
-            .map(|p| remaining.iter().all(|&(id, _)| p.plan_for(id).is_some()))
+            .map(|p| {
+                remaining.iter().all(|&(id, _)| {
+                    p.plan_for(id).is_some()
+                        || !ctx.profiles.feasible_anywhere(id)
+                })
+            })
             .unwrap_or(false);
-        if cache_covers && !introspect_due && !drift_due {
+        if cache_covers && !introspect_due && !drift_due && !fault_due {
             let launches = self.launch_from_cache(ctx);
             self.decision_s += t0.elapsed().as_secs_f64();
             return launches;
@@ -279,11 +312,16 @@ impl Policy for SaturnPolicy {
                 ]),
             );
         }
-        let (mut plan, stats) = solve_joint_traced(&remaining, ctx.profiles,
-                                                   ctx.cluster, self.mode,
-                                                   self.lookahead, None,
-                                                   ctx.objective, &terms,
-                                                   ctx.trace);
+        let live = if self.failure_aware {
+            degraded_capacities(ctx)
+        } else {
+            None
+        };
+        let (mut plan, stats) =
+            solve_joint_live(&remaining, ctx.profiles, ctx.cluster,
+                             self.mode, self.lookahead, None,
+                             ctx.objective, &terms, ctx.trace,
+                             live.as_deref());
         if ctx.trace.is_enabled() {
             ctx.trace.end(
                 "solver",

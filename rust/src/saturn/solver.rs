@@ -115,6 +115,17 @@ pub struct SolverStats {
     /// unproved incumbent. Under event-rate re-solving this is the
     /// "solver can no longer keep up" signal the online metrics surface.
     pub limit_reached: usize,
+    /// Jobs dropped from a solve because they fit no GPU class of the
+    /// fleet ([`check_fleet_feasibility`]): the solver plans the rest
+    /// instead of aborting, and the shed jobs stay queued.
+    pub shed_jobs: usize,
+    /// Plan selections that fell back to the greedy heuristic because
+    /// the chosen level returned no plan (MILP infeasible after a fleet
+    /// shrink, `LimitReached` with no incumbent, a failed rolling
+    /// window) — the degradation ladder's middle rung, counted so it is
+    /// never silent. Explicit `SolverMode::Heuristic` solves are not
+    /// fallbacks and are not counted.
+    pub greedy_fallbacks: usize,
 }
 
 impl SolverStats {
@@ -140,8 +151,9 @@ impl SolverStats {
 
 /// Verify every job fits somewhere in the fleet. `Err` carries a
 /// human-readable description naming the jobs whose memory footprint fits
-/// no GPU class — the CLI surfaces it; the solver panics with it rather
-/// than silently dropping the job into a deadlocked schedule.
+/// no GPU class — the CLI bails with it up front; the solver logs it,
+/// sheds the offending jobs (`SolverStats::shed_jobs`), and plans the
+/// rest, so a fleet that degrades mid-run never aborts the process.
 pub fn check_fleet_feasibility(jobs: &[(usize, u64)],
                                profiles: &ProfileTable,
                                cluster: &ClusterSpec) -> Result<(), String> {
@@ -196,9 +208,11 @@ pub fn solve_joint_with(
 /// seeded incumbent; departed jobs are simply dropped. This is what makes
 /// event-rate re-solving affordable (bench_online measures warm vs cold).
 ///
-/// Panics (with the [`check_fleet_feasibility`] message) when a job fits
-/// no GPU class of the fleet — a silent greedy fallback would drop the job
-/// and deadlock the simulation with a far more confusing error.
+/// Jobs that fit no GPU class of the fleet are shed (logged with the
+/// [`check_fleet_feasibility`] message, counted in
+/// [`SolverStats::shed_jobs`], absent from the returned plan) and the
+/// rest are planned — callers surface shed jobs as queued work rather
+/// than aborting.
 pub fn solve_joint_warm(
     jobs: &[(usize, u64)],
     profiles: &ProfileTable,
@@ -254,6 +268,33 @@ pub fn solve_joint_traced(
     terms: &[JobTerms],
     trace: &Tracer,
 ) -> (SaturnPlan, SolverStats) {
+    solve_joint_live(jobs, profiles, cluster, mode, lookahead, warm,
+                     objective, terms, trace, None)
+}
+
+/// [`solve_joint_traced`] over a DEGRADED fleet: `live_gpus` (per-class
+/// GPU counts from [`crate::sim::placement::FreeState::live_capacity`])
+/// replaces the static per-class capacities in the plan-selection area
+/// rows, so failure-aware policies solve against what the fleet can
+/// actually serve while nodes are down. `None` — or a length mismatch —
+/// means the static capacities, making this entry bit-identical to
+/// [`solve_joint_traced`] on a healthy fleet. List scheduling and the
+/// exact-slot oracle keep the full cluster (the realized launches are
+/// still gated by the engine's real `FreeState`, so a too-optimistic
+/// schedule only queues; it never over-places).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_joint_live(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+    lookahead: f64,
+    warm: Option<&SaturnPlan>,
+    objective: Objective,
+    terms: &[JobTerms],
+    trace: &Tracer,
+    live_gpus: Option<&[f64]>,
+) -> (SaturnPlan, SolverStats) {
     let start = Instant::now();
     let traced = trace.is_enabled();
     if traced {
@@ -273,13 +314,31 @@ pub fn solve_joint_traced(
         );
         trace.begin("solver", "candidates", Json::obj(Vec::new()));
     }
-    if let Err(e) = check_fleet_feasibility(jobs, profiles, cluster) {
-        panic!("{e}");
-    }
     let kappa = lookahead.max(1.0);
     let mut stats = SolverStats::default();
+    // graceful degradation rung 1: jobs that fit nowhere are shed (they
+    // stay queued at the caller), never a process abort
+    let feasible_jobs: Vec<(usize, u64)>;
+    let jobs = match check_fleet_feasibility(jobs, profiles, cluster) {
+        Ok(()) => jobs,
+        Err(e) => {
+            feasible_jobs = jobs
+                .iter()
+                .copied()
+                .filter(|&(id, _)| profiles.feasible_anywhere(id))
+                .collect();
+            stats.shed_jobs = jobs.len() - feasible_jobs.len();
+            log::warn!(
+                "{e}; shedding {} job(s) and planning the rest",
+                stats.shed_jobs);
+            &feasible_jobs
+        }
+    };
     let plans = expand_plans(jobs, profiles);
-    let g_class = class_capacities(cluster);
+    let g_class = match live_gpus {
+        Some(live) if live.len() == cluster.n_classes() => live.to_vec(),
+        _ => class_capacities(cluster),
+    };
     let obj = ObjSpec::new(objective, terms);
     if traced {
         let cands: usize = plans.iter().map(|(_, ps)| ps.len()).sum();
@@ -312,7 +371,12 @@ pub fn solve_joint_traced(
             match milp_choice(&plans, &g_class, kappa, warm, &obj,
                               trace, &mut stats) {
                 Some(c) => c,
-                None => greedy(), // fallback
+                None => {
+                    // degradation rung 2: infeasible-after-shrink or a
+                    // limit with no incumbent — greedy incumbent plan
+                    stats.greedy_fallbacks += 1;
+                    greedy()
+                }
             }
         }
         SolverMode::ExactSlots { slots } => {
@@ -322,14 +386,20 @@ pub fn solve_joint_traced(
             match exact_slot_choice(&plans, cluster, slots, trace,
                                     &mut stats) {
                 Some(c) => c,
-                None => greedy(),
+                None => {
+                    stats.greedy_fallbacks += 1;
+                    greedy()
+                }
             }
         }
         SolverMode::RollingHorizon { window, overlap } => {
             match rolling_choice(&plans, &g_class, kappa, warm, window,
                                  overlap, &obj, trace, &mut stats) {
                 Some(c) => c,
-                None => greedy(),
+                None => {
+                    stats.greedy_fallbacks += 1;
+                    greedy()
+                }
             }
         }
     };
@@ -477,7 +547,10 @@ pub fn solve_joint_reference(
         &Tracer::off(), &mut stats)
     {
         Some(c) => c,
-        None => greedy_choice(&plans, &g_class, 1.0),
+        None => {
+            stats.greedy_fallbacks += 1;
+            greedy_choice(&plans, &g_class, 1.0)
+        }
     };
     let mut plan = build_schedule(choices, cluster);
     if plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS {
@@ -1494,16 +1567,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "fit no GPU class")]
-    fn job_fitting_no_class_panics_with_clear_error() {
+    fn job_fitting_no_class_is_shed_not_a_panic() {
         use crate::models::{DatasetSpec, ModelSpec};
         use crate::workload::Job;
         // a pathological model whose activation checkpoints alone overflow
-        // every class: even offload at full fleet width is infeasible
+        // every class: even offload at full fleet width is infeasible.
+        // The solver must shed it and keep planning the feasible jobs —
+        // a fleet that degrades mid-run never aborts the process.
         let mut model = ModelSpec::gpt2_xl();
         model.hidden = 1_000_000;
         model.act_bytes_per_sample = 1e15;
-        let jobs = vec![Job {
+        let monster = Job {
             id: 0,
             name: "monster".into(),
             model,
@@ -1511,12 +1585,61 @@ mod tests {
             lr: 1e-4,
             batch: 16,
             epochs: 1,
-        }];
+        };
+        let mut jobs = vec![monster];
+        for (i, mut j) in wikitext_workload().into_iter().take(3).enumerate()
+        {
+            j.id = i + 1;
+            jobs.push(j);
+        }
         let cluster = ClusterSpec::hetero(1, 1);
         let lib = default_library();
         let profiles = profile_analytic(&jobs, &lib, &cluster);
-        let rem = vec![(0usize, jobs[0].total_steps())];
-        let _ = solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let (plan, stats) =
+            solve_joint(&rem, &profiles, &cluster, SolverMode::Joint);
+        assert_eq!(stats.shed_jobs, 1, "the monster job was not shed");
+        assert!(plan.plan_for(0).is_none(),
+                "an infeasible job appeared in the plan");
+        assert_eq!(plan.choices.len(), 3,
+                   "feasible jobs were not planned after the shed");
+        // check_fleet_feasibility still reports it for the CLI's bail
+        assert!(check_fleet_feasibility(&rem, &profiles, &cluster)
+                    .unwrap_err()
+                    .contains("fit no GPU class"));
+    }
+
+    #[test]
+    fn degraded_live_capacity_changes_the_plan_not_the_process() {
+        // halve class 0's live capacity: the solve must stay panic-free
+        // and the area packed into class 0 must respect the degraded
+        // budget; a zeroed class simply pushes work to the other one
+        let jobs = wikitext_workload();
+        let lib = default_library();
+        let cluster = ClusterSpec::hetero(1, 1);
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem = remaining(&jobs);
+        let full = class_capacities(&cluster);
+        let degraded = vec![0.0, full[1]];
+        let (plan, _) = solve_joint_live(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::Makespan, &[], &Tracer::off(), Some(&degraded));
+        assert_eq!(plan.choices.len(), jobs.len());
+        // with class 0 dead, the MILP packs everything into class 1
+        // (jobs feasible only on class 0 would be the fallback's
+        // problem; this workload fits both)
+        let in_dead: f64 = plan.area_in_class(0);
+        let (plan_full, _) = solve_joint(&rem, &profiles, &cluster,
+                                         SolverMode::Joint);
+        assert!(in_dead <= plan_full.area_in_class(0),
+                "degraded capacity did not discourage the dead class");
+        // mismatched live slice falls back to static capacities
+        let (plan_bad, _) = solve_joint_live(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::Makespan, &[], &Tracer::off(), Some(&[1.0]));
+        assert_eq!(plan_bad.predicted_makespan_s.to_bits(),
+                   plan_full.predicted_makespan_s.to_bits());
     }
 
     #[test]

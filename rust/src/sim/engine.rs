@@ -25,6 +25,7 @@
 //! perf split too.
 
 use crate::cluster::ClusterSpec;
+use crate::faults::{FaultConfig, FaultModel};
 use crate::objective::Objective;
 use crate::obs::metrics::Histogram;
 use crate::obs::trace::Tracer;
@@ -90,6 +91,13 @@ pub struct JobProgress {
     pub score: f64,
     /// Next index into `RungConfig::fractions` this job has yet to cross.
     next_rung: usize,
+    /// A fault kill rolled this job back to its last checkpoint: its
+    /// next launch pays the class reload penalty even if the allocation
+    /// shape is unchanged (restart-from-checkpoint is never free).
+    needs_reload: bool,
+    /// When the pending fault-kill happened (recovery-latency clock,
+    /// cleared at the next successful launch).
+    fault_preempted_at: Option<f64>,
 }
 
 impl JobProgress {
@@ -105,7 +113,7 @@ impl JobProgress {
 /// Why the engine is asking the policy to (re)plan right now — the
 /// flight recorder's cause attribution for re-solve episodes. When an
 /// instant carries several event kinds the strongest wins
-/// (introspection > arrival > departure).
+/// (failure > introspection > arrival > departure).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReplanCause {
     /// The t=0 planning call.
@@ -121,6 +129,9 @@ pub enum ReplanCause {
     /// An event instant that changed no membership (e.g. a surviving
     /// rung crossing).
     Tick,
+    /// A fault-layer event at this instant: a node died (jobs on it
+    /// rolled back to checkpoint), a node came back, or a job crashed.
+    Failure,
 }
 
 impl ReplanCause {
@@ -132,6 +143,7 @@ impl ReplanCause {
             ReplanCause::Introspection => "introspection",
             ReplanCause::Idle => "idle",
             ReplanCause::Tick => "tick",
+            ReplanCause::Failure => "failure",
         }
     }
 }
@@ -223,6 +235,16 @@ pub struct SimConfig {
     /// emission a no-op and keeps replays bit-identical to untraced
     /// builds; wall stamps never feed back into scheduling decisions.
     pub trace: Tracer,
+    /// Seeded fault injection (DESIGN.md §4.7). `FaultConfig::none()`
+    /// (the default) keeps the engine bit-identical to the fault-free
+    /// build — no fault model is even constructed.
+    pub faults: FaultConfig,
+    /// Periodic checkpoint cadence, virtual seconds: a fault kill rolls
+    /// a stint's progress back to the last multiple of this interval
+    /// (work past it is lost and re-run). `0` means continuous
+    /// checkpointing — fault kills lose nothing. Planned preemptions
+    /// (introspection/replan) still checkpoint exactly, as before.
+    pub checkpoint_interval_s: f64,
 }
 
 impl Default for SimConfig {
@@ -232,6 +254,8 @@ impl Default for SimConfig {
             max_virtual_time_s: 1e9,
             objective: Objective::Makespan,
             trace: Tracer::off(),
+            faults: FaultConfig::none(),
+            checkpoint_interval_s: 1800.0,
         }
     }
 }
@@ -315,6 +339,23 @@ pub struct OnlineSimResult {
     /// Mean |ln(observed/estimated)| across those observations — the
     /// run's realized estimate error (0.0 without drift).
     pub estimate_mae: f64,
+    /// Node-down events the run actually hit (fault layer; 0 without
+    /// faults).
+    pub failures: usize,
+    /// Node-repair events the run actually hit.
+    pub repairs: usize,
+    /// Jobs killed by a node death or crash hazard (rolled back to
+    /// their last checkpoint).
+    pub fault_preemptions: usize,
+    /// GPU-seconds of work re-run because fault kills rolled progress
+    /// back past the last checkpoint.
+    pub lost_work_gpu_s: f64,
+    /// Mean seconds from a fault kill to the victim's next launch.
+    pub mean_recovery_s: f64,
+    /// (busy - lost) GPU-seconds / (total GPUs * makespan): utilization
+    /// counting only work that stuck. Equals `gpu_utilization` bit for
+    /// bit when faults are off.
+    pub goodput: f64,
 }
 
 impl OnlineSimResult {
@@ -393,9 +434,18 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             deadline_s: oj.deadline_s,
             score: oj.score,
             next_rung: 0,
+            needs_reload: false,
+            fault_preempted_at: None,
         })
         .collect();
     let mut free = FreeState::new(cluster);
+    // fault layer: constructed only when active, so the zero-fault path
+    // adds no work (and stays bit-identical to the fault-free engine)
+    let faults = cfg
+        .faults
+        .is_active()
+        .then(|| FaultModel::new(cfg.faults.clone(), cluster));
+    let mut fb = FaultBook::default();
     let mut now = 0.0f64;
     let mut preemptions = 0usize;
     let mut migrations = 0usize;
@@ -437,7 +487,7 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
     }
     apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                &mut launches, &mut migrations, cfg,
-               ReplanCause::Initial, &mut decision);
+               ReplanCause::Initial, &mut decision, &mut fb);
 
     let max_iters = 400_000;
     for _ in 0..max_iters {
@@ -462,7 +512,26 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             None => f64::INFINITY,
         };
         let next_intro = next_introspect.unwrap_or(f64::INFINITY);
-        let t_next = next_finish.min(next_arrival).min(next_rung).min(next_intro);
+        // fault-layer events: the fleet's next node fail/repair edge,
+        // plus the next crash instant of any RUNNING job
+        let next_fault = match &faults {
+            Some(fm) => {
+                let node_ev = fm
+                    .next_node_event_after(now)
+                    .unwrap_or(f64::INFINITY);
+                state
+                    .iter()
+                    .filter(|s| s.running.is_some())
+                    .filter_map(|s| fm.next_crash_after(s.job.id, now))
+                    .fold(node_ev, f64::min)
+            }
+            None => f64::INFINITY,
+        };
+        let t_next = next_finish
+            .min(next_arrival)
+            .min(next_rung)
+            .min(next_intro)
+            .min(next_fault);
 
         if !t_next.is_finite() {
             // nothing running/arriving: force-plan; if still nothing, deadlock
@@ -470,7 +539,7 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg,
-                       ReplanCause::Idle, &mut decision);
+                       ReplanCause::Idle, &mut decision, &mut fb);
             if launches == before {
                 panic!(
                     "policy '{}' deadlocked at t={now:.1}s with {} pending jobs",
@@ -636,12 +705,96 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             }
         }
 
+        // (3.5) fault sync: reconcile the fleet with the fault model's
+        // pure view at `now`. State comparison (model says down, books
+        // say up) rather than exact event-time matching, so a boundary
+        // within the event tolerance is caught at the next instant
+        // instead of lost. Dying nodes preempt-and-rollback their jobs
+        // BEFORE capacity is zeroed (release must see the grants).
+        let mut fault_now = false;
+        if let Some(fm) = &faults {
+            for ci in 0..cluster.n_classes() {
+                for ni in 0..cluster.class(ci).nodes as usize {
+                    let down = fm.node_down(ci, ni, now);
+                    if down && !free.node_is_down(ci, ni) {
+                        for s in state.iter_mut() {
+                            let hit = s
+                                .running
+                                .as_ref()
+                                .map(|r| {
+                                    r.placement.iter().any(|p| {
+                                        p.class == ci && p.node == ni
+                                    })
+                                })
+                                .unwrap_or(false);
+                            if hit {
+                                fault_preempt(s, now, cfg, &mut free,
+                                              perf, &mut fb, trace);
+                                departed_now |=
+                                    s.finished_at.is_some();
+                            }
+                        }
+                        free.set_node_down(ci, ni);
+                        fb.failures += 1;
+                        fault_now = true;
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "fault",
+                                "node_down",
+                                Json::obj(vec![
+                                    ("class", Json::num(ci as f64)),
+                                    ("node", Json::num(ni as f64)),
+                                ]),
+                            );
+                        }
+                    } else if !down && free.node_is_down(ci, ni) {
+                        free.set_node_up(ci, ni);
+                        fb.repairs += 1;
+                        fault_now = true;
+                        if trace.is_enabled() {
+                            trace.instant(
+                                "fault",
+                                "node_up",
+                                Json::obj(vec![
+                                    ("class", Json::num(ci as f64)),
+                                    ("node", Json::num(ni as f64)),
+                                ]),
+                            );
+                        }
+                    }
+                }
+            }
+            // per-job crash hazards: only running jobs can crash
+            for s in state.iter_mut() {
+                if s.running.is_some() && fm.crash_due(s.job.id, now) {
+                    fault_preempt(s, now, cfg, &mut free, perf,
+                                  &mut fb, trace);
+                    departed_now |= s.finished_at.is_some();
+                    fault_now = true;
+                    if trace.is_enabled() {
+                        trace.instant(
+                            "fault",
+                            "crash",
+                            Json::obj(vec![(
+                                "job",
+                                Json::num(s.job.id as f64),
+                            )]),
+                        );
+                    }
+                }
+            }
+        }
+
         // (4) replan: periodic introspection always preempts everything;
-        // arrival/departure events do so only when the policy opts in.
+        // arrival/departure events do so only when the policy opts in;
+        // fault events count as set changes (victims went pending,
+        // capacity moved).
         let introspect_now = next_introspect == Some(now);
-        let set_changed = arrived_now || departed_now;
+        let set_changed = arrived_now || departed_now || fault_now;
         // strongest event at this instant wins the cause attribution
-        let cause = if introspect_now {
+        let cause = if fault_now {
+            ReplanCause::Failure
+        } else if introspect_now {
             ReplanCause::Introspection
         } else if arrived_now {
             ReplanCause::Arrival
@@ -697,13 +850,13 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg, cause,
-                       &mut decision);
+                       &mut decision, &mut fb);
             preemptions += count_migrations(&pre_launch, &state);
         } else {
             perf.refresh(now);
             apply_plan(policy, &mut state, &mut free, perf, cluster, now,
                        &mut launches, &mut migrations, cfg, cause,
-                       &mut decision);
+                       &mut decision, &mut fb);
         }
     }
 
@@ -775,6 +928,85 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         milp_limit_reached,
         observations: perf.obs_seen(),
         estimate_mae: perf.estimate_mae(),
+        failures: fb.failures,
+        repairs: fb.repairs,
+        fault_preemptions: fb.fault_preemptions,
+        lost_work_gpu_s: fb.lost_work_gpu_s,
+        mean_recovery_s: if fb.recoveries > 0 {
+            fb.recovery_total_s / fb.recoveries as f64
+        } else {
+            0.0
+        },
+        goodput: (busy_gpu_seconds - fb.lost_work_gpu_s).max(0.0)
+            / (cluster.total_gpus() as f64 * makespan.max(1e-9)),
+    }
+}
+
+/// Run-level fault accounting (all zero when faults are off).
+#[derive(Debug, Default)]
+struct FaultBook {
+    failures: usize,
+    repairs: usize,
+    fault_preemptions: usize,
+    lost_work_gpu_s: f64,
+    recovery_total_s: f64,
+    recoveries: usize,
+}
+
+/// Kill one running stint from a fault: bank progress only up to the
+/// last periodic checkpoint (work past it is lost and re-run), release
+/// the grant, and leave the job pending with a mandatory reload on its
+/// next launch. Completion is still honored if the checkpointed
+/// progress happens to cover the job.
+fn fault_preempt(s: &mut JobProgress, now: f64, cfg: &SimConfig,
+                 free: &mut FreeState, perf: &mut PerfModel,
+                 fb: &mut FaultBook, trace: &Tracer) {
+    let Some(r) = s.running.take() else { return };
+    let ran = (now - r.resume_at).max(0.0);
+    let kept = if cfg.checkpoint_interval_s > 0.0 {
+        (ran / cfg.checkpoint_interval_s).floor()
+            * cfg.checkpoint_interval_s
+    } else {
+        ran
+    };
+    let done = if r.step_time > 0.0 {
+        (kept / r.step_time).floor() as u64
+    } else {
+        0
+    };
+    s.steps_done = (s.steps_done + done).min(s.job.total_steps());
+    fb.lost_work_gpu_s += (ran - kept).max(0.0) * r.gpus as f64;
+    free.release(&r.placement);
+    // telemetry streamed before the fault: the estimate layer keeps the
+    // whole stint's observation even though the tail's progress is lost
+    if let Some(o) = stint_observation(&r, s.job.id, now) {
+        perf.observe(&o);
+    }
+    if s.remaining_steps() == 0 {
+        s.finished_at = Some(now);
+        perf.retire_job(s.job.id);
+        if trace.is_enabled() {
+            trace.instant(
+                "job",
+                "complete",
+                Json::obj(vec![("job", Json::num(s.job.id as f64))]),
+            );
+        }
+        return;
+    }
+    s.last_alloc = Some((r.tech, r.gpus, r.class));
+    s.needs_reload = true;
+    s.fault_preempted_at = Some(now);
+    fb.fault_preemptions += 1;
+    if trace.is_enabled() {
+        trace.instant(
+            "job",
+            "fault_preempt",
+            Json::obj(vec![
+                ("job", Json::num(s.job.id as f64)),
+                ("lost_s", Json::num((ran - kept).max(0.0))),
+            ]),
+        );
     }
 }
 
@@ -841,7 +1073,8 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
               free: &mut FreeState, perf: &PerfModel,
               cluster: &ClusterSpec, now: f64, launches: &mut usize,
               migrations: &mut usize, cfg: &SimConfig,
-              cause: ReplanCause, decision: &mut Histogram) {
+              cause: ReplanCause, decision: &mut Histogram,
+              fb: &mut FaultBook) {
     let trace = &cfg.trace;
     if trace.is_enabled() {
         let pending = state.iter().filter(|s| s.is_pending()).count();
@@ -900,13 +1133,19 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
         // cheaper clean reload into the destination class
         let migrated = s.last_alloc.map(|a| a != (l.tech, l.gpus, l.class))
             .unwrap_or(false);
-        let lag = match s.last_alloc {
+        let mut lag = match s.last_alloc {
             Some((_, _, prev_class)) if migrated && prev_class != l.class => {
                 cluster.class(l.class).reload_penalty_s
             }
             _ if migrated => cfg.checkpoint_penalty_s,
             _ => 0.0,
         };
+        if s.needs_reload {
+            // restart-from-checkpoint after a fault kill: a clean
+            // reload even when the allocation shape is unchanged
+            lag = lag.max(cluster.class(l.class).reload_penalty_s);
+            s.needs_reload = false;
+        }
         if migrated {
             *migrations += 1;
         }
@@ -923,6 +1162,10 @@ fn apply_plan(policy: &mut dyn Policy, state: &mut [JobProgress],
             observed_s: 0.0,
         });
         s.last_alloc = Some((l.tech, l.gpus, l.class));
+        if let Some(t0) = s.fault_preempted_at.take() {
+            fb.recovery_total_s += now - t0;
+            fb.recoveries += 1;
+        }
         *launches += 1;
         if trace.is_enabled() {
             trace.instant(
@@ -1231,5 +1474,76 @@ mod tests {
         assert_eq!(a.finish_times, b.finish_times);
         assert_eq!(a.estimate_mae, b.estimate_mae);
         assert_eq!(a.observations, b.observations);
+    }
+
+    // -- faults ------------------------------------------------------------
+
+    #[test]
+    fn fault_free_run_reports_zero_fault_metrics() {
+        let (_, profiles, cluster) = setup(4);
+        let jobs = online_jobs(4, 1_000.0);
+        let r = simulate_online(&jobs, None, &profiles, &cluster,
+                                &mut Fifo, &SimConfig::default());
+        assert_eq!(r.failures, 0);
+        assert_eq!(r.repairs, 0);
+        assert_eq!(r.fault_preemptions, 0);
+        assert_eq!(r.lost_work_gpu_s, 0.0);
+        assert_eq!(r.mean_recovery_s, 0.0);
+        assert_eq!(r.goodput.to_bits(), r.gpu_utilization.to_bits(),
+                   "zero-fault goodput must BE utilization");
+    }
+
+    #[test]
+    fn crash_hazard_rolls_back_and_delays_completion() {
+        let (_, profiles, cluster) = setup(3);
+        let jobs = online_jobs(3, 0.0);
+        let clean = simulate_online(&jobs, None, &profiles, &cluster,
+                                    &mut Fifo, &SimConfig::default());
+        // crash-only faults, aggressive hazard so toy-length stints get
+        // hit; coarse checkpoints so each kill visibly loses work
+        let cfg = SimConfig {
+            faults: FaultConfig {
+                seed: 3,
+                crash_per_hour: 4.0,
+                ..FaultConfig::none()
+            },
+            checkpoint_interval_s: 600.0,
+            ..SimConfig::default()
+        };
+        let r = simulate_online(&jobs, None, &profiles, &cluster,
+                                &mut Fifo, &cfg);
+        assert_eq!(r.completed.len(), 3, "crashes must not lose jobs");
+        assert!(r.fault_preemptions > 0,
+                "4/h hazard never fired on a toy run");
+        assert!(r.lost_work_gpu_s > 0.0);
+        assert!(r.makespan_s > clean.makespan_s,
+                "lost work did not lengthen the schedule: {} vs {}",
+                r.makespan_s, clean.makespan_s);
+        assert!(r.goodput < r.gpu_utilization);
+        assert!(r.mean_recovery_s >= 0.0);
+        // replay stays bit-identical under faults
+        let r2 = simulate_online(&jobs, None, &profiles, &cluster,
+                                 &mut Fifo, &cfg);
+        assert_eq!(r.finish_times, r2.finish_times);
+        assert_eq!(r.lost_work_gpu_s.to_bits(),
+                   r2.lost_work_gpu_s.to_bits());
+    }
+
+    #[test]
+    fn node_outage_preempts_and_capacity_returns_after_repair() {
+        let (_, profiles, cluster) = setup(4);
+        let jobs = online_jobs(4, 0.0);
+        let cfg = SimConfig {
+            faults: FaultConfig::uniform(7, 1.0), // 1h MTBF: outages hit
+            checkpoint_interval_s: 900.0,
+            ..SimConfig::default()
+        };
+        let r = simulate_online(&jobs, None, &profiles, &cluster,
+                                &mut Fifo, &cfg);
+        assert_eq!(r.finish_times.len(), 4, "outages must not lose jobs");
+        assert!(r.failures > 0, "1h MTBF drew no node failures");
+        assert!(r.repairs > 0, "no node ever came back");
+        assert!(r.peak_gpus <= cluster.total_gpus());
+        assert!(r.gpu_utilization <= 1.0 + 1e-9);
     }
 }

@@ -15,10 +15,15 @@ pub struct Placement {
 }
 
 /// Free-GPU bookkeeping for one homogeneous class.
+///
+/// A node marked `down` (fault layer, DESIGN.md §4.7) carries zero free
+/// GPUs, so the placement routines skip it without any fault-specific
+/// branches of their own.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassFree {
     pub free: Vec<u32>,
     pub per_node: u32,
+    pub down: Vec<bool>,
 }
 
 /// Free-GPU bookkeeping per class, per node.
@@ -36,6 +41,7 @@ impl FreeState {
                 .map(|c| ClassFree {
                     free: vec![c.node.gpus_per_node; c.nodes as usize],
                     per_node: c.node.gpus_per_node,
+                    down: vec![false; c.nodes as usize],
                 })
                 .collect(),
         }
@@ -62,6 +68,52 @@ impl FreeState {
         self.classes
             .get(class)
             .map(|c| c.per_node * c.free.len() as u32)
+            .unwrap_or(0)
+    }
+
+    /// Take `node` of `class` out of service: its free count drops to
+    /// zero so no placement can select it. The engine must preempt (and
+    /// release) every job on the node first — marking a node down while
+    /// its GPUs are still granted would double-count them on release.
+    pub fn set_node_down(&mut self, class: usize, node: usize) {
+        let Some(cf) = self.classes.get_mut(class) else { return };
+        if node >= cf.free.len() || cf.down[node] {
+            return;
+        }
+        debug_assert!(cf.free[node] == cf.per_node,
+                      "mark down only after preempting the node's jobs");
+        cf.down[node] = true;
+        cf.free[node] = 0;
+    }
+
+    /// Return a repaired node to service with its full capacity.
+    pub fn set_node_up(&mut self, class: usize, node: usize) {
+        let Some(cf) = self.classes.get_mut(class) else { return };
+        if node >= cf.free.len() || !cf.down[node] {
+            return;
+        }
+        cf.down[node] = false;
+        cf.free[node] = cf.per_node;
+    }
+
+    pub fn node_is_down(&self, class: usize, node: usize) -> bool {
+        self.classes
+            .get(class)
+            .and_then(|c| c.down.get(node))
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Capacity of one class counting only in-service nodes — the
+    /// degraded figure failure-aware policies feed the MILP capacity
+    /// rows.
+    pub fn live_capacity(&self, class: usize) -> u32 {
+        self.classes
+            .get(class)
+            .map(|c| {
+                c.per_node
+                    * c.down.iter().filter(|&&d| !d).count() as u32
+            })
             .unwrap_or(0)
     }
 
@@ -197,6 +249,46 @@ mod tests {
         assert!(f.place(1, 8).is_some());
         f.release(&p);
         assert_eq!(f.class_free(0), 8);
+    }
+
+    #[test]
+    fn down_node_is_unplaceable_until_repaired() {
+        let mut f = fleet(2);
+        assert_eq!(f.live_capacity(0), 16);
+        f.set_node_down(0, 0);
+        assert!(f.node_is_down(0, 0));
+        assert_eq!(f.live_capacity(0), 8);
+        assert_eq!(f.class_free(0), 8);
+        // capacity (nodes x per_node) is the static figure; live is not
+        assert_eq!(f.class_capacity(0), 16);
+        // only the surviving node can host, so a second 8-GPU job fails
+        let p = f.place(0, 8).unwrap();
+        assert_eq!(p[0].node, 1);
+        assert!(f.place(0, 1).is_none());
+        f.release(&p);
+        f.set_node_up(0, 0);
+        assert!(!f.node_is_down(0, 0));
+        assert_eq!(f.live_capacity(0), 16);
+        assert_eq!(f.total_free(), 16);
+        assert!(f.place(0, 16).is_some());
+    }
+
+    #[test]
+    fn down_up_transitions_are_idempotent_and_bounds_checked() {
+        let mut f = fleet(1);
+        f.set_node_down(0, 0);
+        f.set_node_down(0, 0); // second down is a no-op
+        assert_eq!(f.live_capacity(0), 0);
+        f.set_node_up(0, 0);
+        f.set_node_up(0, 0); // second up is a no-op
+        assert_eq!(f.total_free(), 8);
+        // out-of-range entities are ignored, not panics
+        f.set_node_down(0, 99);
+        f.set_node_down(7, 0);
+        f.set_node_up(7, 0);
+        assert!(!f.node_is_down(0, 99));
+        assert!(!f.node_is_down(7, 0));
+        assert_eq!(f.live_capacity(7), 0);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Property-based invariants for the fault-injection layer (DESIGN.md
+//! §4.7), via the in-repo `util::prop` framework:
+//!
+//!  * **Strict generalization** — a faults-disabled run through the
+//!    fault-aware engine is bit-identical to the plain path for every
+//!    online system, with all fault counters at zero and goodput equal
+//!    to utilization bit for bit;
+//!  * **Progress conservation** — crash kills never lose banked
+//!    checkpoints: continuous checkpointing (interval 0) loses zero
+//!    work, and every job still departs under any crash hazard;
+//!  * **Capacity** — the pre-drawn outage windows are ascending,
+//!    disjoint, and finite, and a faulted run never grants more GPUs
+//!    than the fleet owns;
+//!  * **Determinism** — a faulted run replays bit-identically, traced
+//!    (deterministic journal) or untraced;
+//!  * **Attribution** — every node-death instant in the journal pairs
+//!    with a same-instant `sched/plan` span whose cause is `failure`,
+//!    and the policy's `solver/resolve` spans carry the cause too.
+
+use saturn::cluster::ClusterSpec;
+use saturn::faults::{FaultConfig, FaultModel};
+use saturn::obs::trace::{EventPhase, Tracer};
+use saturn::online::{profile_trace, run_trace, run_trace_faults,
+                     run_trace_sim};
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::SolverMode;
+use saturn::sim::engine::{RungConfig, SimConfig};
+use saturn::util::json::Json;
+use saturn::util::prop::{forall, IntRange};
+use saturn::workload::{generate_trace, TraceConfig};
+
+fn trace_of_seed(seed: u64) -> saturn::workload::Trace {
+    generate_trace(&TraceConfig {
+        seed,
+        multijobs: 3,
+        ..Default::default()
+    })
+}
+
+/// A crash-hazard-only fault layer: no node deaths, so it runs on any
+/// fleet and isolates the checkpoint/rollback arithmetic.
+fn crash_cfg(seed: u64) -> FaultConfig {
+    FaultConfig {
+        seed,
+        crash_per_hour: 3.0,
+        ..FaultConfig::none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// strict generalization: faults off == the plain path, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_zero_fault_run_is_bit_identical_for_every_system() {
+    forall(201, 6, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(seed as u64);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        // a non-default checkpoint interval must be inert without faults
+        let cfg = SimConfig {
+            faults: FaultConfig::none(),
+            checkpoint_interval_s: 123.0,
+            ..SimConfig::default()
+        };
+        for sys in ["online-current-practice", "online-optimus",
+                    "online-saturn"] {
+            let (a, ma) = run_trace(&trace, Some(&rungs), &profiles,
+                                    &cluster, sys, SolverMode::Joint);
+            let mut perf = PerfModel::exact(&profiles);
+            let (b, mb) = run_trace_sim(&trace, Some(&rungs), &mut perf,
+                                        &cluster, sys, SolverMode::Joint,
+                                        None, &cfg);
+            if a.finish_times != b.finish_times || a.jct_s != b.jct_s {
+                return Err(format!("{sys}: schedules diverged"));
+            }
+            if a.early_stopped != b.early_stopped
+                || a.launches != b.launches
+            {
+                return Err(format!("{sys}: departures diverged"));
+            }
+            if ma.makespan_s.to_bits() != mb.makespan_s.to_bits() {
+                return Err(format!("{sys}: makespan bits diverged"));
+            }
+            if mb.failures != 0 || mb.fault_preemptions != 0
+                || mb.lost_work_gpu_s != 0.0
+            {
+                return Err(format!("{sys}: phantom fault metrics"));
+            }
+            if mb.goodput.to_bits() != mb.gpu_utilization.to_bits() {
+                return Err(format!(
+                    "{sys}: goodput != utilization without faults"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// progress conservation under crash kills
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_continuous_checkpointing_loses_no_work() {
+    forall(202, 6, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(7);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let cfg = SimConfig {
+            faults: crash_cfg(seed as u64),
+            checkpoint_interval_s: 0.0, // continuous: nothing is lost
+            ..SimConfig::default()
+        };
+        let mut perf = PerfModel::exact(&profiles);
+        let (r, m) = run_trace_faults(&trace, None, &mut perf, &cluster,
+                                      SolverMode::Joint, &cfg, true);
+        if r.finish_times.len() != trace.jobs.len() {
+            return Err("a crashed job never departed".into());
+        }
+        if m.lost_work_gpu_s != 0.0 {
+            return Err(format!(
+                "continuous checkpointing lost {} GPU-s",
+                m.lost_work_gpu_s));
+        }
+        if m.goodput.to_bits() != m.gpu_utilization.to_bits() {
+            return Err("zero lost work but goodput != utilization".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_job_departs_under_crash_hazards() {
+    forall(203, 6, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(seed as u64);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let cfg = SimConfig {
+            faults: crash_cfg(seed as u64 + 1),
+            checkpoint_interval_s: 600.0,
+            ..SimConfig::default()
+        };
+        let mut perf = PerfModel::exact(&profiles);
+        let (r, m) = run_trace_faults(&trace, None, &mut perf, &cluster,
+                                      SolverMode::Joint, &cfg, true);
+        if r.finish_times.len() != trace.jobs.len() {
+            return Err("a crashed job never departed".into());
+        }
+        if m.completed + m.early_stopped != trace.jobs.len() {
+            return Err("departure accounting split a job".into());
+        }
+        if m.lost_work_gpu_s < 0.0 {
+            return Err("negative lost work".into());
+        }
+        if m.goodput > m.gpu_utilization + 1e-12 {
+            return Err(format!("goodput {} above utilization {}",
+                               m.goodput, m.gpu_utilization));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// capacity: sane outage windows, never over-granting a degraded fleet
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_outage_windows_are_ascending_disjoint_and_finite() {
+    let cluster = ClusterSpec::p4d(2);
+    forall(204, 20, &IntRange(0, 10_000), |&seed| {
+        let fm = FaultModel::new(FaultConfig::uniform(seed as u64, 2.0),
+                                 &cluster);
+        for ci in 0..cluster.n_classes() {
+            for ni in 0..cluster.class(ci).nodes as usize {
+                let mut prev_end = f64::NEG_INFINITY;
+                for &(a, b) in fm.outages(ci, ni) {
+                    if !(a.is_finite() && b.is_finite()) {
+                        return Err("non-finite outage window".into());
+                    }
+                    if b <= a {
+                        return Err(format!("empty window ({a}, {b})"));
+                    }
+                    if a < prev_end {
+                        return Err("overlapping outage windows".into());
+                    }
+                    // node_down must agree with the window itself
+                    if !fm.node_down(ci, ni, (a + b) / 2.0)
+                        || fm.node_down(ci, ni, a - 1.0)
+                    {
+                        return Err("node_down disagrees with \
+                                    windows".into());
+                    }
+                    prev_end = b;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faulted_runs_never_exceed_fleet_capacity() {
+    let cluster = ClusterSpec::p4d(2);
+    forall(205, 4, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(seed as u64);
+        let profiles = profile_trace(&trace, &cluster);
+        let cfg = SimConfig {
+            faults: FaultConfig::uniform(seed as u64, 1.0),
+            checkpoint_interval_s: 900.0,
+            ..SimConfig::default()
+        };
+        let mut perf = PerfModel::exact(&profiles);
+        let (r, _) = run_trace_faults(&trace, None, &mut perf, &cluster,
+                                      SolverMode::Joint, &cfg, true);
+        if r.peak_gpus > cluster.total_gpus() {
+            return Err(format!("granted {} GPUs on a {}-GPU fleet",
+                               r.peak_gpus, cluster.total_gpus()));
+        }
+        if r.finish_times.len() != trace.jobs.len() {
+            return Err("a job never departed across fail/repair".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// determinism: faulted replays are bit-identical, traced or untraced
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_faulted_replays_are_bit_identical_traced_or_not() {
+    let cluster = ClusterSpec::p4d(2);
+    forall(206, 4, &IntRange(0, 1000), |&seed| {
+        let trace = trace_of_seed(seed as u64);
+        let profiles = profile_trace(&trace, &cluster);
+        let run = |tracer: Tracer| {
+            let cfg = SimConfig {
+                faults: FaultConfig::uniform(seed as u64, 2.0),
+                checkpoint_interval_s: 900.0,
+                trace: tracer,
+                ..SimConfig::default()
+            };
+            let mut perf = PerfModel::exact(&profiles);
+            run_trace_faults(&trace, None, &mut perf, &cluster,
+                             SolverMode::Joint, &cfg, true)
+                .0
+        };
+        let a = run(Tracer::off());
+        let b = run(Tracer::off());
+        let c = run(Tracer::deterministic());
+        for (other, label) in [(&b, "replay"), (&c, "traced")] {
+            if a.finish_times != other.finish_times
+                || a.jct_s != other.jct_s
+                || a.launches != other.launches
+                || a.fault_preemptions != other.fault_preemptions
+                || a.makespan_s.to_bits() != other.makespan_s.to_bits()
+            {
+                return Err(format!("{label} run diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// attribution: node deaths pair with failure-cause replans in the trace
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_trace_pairs_node_deaths_with_failure_replans() {
+    let trace = trace_of_seed(42);
+    let cluster = ClusterSpec::p4d(2);
+    let profiles = profile_trace(&trace, &cluster);
+    let tracer = Tracer::deterministic();
+    let cfg = SimConfig {
+        faults: FaultConfig::uniform(7, 1.0),
+        checkpoint_interval_s: 900.0,
+        trace: tracer.clone(),
+        ..SimConfig::default()
+    };
+    let mut perf = PerfModel::exact(&profiles);
+    let (r, _) = run_trace_faults(&trace, None, &mut perf, &cluster,
+                                  SolverMode::Joint, &cfg, true);
+    assert!(r.failures > 0, "no node ever died at MTBF 1 h");
+    let events = tracer.events();
+    let cause_of = |args: &Json| {
+        args.get("cause")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string()
+    };
+    let deaths: Vec<f64> = events
+        .iter()
+        .filter(|e| e.cat == "fault" && e.name == "node_down")
+        .map(|e| e.t_s)
+        .collect();
+    assert!(!deaths.is_empty(), "failures counted but never journaled");
+    // every node death replans at the same instant, attributed to the
+    // failure cause (failure outranks every other cause at a tie)
+    for t in &deaths {
+        let paired = events.iter().any(|e| {
+            e.cat == "sched"
+                && e.name == "plan"
+                && e.phase == EventPhase::Begin
+                && (e.t_s - t).abs() < 1e-9
+                && cause_of(&e.args) == "failure"
+        });
+        assert!(paired, "node death at t={t} has no failure-cause plan");
+    }
+    // the policy's re-solve spans carry the cause too
+    assert!(events.iter().any(|e| {
+        e.cat == "solver"
+            && e.name == "resolve"
+            && e.phase == EventPhase::Begin
+            && cause_of(&e.args) == "failure"
+    }), "no solver resolve span attributed to a failure");
+}
