@@ -13,8 +13,9 @@
 use saturn::bench::{fmt_s, print_header, print_stats, Bencher};
 use saturn::cluster::ClusterSpec;
 use saturn::parallelism::default_library;
-use saturn::saturn::solver::{plan_selection_probe, solve_joint,
-                             SolverMode, SolverStats};
+use saturn::saturn::solver::{plan_selection_colgen, plan_selection_probe,
+                             sharded_probe, solve_joint, SolverMode,
+                             SolverStats};
 use saturn::solver::milp::MilpEngine;
 use saturn::trials::{profile_analytic, ProfileTable};
 use saturn::util::json::Json;
@@ -155,6 +156,100 @@ fn main() {
         ]));
     }
 
+    // ------------------------------------------------------------------
+    // column generation vs the full candidate grid (same 1e-6 budgets)
+    // ------------------------------------------------------------------
+    print_header("column generation vs full grid (restricted master)");
+    let full_columns: usize = remaining48
+        .iter()
+        .map(|&(id, _)| profiles48.candidate_plans(id).len())
+        .sum();
+    let (colgen_obj, colgen_stats) =
+        plan_selection_colgen(&remaining48, &profiles48, &cluster)
+            .expect("colgen probe solved");
+    let colgen_delta = (colgen_obj - revised_obj).abs()
+        / revised_obj.abs().max(1.0);
+    println!("colgen objective {colgen_obj:.3}s vs full grid \
+              {revised_obj:.3}s (rel delta {colgen_delta:.2e})");
+    println!("columns: {} seed + {} priced of {} in the full grid",
+             seed_n, colgen_stats.columns_priced, full_columns);
+    assert!(colgen_delta <= 1e-6,
+            "column generation missed the full-grid optimum: \
+             {colgen_obj} vs {revised_obj}");
+
+    // ------------------------------------------------------------------
+    // sharded vs monolithic (direct at n=96, bound-relative at n=256)
+    // ------------------------------------------------------------------
+    print_header("sharded cells vs monolithic solve");
+    let (remaining96, profiles96) = setup(96, &big_cluster);
+    let (mono_obj, mono_stats) =
+        plan_selection_probe(&remaining96, &profiles96, &big_cluster,
+                             MilpEngine::Revised)
+            .expect("monolithic probe solved");
+    let (shard_obj, shard96_stats) =
+        sharded_probe(&remaining96, &profiles96, &big_cluster, 32, 4)
+            .expect("sharded probe solved");
+    let direct_gap = (shard_obj - mono_obj) / mono_obj.max(1e-9);
+    println!("n=96: sharded {shard_obj:.3}s ({} cells, {} columns) vs \
+              monolithic {mono_obj:.3}s — gap {:.2}%",
+             shard96_stats.cells, shard96_stats.columns_priced,
+             100.0 * direct_gap);
+    assert!(direct_gap <= 0.05,
+            "sharded solve lost >5% to the monolithic optimum: \
+             {shard_obj} vs {mono_obj}");
+
+    let (remaining256, profiles256) = setup(256, &big_cluster);
+    let (plan256, stats256) =
+        solve_joint(&remaining256, &profiles256, &big_cluster,
+                    SolverMode::sharded_default());
+    println!("n=256: sharded makespan {:.0}s, {} cells, shard gap \
+              {:.2}% vs monolithic lower bound",
+             plan256.predicted_makespan_s, stats256.cells,
+             100.0 * stats256.shard_gap);
+    assert!(stats256.shard_gap <= 0.05,
+            "n=256 shard gap above 5%: {}", stats256.shard_gap);
+
+    // ------------------------------------------------------------------
+    // sharded scale-out: thousands of jobs
+    // ------------------------------------------------------------------
+    print_header("sharded joint solve (cell_size 64, 4 workers)");
+    let scale_bencher = Bencher::new(0, if fast { 1 } else { 3 });
+    let mut scale_json: Vec<Json> = Vec::new();
+    for n in [512usize, 1024, 4096] {
+        let (remaining, profiles) = setup(n, &big_cluster);
+        let mut makespan = 0.0;
+        let mut last_stats = SolverStats::default();
+        let s = scale_bencher.run_fn(&format!("sharded/jobs={n}"), || {
+            let (plan, st) = solve_joint(&remaining, &profiles,
+                                         &big_cluster,
+                                         SolverMode::sharded_default());
+            makespan = plan.predicted_makespan_s;
+            last_stats = st;
+        });
+        print_stats(&s);
+        println!("{:<44} {} cells, {} columns priced, {} eta / {} \
+                  refactor, gap {:.2}%",
+                 format!("  sharded counters/jobs={n}"), last_stats.cells,
+                 last_stats.columns_priced, last_stats.eta_updates,
+                 last_stats.refactorizations, 100.0 * last_stats.shard_gap);
+        scale_json.push(Json::obj(vec![
+            ("jobs", Json::num(n as f64)),
+            ("wall_s", Json::num(s.mean_s)),
+            ("p99_s", Json::num(s.p99_s)),
+            ("makespan_s", Json::num(makespan)),
+            ("cells", Json::num(last_stats.cells as f64)),
+            ("columns_priced",
+             Json::num(last_stats.columns_priced as f64)),
+            ("eta_updates", Json::num(last_stats.eta_updates as f64)),
+            ("refactorizations",
+             Json::num(last_stats.refactorizations as f64)),
+            ("shard_gap", Json::num(last_stats.shard_gap)),
+            ("greedy_fallbacks",
+             Json::num(last_stats.greedy_fallbacks as f64)),
+            ("solved", Json::Bool(makespan > 0.0)),
+        ]));
+    }
+
     print_header("exact time-indexed MILP (small instances only)");
     for n in [3usize, 4] {
         let (remaining, profiles) = setup(n, &cluster);
@@ -183,6 +278,25 @@ fn main() {
             ("revised_objective_s", Json::num(revised_obj)),
             ("objective_rel_delta", Json::num(obj_delta)),
         ])),
+        ("colgen_comparison", Json::obj(vec![
+            ("jobs", Json::num(seed_n as f64)),
+            ("colgen_objective_s", Json::num(colgen_obj)),
+            ("full_grid_objective_s", Json::num(revised_obj)),
+            ("objective_rel_delta", Json::num(colgen_delta)),
+            ("columns_priced",
+             Json::num(colgen_stats.columns_priced as f64)),
+            ("full_grid_columns", Json::num(full_columns as f64)),
+        ])),
+        ("shard_comparison", Json::obj(vec![
+            ("jobs", Json::num(96.0)),
+            ("sharded_objective_s", Json::num(shard_obj)),
+            ("monolithic_objective_s", Json::num(mono_obj)),
+            ("gap", Json::num(direct_gap)),
+            ("monolithic_wall_s", Json::num(mono_stats.wall_s)),
+            ("sharded_wall_s", Json::num(shard96_stats.wall_s)),
+            ("gap_256", Json::num(stats256.shard_gap)),
+        ])),
+        ("scale", Json::arr(scale_json.into_iter())),
     ]);
     std::fs::write(&out, record.to_string()).expect("writing perf record");
     println!("\nwrote {out}");

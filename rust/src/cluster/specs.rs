@@ -66,6 +66,12 @@ pub struct NodeSpec {
     pub intra_bw: f64,
     /// Host<->GPU PCIe bandwidth, bytes/s (offloading cost model).
     pub pcie_bw: f64,
+    /// Fraction of streamed PCIe traffic the node's copy engines hide
+    /// behind compute (double-buffered offload). Gen4 parts sustain the
+    /// classic 0.4; gen5 doubles the lanes and adds H100's async TMA
+    /// copy engines, so the stream hides much deeper. Cost-model readers
+    /// treat it as a floor on their own overlap knob.
+    pub pcie_overlap: f64,
 }
 
 impl NodeSpec {
@@ -75,6 +81,7 @@ impl NodeSpec {
             gpu: GpuSpec::a100_40gb(),
             intra_bw: 240e9,
             pcie_bw: 32e9,
+            pcie_overlap: 0.4,
         }
     }
 
@@ -84,6 +91,9 @@ impl NodeSpec {
             gpu: GpuSpec::h100_80gb(),
             intra_bw: 360e9,
             pcie_bw: 64e9,
+            // PCIe gen5 offload-overlap term: 2x lanes + async copy
+            // engines keep the weight stream ahead of compute
+            pcie_overlap: 0.7,
         }
     }
 }
@@ -343,6 +353,12 @@ impl ClusterSpec {
 
     pub fn pcie_bw(&self) -> f64 {
         self.primary().node.pcie_bw
+    }
+
+    /// PCIe stream overlap of the primary class's nodes (offload cost
+    /// model; see [`NodeSpec::pcie_overlap`]).
+    pub fn pcie_overlap(&self) -> f64 {
+        self.primary().node.pcie_overlap
     }
 
     /// Inter-node fabric of the primary class (cost-model view accessor).

@@ -49,7 +49,8 @@ fn main() -> Result<()> {
             println!("  table2    [--workload wikitext|imagenet|all] [--seed N]");
             println!("  plan      [--workload ...] [--nodes N]");
             println!("            [--fleet a100:32,h100:16]");
-            println!("            [--mode joint|greedy|rolling]");
+            println!("            [--mode joint|greedy|rolling|sharded]");
+            println!("            [--cell-size N]");
             println!("            [--objective makespan|tardiness|wjct]");
             println!("            [--alpha F] [--deadline-weight F]");
             println!("            [--trace PATH] [--trace-chrome PATH]");
@@ -57,7 +58,8 @@ fn main() -> Result<()> {
             println!("            [--burst N] [--tenants N] [--rungs 0.25,0.5]");
             println!("            [--kill-fraction F] [--deadline-slack-s S]");
             println!("            [--nodes N] [--fleet a100:32,h100:16]");
-            println!("            [--mode joint|greedy|rolling]");
+            println!("            [--mode joint|greedy|rolling|sharded]");
+            println!("            [--cell-size N]");
             println!("            [--objective makespan|tardiness|wjct]");
             println!("            [--alpha F] [--deadline-weight F]");
             println!("            [--drift F] [--drift-seed N]");
@@ -145,6 +147,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mode = match args.str_or("mode", "joint").as_str() {
         "greedy" => SolverMode::Heuristic,
         "rolling" => SolverMode::rolling_default(),
+        "sharded" => SolverMode::Sharded {
+            cell_size: args.usize_or("cell-size", 64),
+        },
         _ => SolverMode::Joint,
     };
     let objective = objective_from_args(args)?;
@@ -180,11 +185,18 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     println!("\npredicted makespan: {:.2} h (lower bound {:.2} h)",
              plan.predicted_makespan_s / 3600.0, plan.lower_bound_s / 3600.0);
-    println!("solver: {:.1} ms, {} B&B nodes, {} pivots, warm-basis \
-              {:.0}%, {} window(s), optimal={}",
+    println!("solver: {:.1} ms, {} B&B nodes, {} pivots ({} eta, {} \
+              refactor), warm-basis {:.0}%, {} window(s), optimal={}",
              stats.wall_s * 1e3, stats.milp_nodes, stats.lp_pivots,
+             stats.eta_updates, stats.refactorizations,
              100.0 * stats.warm_hit_rate(), stats.windows.max(1),
              stats.proved_optimal);
+    if stats.cells > 0 {
+        println!("sharded: {} cell(s), {} column(s) priced, shard gap \
+                  {:.2}% vs monolithic bound",
+                 stats.cells, stats.columns_priced,
+                 100.0 * stats.shard_gap);
+    }
     write_trace_outputs(args, &tracer)?;
     Ok(())
 }
@@ -220,6 +232,9 @@ fn cmd_online(args: &Args) -> Result<()> {
     let mode = match args.str_or("mode", "joint").as_str() {
         "greedy" => SolverMode::Heuristic,
         "rolling" => SolverMode::rolling_default(),
+        "sharded" => SolverMode::Sharded {
+            cell_size: args.usize_or("cell-size", 64),
+        },
         _ => SolverMode::Joint,
     };
     let objective = objective_from_args(args)?;
@@ -386,6 +401,13 @@ fn cmd_online(args: &Args) -> Result<()> {
               solve(s), {} drift re-solve(s)",
              sat.lp_capped, sat.milp_limit_reached,
              sat.drift_resolves.unwrap_or(0));
+    println!("solver factors: {} eta update(s), {} refactorization(s), \
+              {} column(s) priced, {} cell(s), shard gap {:.2}%",
+             sat.eta_updates.unwrap_or(0),
+             sat.refactorizations.unwrap_or(0),
+             sat.columns_priced.unwrap_or(0),
+             sat.solver_cells.unwrap_or(0),
+             100.0 * sat.shard_gap.unwrap_or(0.0));
     if drift_mag > 0.0 {
         println!("estimate layer: {} observation(s), mean |ln(obs/est)| \
                   {:.4}", sat.observations, sat.estimate_mae);

@@ -90,6 +90,22 @@ pub struct OnlineMetrics {
     /// (`SolverStats::greedy_fallbacks`, Saturn only) — the visible
     /// count of "solver kept going instead of keeping up".
     pub solver_fallbacks: Option<usize>,
+    /// Candidate columns priced into column-generation restricted
+    /// masters across the run (Saturn only; 0 unless a sharded/colgen
+    /// solve ran).
+    pub columns_priced: Option<usize>,
+    /// Product-form eta updates across every node LP (Saturn only) —
+    /// the cheap-path counter of the Forrest–Tomlin basis maintenance.
+    pub eta_updates: Option<usize>,
+    /// From-scratch basis factorizations across every node LP (Saturn
+    /// only) — warm entries plus spike/drift-triggered eta collapses.
+    pub refactorizations: Option<usize>,
+    /// Cells the most recent sharded solve partitioned the queue into
+    /// (Saturn only; 0 = unsharded).
+    pub solver_cells: Option<usize>,
+    /// Worst bound-relative shard optimality gap seen across the run's
+    /// sharded solves (Saturn only; 0 = unsharded or no measurable gap).
+    pub shard_gap: Option<f64>,
 }
 
 impl OnlineMetrics {
@@ -145,6 +161,26 @@ impl OnlineMetrics {
             ("goodput", Json::num(self.goodput)),
             ("solver_fallbacks", match self.solver_fallbacks {
                 Some(f) => Json::num(f as f64),
+                None => Json::Null,
+            }),
+            ("columns_priced", match self.columns_priced {
+                Some(c) => Json::num(c as f64),
+                None => Json::Null,
+            }),
+            ("eta_updates", match self.eta_updates {
+                Some(e) => Json::num(e as f64),
+                None => Json::Null,
+            }),
+            ("refactorizations", match self.refactorizations {
+                Some(r) => Json::num(r as f64),
+                None => Json::Null,
+            }),
+            ("solver_cells", match self.solver_cells {
+                Some(c) => Json::num(c as f64),
+                None => Json::Null,
+            }),
+            ("shard_gap", match self.shard_gap {
+                Some(g) => Json::num(g),
                 None => Json::Null,
             }),
         ])
@@ -261,14 +297,37 @@ pub fn run_trace_faults(trace: &Trace, rungs: Option<&RungConfig>,
     (result, metrics)
 }
 
-/// Saturn-only diagnostics: (solves, warm solves, basis hit rate,
-/// pivots, drift re-solves, greedy fallbacks).
-type SaturnProbe = (usize, usize, f64, usize, usize, usize);
+/// Saturn-only diagnostics lifted off the policy's accumulated
+/// [`SolverStats`] at the end of a run.
+#[derive(Debug, Clone, Copy)]
+struct SaturnProbe {
+    solves: usize,
+    warm_solves: usize,
+    warm_hit_rate: f64,
+    lp_pivots: usize,
+    drift_resolves: usize,
+    greedy_fallbacks: usize,
+    columns_priced: usize,
+    eta_updates: usize,
+    refactorizations: usize,
+    cells: usize,
+    shard_gap: f64,
+}
 
 fn saturn_probe(p: &OnlineSaturn) -> SaturnProbe {
-    (p.solves(), p.warm_solves(), p.warm_hit_rate(),
-     p.total_stats.lp_pivots, p.drift_resolves,
-     p.total_stats.greedy_fallbacks)
+    SaturnProbe {
+        solves: p.solves(),
+        warm_solves: p.warm_solves(),
+        warm_hit_rate: p.warm_hit_rate(),
+        lp_pivots: p.total_stats.lp_pivots,
+        drift_resolves: p.drift_resolves,
+        greedy_fallbacks: p.total_stats.greedy_fallbacks,
+        columns_priced: p.total_stats.columns_priced,
+        eta_updates: p.total_stats.eta_updates,
+        refactorizations: p.total_stats.refactorizations,
+        cells: p.total_stats.cells,
+        shard_gap: p.total_stats.shard_gap,
+    }
 }
 
 fn assemble_metrics(trace: &Trace, result: &OnlineSimResult,
@@ -302,21 +361,26 @@ fn assemble_metrics(trace: &Trace, result: &OnlineSimResult,
         decision_s: result.policy_decision_s,
         decision_p50_s: result.decision_p50_s,
         decision_p99_s: result.decision_p99_s,
-        solves: solver_probe.map(|p| p.0),
-        warm_solves: solver_probe.map(|p| p.1),
-        warm_hit_rate: solver_probe.map(|p| p.2),
-        lp_pivots: solver_probe.map(|p| p.3),
+        solves: solver_probe.map(|p| p.solves),
+        warm_solves: solver_probe.map(|p| p.warm_solves),
+        warm_hit_rate: solver_probe.map(|p| p.warm_hit_rate),
+        lp_pivots: solver_probe.map(|p| p.lp_pivots),
         lp_capped: result.lp_capped,
         milp_limit_reached: result.milp_limit_reached,
         observations: result.observations,
         estimate_mae: result.estimate_mae,
-        drift_resolves: solver_probe.map(|p| p.4),
+        drift_resolves: solver_probe.map(|p| p.drift_resolves),
         failures: result.failures,
         fault_preemptions: result.fault_preemptions,
         lost_work_gpu_s: result.lost_work_gpu_s,
         mean_recovery_s: result.mean_recovery_s,
         goodput: result.goodput,
-        solver_fallbacks: solver_probe.map(|p| p.5),
+        solver_fallbacks: solver_probe.map(|p| p.greedy_fallbacks),
+        columns_priced: solver_probe.map(|p| p.columns_priced),
+        eta_updates: solver_probe.map(|p| p.eta_updates),
+        refactorizations: solver_probe.map(|p| p.refactorizations),
+        solver_cells: solver_probe.map(|p| p.cells),
+        shard_gap: solver_probe.map(|p| p.shard_gap),
     }
 }
 

@@ -240,6 +240,13 @@ impl Policy for OnlineSaturn {
         self.total_stats.limit_reached += stats.limit_reached;
         self.total_stats.shed_jobs += stats.shed_jobs;
         self.total_stats.greedy_fallbacks += stats.greedy_fallbacks;
+        self.total_stats.columns_priced += stats.columns_priced;
+        self.total_stats.eta_updates += stats.eta_updates;
+        self.total_stats.refactorizations += stats.refactorizations;
+        // partition width and gap describe ONE solve, not a running sum
+        self.total_stats.cells = stats.cells;
+        self.total_stats.shard_gap =
+            self.total_stats.shard_gap.max(stats.shard_gap);
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;

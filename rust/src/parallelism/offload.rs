@@ -63,7 +63,11 @@ impl Parallelism for Offload {
             2.0 * (gpus as f64 - 1.0) / gpus as f64 * 4.0 * model.params
                 / cluster.collective_bw(gpus)
         };
-        let step = compute + (1.0 - self.overlap) * pcie + sync;
+        // the node's copy engines floor the overlap: a gen5 host (H100
+        // class) hides more of the stream than the technique's gen4
+        // default no matter how the technique was tuned
+        let overlap = self.overlap.max(cluster.pcie_overlap());
+        let step = compute + (1.0 - overlap) * pcie + sync;
         Some(StepEstimate {
             step_time_s: step,
             mem_per_gpu,
@@ -102,6 +106,26 @@ mod tests {
         let e = Offload::default().search(&m, &c, 1, 16).unwrap();
         let pcie = 6.0 * m.params / c.pcie_bw() * (1.0 - 0.4);
         assert!(e.step_time_s > pcie * 0.9);
+    }
+
+    #[test]
+    fn gen5_overlap_hides_more_pcie_on_h100() {
+        let m = ModelSpec::gpt_j();
+        let o = Offload::default();
+        let p5 = ClusterSpec::p5(1);
+        assert_eq!(p5.pcie_overlap(), 0.7);
+        assert_eq!(ClusterSpec::p4d(1).pcie_overlap(), 0.4);
+        // A/B: the same H100 node with its overlap dialed back to the
+        // gen4 figure must be slower by EXACTLY the extra hidden share
+        // of the stream — the term touches nothing else
+        let mut gen4_node = crate::cluster::NodeSpec::p5_48xlarge();
+        gen4_node.pcie_overlap = 0.4;
+        let gen4 = ClusterSpec::single("h100-gen4", 1, gen4_node, 200e9);
+        let fast = o.search(&m, &p5, 1, 16).unwrap().step_time_s;
+        let slow = o.search(&m, &gen4, 1, 16).unwrap().step_time_s;
+        let pcie = 6.0 * m.params / p5.pcie_bw();
+        assert!(fast < slow);
+        assert!((slow - fast - 0.3 * pcie).abs() < 1e-9 * slow.max(1.0));
     }
 
     #[test]

@@ -20,6 +20,18 @@
 //!    a parent [`Basis`] via the dual simplex, typically in a handful of
 //!    pivots (`solver::milp` warm-starts every child node this way).
 //!
+//! Basis maintenance is product-form (Forrest–Tomlin style): every pivot
+//! records one sparse-support **eta vector** instead of eliminating a
+//! dense row of `B^-1`, and the eta file is collapsed into a fresh dense
+//! factorization only periodically — when the file reaches
+//! [`REFACTOR_ETAS`] entries (spike count) or a pivot magnitude exceeds
+//! [`ETA_DRIFT`] (numeric-drift trigger). FTRAN/BTRAN apply the file on
+//! top of the last refactored inverse, and dual-simplex basic values are
+//! updated incrementally per pivot (refactorization recomputes them from
+//! scratch, bounding drift). [`LpInfo`] reports `eta_updates` and
+//! `refactorizations` so callers can attribute time between the cheap
+//! and the expensive path.
+//!
 //! Numerical conventions: all comparisons use `EPS = 1e-9`; callers
 //! should scale coefficients to O(1)-O(1e3) (the Saturn solver
 //! normalizes runtimes to slot units before formulating). The seed
@@ -28,6 +40,13 @@
 //! objectives on random LPs.
 
 pub const EPS: f64 = 1e-9;
+
+/// Refactorize when the eta file reaches this many product-form updates.
+pub const REFACTOR_ETAS: usize = 64;
+
+/// Refactorize immediately when a pivot's `|1/w_r|` exceeds this — a
+/// near-singular pivot is the classic source of factor drift.
+pub const ETA_DRIFT: f64 = 1e6;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cmp {
@@ -131,6 +150,11 @@ pub struct LpInfo {
     /// The iteration cap fired before convergence: the reported point is
     /// feasible but possibly suboptimal. Also logged via `log::warn!`.
     pub capped: bool,
+    /// Product-form eta updates recorded in place of dense basis work.
+    pub eta_updates: usize,
+    /// From-scratch basis factorizations: one per warm entry plus every
+    /// spike-count / drift-triggered collapse of the eta file.
+    pub refactorizations: usize,
 }
 
 /// One solve's complete outcome.
@@ -241,6 +265,29 @@ impl Simplex {
         let mut st = State::new(self, lower, upper);
         st.solve_warm(basis)
     }
+
+    /// Row duals `y = c_B' B^-1` at `basis` — the prices a
+    /// column-generation master hands its pricing subproblem so it can
+    /// score candidate columns by reduced cost `c_j - y'A_j`. `None`
+    /// when the basis does not fit this matrix or is singular.
+    pub fn duals_for(&self, basis: &Basis) -> Option<Vec<f64>> {
+        if basis.basic.len() != self.m {
+            return None;
+        }
+        let binv = invert_basis(self, &basis.basic)?;
+        let m = self.m;
+        let mut y = vec![0.0; m];
+        for (i, &b) in basis.basic.iter().enumerate() {
+            let cb = self.c[b];
+            if cb != 0.0 {
+                for (yr, &bv) in y.iter_mut().zip(&binv[i * m..(i + 1) * m])
+                {
+                    *yr += cb * bv;
+                }
+            }
+        }
+        Some(y)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -262,11 +309,18 @@ struct State<'a> {
     basic: Vec<usize>,
     in_basis: Vec<bool>,
     at_upper: Vec<bool>,
-    /// Dense basis inverse, row-major m x m.
+    /// Dense inverse of the basis AT THE LAST REFACTORIZATION, row-major
+    /// m x m. The live inverse is `E_k .. E_1 * binv` via `etas`.
     binv: Vec<f64>,
+    /// Product-form eta file since the last refactorization: each entry
+    /// `(p, eta)` is an identity matrix with column `p` replaced by
+    /// `eta` (length m), applied left-to-right in vector order.
+    etas: Vec<(usize, Vec<f64>)>,
     xb: Vec<f64>,
     pivots: usize,
     capped: bool,
+    eta_updates: usize,
+    refactorizations: usize,
 }
 
 impl<'a> State<'a> {
@@ -288,9 +342,12 @@ impl<'a> State<'a> {
             in_basis: vec![false; sx.total],
             at_upper: vec![false; sx.total],
             binv: vec![0.0; sx.m * sx.m],
+            etas: Vec::new(),
             xb: vec![0.0; sx.m],
             pivots: 0,
             capped: false,
+            eta_updates: 0,
+            refactorizations: 0,
         }
     }
 
@@ -326,7 +383,34 @@ impl<'a> State<'a> {
         200 * (self.sx.m + self.ncols())
     }
 
-    /// w = B^-1 A_j.
+    /// Apply the eta file forward: `w <- E_k .. E_1 w`.
+    fn apply_etas(&self, w: &mut [f64]) {
+        for (p, eta) in &self.etas {
+            let wp = w[*p];
+            if wp != 0.0 {
+                for (wi, ei) in w.iter_mut().zip(eta.iter()) {
+                    *wi += ei * wp;
+                }
+                // the p-th term above added eta_p*wp ON TOP of wp; the
+                // product-form column REPLACES it: w_p = eta_p * wp
+                w[*p] -= wp;
+            }
+        }
+    }
+
+    /// Fold the eta file into a row vector from the right:
+    /// `u' <- u' E_k .. E_1` (each transpose touches one component).
+    fn fold_etas_rev(&self, u: &mut [f64]) {
+        for (p, eta) in self.etas.iter().rev() {
+            let mut d = 0.0;
+            for (ui, ei) in u.iter().zip(eta.iter()) {
+                d += ui * ei;
+            }
+            u[*p] = d;
+        }
+    }
+
+    /// w = B^-1 A_j (FTRAN through the eta file).
     fn ftran(&self, j: usize) -> Vec<f64> {
         let m = self.sx.m;
         let mut w = vec![0.0; m];
@@ -338,18 +422,42 @@ impl<'a> State<'a> {
                 }
             }
         }
+        self.apply_etas(&mut w);
         w
     }
 
-    /// y = c_B' B^-1.
+    /// rho = e_r' B^-1, row `r` of the live inverse (BTRAN of a unit
+    /// vector — what the dual ratio test prices columns against).
+    fn btran_row(&self, r: usize) -> Vec<f64> {
+        let m = self.sx.m;
+        if self.etas.is_empty() {
+            return self.binv[r * m..(r + 1) * m].to_vec();
+        }
+        let mut u = vec![0.0; m];
+        u[r] = 1.0;
+        self.fold_etas_rev(&mut u);
+        let mut rho = vec![0.0; m];
+        for (i, &ui) in u.iter().enumerate() {
+            if ui != 0.0 {
+                for k in 0..m {
+                    rho[k] += ui * self.binv[i * m + k];
+                }
+            }
+        }
+        rho
+    }
+
+    /// y = c_B' B^-1 (BTRAN through the eta file).
     fn duals(&self, c: &[f64]) -> Vec<f64> {
         let m = self.sx.m;
+        let mut u: Vec<f64> =
+            (0..m).map(|i| self.cost(c, self.basic[i])).collect();
+        self.fold_etas_rev(&mut u);
         let mut y = vec![0.0; m];
-        for i in 0..m {
-            let cb = self.cost(c, self.basic[i]);
-            if cb != 0.0 {
+        for (i, &ui) in u.iter().enumerate() {
+            if ui != 0.0 {
                 for r in 0..m {
-                    y[r] += cb * self.binv[i * m + r];
+                    y[r] += ui * self.binv[i * m + r];
                 }
             }
         }
@@ -379,13 +487,16 @@ impl<'a> State<'a> {
                 }
             }
         }
-        for i in 0..m {
+        let mut xb = std::mem::take(&mut self.xb);
+        for (i, x) in xb.iter_mut().enumerate() {
             let mut s = 0.0;
             for r in 0..m {
                 s += self.binv[i * m + r] * bt[r];
             }
-            self.xb[i] = s;
+            *x = s;
         }
+        self.apply_etas(&mut xb);
+        self.xb = xb;
     }
 
     fn is_basic(&self, j: usize) -> bool {
@@ -408,22 +519,45 @@ impl<'a> State<'a> {
     }
 
     /// Replace the basic column of `row` with `enter`; `w = ftran(enter)`.
+    /// Product-form update: record one eta vector (O(m)) instead of
+    /// eliminating a dense row of `B^-1` (O(m^2)); collapse the file when
+    /// it grows long or the pivot magnitude signals drift.
     fn pivot_update(&mut self, row: usize, w: &[f64], enter: usize) {
         let m = self.sx.m;
         let inv = 1.0 / w[row];
-        for k in 0..m {
-            self.binv[row * m + k] *= inv;
-        }
-        for i in 0..m {
-            if i != row && w[i] != 0.0 {
-                let f = w[i];
-                for k in 0..m {
-                    self.binv[i * m + k] -= f * self.binv[row * m + k];
-                }
+        let mut eta = vec![0.0; m];
+        for (i, &wi) in w.iter().enumerate() {
+            if i != row && wi != 0.0 {
+                eta[i] = -wi * inv;
             }
         }
+        eta[row] = inv;
+        self.etas.push((row, eta));
+        self.eta_updates += 1;
         self.set_basic(row, enter);
         self.pivots += 1;
+        if self.etas.len() >= REFACTOR_ETAS || inv.abs() > ETA_DRIFT {
+            self.refactor();
+        }
+    }
+
+    /// Collapse the eta file: re-invert the CURRENT basis from scratch
+    /// and recompute the basic values (bounding incremental drift). When
+    /// the factorization is numerically singular the (still-valid) eta
+    /// representation is kept and the next pivot retries.
+    fn refactor(&mut self) {
+        if let Some(binv) = self.invert_current() {
+            self.binv = binv;
+            self.etas.clear();
+            self.refactorizations += 1;
+            self.recompute_xb();
+        }
+    }
+
+    /// Dense inverse of the CURRENT basis (artificial columns included,
+    /// unlike the free-function [`invert_basis`]); `None` when singular.
+    fn invert_current(&self) -> Option<Vec<f64>> {
+        invert_columns(self.sx.m, &self.basic, |b| self.col(b))
     }
 
     fn objective_at(&self, c: &[f64]) -> f64 {
@@ -567,7 +701,12 @@ impl<'a> State<'a> {
         Solved {
             result,
             basis,
-            info: LpInfo { pivots: self.pivots, capped: self.capped },
+            info: LpInfo {
+                pivots: self.pivots,
+                capped: self.capped,
+                eta_updates: self.eta_updates,
+                refactorizations: self.refactorizations,
+            },
         }
     }
 
@@ -645,7 +784,7 @@ impl<'a> State<'a> {
                 if self.basic[i] < total {
                     continue;
                 }
-                let row_of = i * m;
+                let rho = self.btran_row(i);
                 let mut entering = None;
                 for j in 0..total {
                     if self.in_basis[j] {
@@ -653,7 +792,7 @@ impl<'a> State<'a> {
                     }
                     let mut a = 0.0;
                     for &(r, v) in self.col(j) {
-                        a += self.binv[row_of + r] * v;
+                        a += rho[r] * v;
                     }
                     if a.abs() > 1e-7 {
                         entering = Some(j);
@@ -693,9 +832,10 @@ impl<'a> State<'a> {
             self.set_basic(i, b);
         }
         self.at_upper.copy_from_slice(&basis.at_upper);
-        // refactor B^-1 from scratch (O(m^3); m excludes bound rows, so
-        // this stays small — and every subsequent pivot is incremental)
+        // one refactorization per warm entry (m excludes bound rows, so
+        // this stays small); every subsequent pivot is an O(m) eta update
         self.binv = invert_basis(self.sx, &self.basic)?;
+        self.refactorizations += 1;
         // a nonbasic column must rest on a finite bound; bound changes can
         // have removed the side it sat on
         for j in 0..total {
@@ -747,7 +887,7 @@ impl<'a> State<'a> {
                 };
             };
             let y = self.duals(&c);
-            let row_of = r * m;
+            let rho = self.btran_row(r);
             // entering: dual ratio test |d_j| / |alpha_j| over columns
             // that can push x_Br back toward the violated bound
             let mut enter: Option<usize> = None;
@@ -758,7 +898,7 @@ impl<'a> State<'a> {
                 }
                 let mut a = 0.0;
                 for &(rr, v) in self.col(j) {
-                    a += self.binv[row_of + rr] * v;
+                    a += rho[rr] * v;
                 }
                 let eligible = if below {
                     (!self.at_upper[j] && a < -EPS)
@@ -789,23 +929,44 @@ impl<'a> State<'a> {
                 return None; // numerically unusable pivot; cold-solve
             }
             let lv = self.basic[r];
+            // incremental basic-value update (replaces the per-pivot
+            // from-scratch recompute): x_j moves by t, x_B -= t*w, and
+            // x_Br lands exactly on the violated bound side
+            let beta = if below { self.lb[lv] } else { self.ub[lv] };
+            let t = (self.xb[r] - beta) / w[r];
+            let enter_val = self.nb_val(j) + t;
+            for i in 0..m {
+                if i != r {
+                    self.xb[i] -= t * w[i];
+                }
+            }
+            self.xb[r] = enter_val;
             self.at_upper[lv] = !below; // leaves at the violated bound side
             self.pivot_update(r, &w, j);
-            self.recompute_xb();
         }
         None // dual iteration cap: let the caller cold-solve
     }
 }
 
 /// Dense inverse of the basis matrix via Gauss-Jordan with partial
-/// pivoting; `None` when singular.
+/// pivoting; `None` when singular. Artificial-free bases only (the warm
+/// entry point); mid-solve refactorization uses `State::invert_current`,
+/// which resolves artificial columns too.
 fn invert_basis(sx: &Simplex, basic: &[usize]) -> Option<Vec<f64>> {
-    let m = sx.m;
+    invert_columns(sx.m, basic, |b| sx.cols[b].as_slice())
+}
+
+/// Gauss-Jordan inversion core over caller-resolved sparse columns.
+fn invert_columns<'c>(
+    m: usize,
+    basic: &[usize],
+    col_of: impl Fn(usize) -> &'c [(usize, f64)],
+) -> Option<Vec<f64>> {
     // augmented [B | I], row-major with width 2m
     let w = 2 * m;
     let mut a = vec![0.0; m * w];
     for (i, &b) in basic.iter().enumerate() {
-        for &(r, v) in &sx.cols[b] {
+        for &(r, v) in col_of(b) {
             a[r * w + i] = v;
         }
     }
@@ -1059,5 +1220,64 @@ mod tests {
         assert!(!info.capped);
         // bounded 2-var LP: a few pivots/flips at most
         assert!(info.pivots <= 6, "pivots {}", info.pivots);
+    }
+
+    #[test]
+    fn eta_updates_track_pivots_on_cold_solves() {
+        // every basis change records exactly one product-form eta; a
+        // short cold solve never reaches the refactorization threshold
+        let mut lp = Lp::new(4);
+        for (j, c) in [1.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            lp.set_obj(j, *c);
+        }
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 20.0);
+        lp.add(vec![(2, 1.0), (3, 1.0)], Cmp::Le, 30.0);
+        lp.add(vec![(0, 1.0), (2, 1.0)], Cmp::Eq, 25.0);
+        lp.add(vec![(1, 1.0), (3, 1.0)], Cmp::Eq, 25.0);
+        let (res, info) = solve_with_info(&lp);
+        assert!(res.optimal().is_some());
+        assert!(info.pivots > 0);
+        assert_eq!(info.eta_updates, info.pivots);
+        assert!(info.pivots < REFACTOR_ETAS);
+        assert_eq!(info.refactorizations, 0);
+    }
+
+    #[test]
+    fn drift_trigger_refactors_mid_solve() {
+        // a 1e-7 pivot element records an eta spike of 1e7 > ETA_DRIFT,
+        // which must collapse the file into a fresh factorization even
+        // though the spike COUNT is nowhere near REFACTOR_ETAS
+        let mut lp = Lp::new(1);
+        lp.set_obj(0, -1.0);
+        lp.bound_le(0, 1e9);
+        lp.add(vec![(0, 1e-7)], Cmp::Le, 10.0);
+        let (res, info) = solve_with_info(&lp);
+        let (x, obj) = res.optimal().expect("solvable");
+        assert!((x[0] - 1e8).abs() < 1.0, "x0 {}", x[0]);
+        assert!((obj + 1e8).abs() < 1.0, "obj {obj}");
+        assert!(info.pivots < REFACTOR_ETAS);
+        assert!(info.refactorizations >= 1,
+                "tiny pivot never tripped the drift refactorization");
+    }
+
+    #[test]
+    fn warm_solve_counts_one_refactorization() {
+        let mut lp = Lp::new(3);
+        for (j, v) in [10.0, 13.0, 7.0].iter().enumerate() {
+            lp.set_obj(j, -v);
+            lp.bound_le(j, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let sx = Simplex::new(&lp);
+        let root = sx.solve_cold(&lp.lower, &lp.upper);
+        assert_eq!(root.info.refactorizations, 0);
+        let basis = root.basis.expect("root basis");
+        let mut upper = lp.upper.clone();
+        upper[1] = 0.0;
+        let warm = sx.solve_warm(&lp.lower, &upper, &basis).expect("usable");
+        // the warm entry refactors once; pivots ride the eta file
+        assert_eq!(warm.info.refactorizations, 1);
+        assert_eq!(warm.info.eta_updates, warm.info.pivots);
+        assert!(warm.result.optimal().is_some());
     }
 }

@@ -107,6 +107,10 @@ pub struct MilpStats {
     /// Node LPs that hit the simplex iteration cap (their objectives are
     /// NOT trusted as bounds — see `solve_revised`).
     pub capped_lps: usize,
+    /// Product-form eta updates across every node LP (revised engine).
+    pub eta_updates: usize,
+    /// From-scratch basis refactorizations across every node LP.
+    pub refactorizations: usize,
     /// Best lower bound on the optimum at termination.
     pub best_bound: f64,
     /// Relative incumbent/bound gap at termination (0 when proved).
@@ -280,6 +284,8 @@ fn solve_revised(
     let sx = Simplex::new(lp);
     let root = sx.solve_cold(&lp.lower, &lp.upper);
     stats.lp_pivots += root.info.pivots;
+    stats.eta_updates += root.info.eta_updates;
+    stats.refactorizations += root.info.refactorizations;
     if traced {
         opts.trace.end(
             "solver",
@@ -373,6 +379,8 @@ fn solve_revised(
         for (node, (s, was_warm)) in batch.into_iter().zip(solved) {
             stats.nodes += 1;
             stats.lp_pivots += s.info.pivots;
+            stats.eta_updates += s.info.eta_updates;
+            stats.refactorizations += s.info.refactorizations;
             if was_warm {
                 stats.warm_hits += 1;
             } else {
@@ -597,6 +605,8 @@ fn strong_branch_root(
                 }
             };
             stats.lp_pivots += solved.info.pivots;
+            stats.eta_updates += solved.info.eta_updates;
+            stats.refactorizations += solved.info.refactorizations;
             match solved.result {
                 LpResult::Optimal { objective, .. } => {
                     if solved.info.capped {

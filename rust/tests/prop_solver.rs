@@ -12,12 +12,18 @@
 //!    binary programs, and its answer is identical for every thread
 //!    count.
 
+use saturn::cluster::ClusterSpec;
+use saturn::parallelism::default_library;
+use saturn::saturn::solver::{plan_selection_colgen, plan_selection_probe,
+                             sharded_probe, solve_joint, SolverMode};
 use saturn::solver::dense;
 use saturn::solver::lp::{self, Cmp, Lp, LpResult, Simplex};
 use saturn::solver::milp::{solve_with_stats, MilpEngine, MilpOptions,
                            MilpResult};
+use saturn::trials::{profile_analytic, ProfileTable};
 use saturn::util::prop::{forall, Strategy};
 use saturn::util::rng::Rng;
+use saturn::workload::toy_workload;
 
 /// Seeded random LP instances (the seed is the value; the LP is rebuilt
 /// deterministically from it so shrinking stays trivial).
@@ -217,6 +223,195 @@ fn prop_strong_branching_agrees_on_incumbents() {
                     (a, b) => {
                         return Err(format!(
                             "k={k} vs {tag}: status {a:?} vs {b:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ft_warm_chains_equal_cold_solves() {
+    // Forrest–Tomlin stress: CHAINS of warm re-solves, each reusing the
+    // previous step's basis, must keep agreeing with cold solves as the
+    // eta file accumulates across the chain. Also pins the factor
+    // accounting: every pivot records exactly one product-form eta, and
+    // every warm entry refactors at least once.
+    forall(75, 60, &RandomLpSeed, |&seed| {
+        let lp = build_lp(seed, true);
+        let sx = Simplex::new(&lp);
+        let root = sx.solve_cold(&lp.lower, &lp.upper);
+        if root.info.eta_updates != root.info.pivots {
+            return Err(format!(
+                "cold: {} etas for {} pivots",
+                root.info.eta_updates, root.info.pivots));
+        }
+        let LpResult::Optimal { x, .. } = &root.result else {
+            return Ok(());
+        };
+        let Some(mut basis) = root.basis.clone() else {
+            return Ok(()); // redundant-row bases are legitimately refused
+        };
+        let mut x = x.clone();
+        let mut lower = lp.lower.clone();
+        let mut upper = lp.upper.clone();
+        let mut rng = Rng::new(seed as u64 ^ 0x5EED);
+        for step in 0..4 {
+            let j = rng.usize(lp.n);
+            if rng.f64() < 0.5 {
+                upper[j] = x[j].floor().max(lower[j]);
+            } else {
+                lower[j] = (x[j].floor() + 1.0).min(upper[j]);
+            }
+            let cold = sx.solve_cold(&lower, &upper);
+            let Some(warm) = sx.solve_warm(&lower, &upper, &basis) else {
+                return Ok(()); // refusal is allowed; wrong answers are not
+            };
+            if warm.info.refactorizations < 1 {
+                return Err(format!(
+                    "step {step}: warm entry never refactored"));
+            }
+            if warm.info.eta_updates != warm.info.pivots {
+                return Err(format!(
+                    "step {step}: {} etas for {} pivots",
+                    warm.info.eta_updates, warm.info.pivots));
+            }
+            match (&cold.result, &warm.result) {
+                (
+                    LpResult::Optimal { objective: a, .. },
+                    LpResult::Optimal { objective: b, x: wx },
+                ) => {
+                    if (a - b).abs() > 1e-6 * a.abs().max(1.0) {
+                        return Err(format!(
+                            "step {step}: warm {b} vs cold {a}"));
+                    }
+                    x.copy_from_slice(&wx[..lp.n]);
+                }
+                (LpResult::Infeasible, LpResult::Infeasible) => {
+                    return Ok(());
+                }
+                (a, b) => {
+                    return Err(format!(
+                        "step {step}: status cold {a:?} warm {b:?}"));
+                }
+            }
+            match warm.basis {
+                Some(b) => basis = b,
+                None => return Ok(()),
+            }
+        }
+        Ok(())
+    });
+}
+
+fn toy_instance(n: usize, cluster: &ClusterSpec)
+    -> (Vec<(usize, u64)>, ProfileTable) {
+    let jobs = toy_workload(n);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, cluster);
+    (jobs.iter().map(|j| (j.id, j.total_steps())).collect(), profiles)
+}
+
+#[test]
+fn prop_colgen_matches_full_grid_objective() {
+    // the restricted master + pricing + reduced-cost widening must land
+    // on the same optimum as solving over the full candidate grid, for
+    // varying fleet shapes and job counts
+    forall(76, 10, &RandomLpSeed, |&seed| {
+        let mut rng = Rng::new(seed as u64 + 3);
+        let n = 6 + rng.usize(19);
+        let cluster = match rng.usize(3) {
+            0 => ClusterSpec::p4d(1),
+            1 => ClusterSpec::p4d(2),
+            _ => ClusterSpec::hetero(1, 1),
+        };
+        let (remaining, profiles) = toy_instance(n, &cluster);
+        let full = plan_selection_probe(&remaining, &profiles, &cluster,
+                                        MilpEngine::Revised);
+        let colgen = plan_selection_colgen(&remaining, &profiles, &cluster);
+        match (full, colgen) {
+            (Some((f, _)), Some((c, st))) => {
+                let rel = (c - f).abs() / f.abs().max(1.0);
+                if rel > 1e-6 {
+                    return Err(format!(
+                        "n={n}: colgen {c} vs full grid {f} (rel {rel:e}, \
+                         {} columns priced)", st.columns_priced));
+                }
+                Ok(())
+            }
+            (None, None) => Ok(()),
+            (f, c) => Err(format!(
+                "n={n}: solvability mismatch: full {} vs colgen {}",
+                f.is_some(), c.is_some())),
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_respects_capacity_and_thread_count() {
+    // cell decomposition must emit exactly one placeable plan per job
+    // (valid class, gpus within that class) and its merged objective
+    // must be bit-identical for every worker count — scope_map preserves
+    // submission order, so parallelism can never leak into the answer
+    forall(77, 6, &RandomLpSeed, |&seed| {
+        let mut rng = Rng::new(seed as u64 + 7);
+        let n = 32 + rng.usize(49);
+        let cluster = if rng.f64() < 0.5 {
+            ClusterSpec::p4d(4)
+        } else {
+            ClusterSpec::hetero(2, 2)
+        };
+        let cell_size = 8 + rng.usize(25);
+        let (remaining, profiles) = toy_instance(n, &cluster);
+        let (plan, stats) = solve_joint(
+            &remaining, &profiles, &cluster,
+            SolverMode::Sharded { cell_size });
+        if plan.choices.len() != remaining.len() {
+            return Err(format!(
+                "n={n}: {} choices for {} jobs",
+                plan.choices.len(), remaining.len()));
+        }
+        for p in &plan.choices {
+            if p.class >= cluster.classes.len() {
+                return Err(format!(
+                    "job {}: class {} out of range", p.job_id, p.class));
+            }
+            if p.gpus == 0 || p.gpus > cluster.class_gpus(p.class) {
+                return Err(format!(
+                    "job {}: {} gpus exceeds class {} capacity {}",
+                    p.job_id, p.gpus, p.class,
+                    cluster.class_gpus(p.class)));
+            }
+        }
+        let want_cells = n.div_ceil(cell_size);
+        if stats.cells != want_cells {
+            return Err(format!(
+                "n={n}, cell_size={cell_size}: {} cells, want \
+                 {want_cells}", stats.cells));
+        }
+        if stats.shard_gap < 0.0 {
+            return Err(format!("negative shard gap {}", stats.shard_gap));
+        }
+        let mut reference: Option<(f64, usize)> = None;
+        for threads in [1usize, 2, 8] {
+            let Some((obj, st)) = sharded_probe(
+                &remaining, &profiles, &cluster, cell_size, threads)
+            else {
+                return Err(format!("threads={threads}: probe failed"));
+            };
+            match reference {
+                None => reference = Some((obj, st.cells)),
+                Some((r, cells)) => {
+                    if obj.to_bits() != r.to_bits() {
+                        return Err(format!(
+                            "threads={threads} changed the objective: \
+                             {obj} vs {r}"));
+                    }
+                    if st.cells != cells {
+                        return Err(format!(
+                            "threads={threads} changed the partition: \
+                             {} vs {cells} cells", st.cells));
                     }
                 }
             }
