@@ -40,6 +40,7 @@ fn main() {
         epochs: 1,
         tenants: args.usize_or("tenants", 2),
         deadline_slack_s: Some(24.0 * 3600.0),
+        burst_stagger_s: args.f64_or("burst-stagger-s", 0.0).max(0.0),
     };
     let trace = generate_trace(&cfg);
     let rungs = RungConfig {

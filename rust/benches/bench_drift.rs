@@ -112,6 +112,7 @@ fn main() {
         epochs: 1,
         tenants: 2,
         deadline_slack_s: Some(24.0 * 3600.0),
+        burst_stagger_s: 0.0,
     };
     let trace = generate_trace(&cfg);
     let cluster = ClusterSpec::p4d(1);

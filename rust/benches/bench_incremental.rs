@@ -1,0 +1,243 @@
+//! Bench E18: incremental re-solve decision latency (DESIGN.md §4.9) —
+//! a staggered HPO-burst arrival trace (64 job siblings per burst)
+//! replayed through online-Saturn under three arms:
+//!
+//!   * `full`            — historical behaviour: every event re-solves
+//!                         the joint problem from scratch
+//!   * `delta`           — `--incremental on`: retained column pools,
+//!                         duals and master basis across events
+//!   * `delta_coalesce`  — incremental plus the event-coalescing
+//!                         debounce window folding each staggered burst
+//!                         into one delta re-solve
+//!
+//! Reports per-event decision latency and per-solve wall p50/p99 for
+//! each arm, checks the tight-gap parity of the seeded probe against
+//! the from-scratch probe (<= 1e-6 relative), and emits a
+//! machine-readable record to `BENCH_incremental.json` (override with
+//! `SATURN_BENCH_OUT`). `SATURN_BENCH_FAST=1` runs the 256-job point
+//! only.
+//!
+//! Run: `cargo bench --bench bench_incremental`
+
+use saturn::bench::{fmt_s, print_header};
+use saturn::cluster::ClusterSpec;
+use saturn::objective::Objective;
+use saturn::obs::trace::Tracer;
+use saturn::online::{profile_trace, run_trace_knobs, OnlineKnobs,
+                     OnlineMetrics};
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::{plan_selection_probe, solve_joint_budgeted,
+                             SolveBudget, SolverMode};
+use saturn::saturn::IncrementalSolver;
+use saturn::sim::engine::{RungConfig, SimConfig};
+use saturn::solver::milp::MilpEngine;
+use saturn::util::json::Json;
+use saturn::workload::{generate_trace, ArrivalProcess, Trace, TraceConfig};
+
+/// Jobs per burst = burst multi-jobs x the 2x2 grid.
+const BURST_MULTIJOBS: usize = 16;
+const GRID_JOBS: usize = 4;
+const STAGGER_S: f64 = 1.0;
+const COALESCE_WINDOW_S: f64 = 30.0;
+
+fn burst_trace(jobs: usize) -> Trace {
+    generate_trace(&TraceConfig {
+        seed: 42,
+        multijobs: jobs / GRID_JOBS,
+        process: ArrivalProcess::Burst {
+            rate_per_hour: 2.0,
+            burst_size: BURST_MULTIJOBS,
+        },
+        grid_lrs: 2,
+        grid_batches: 2,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: None,
+        burst_stagger_s: STAGGER_S,
+    })
+}
+
+struct Arm {
+    name: &'static str,
+    knobs: OnlineKnobs,
+    coalesce_window_s: f64,
+}
+
+fn arms() -> Vec<Arm> {
+    let delta = OnlineKnobs { incremental: true, ..OnlineKnobs::default() };
+    vec![
+        Arm { name: "full", knobs: OnlineKnobs::default(),
+              coalesce_window_s: 0.0 },
+        Arm { name: "delta", knobs: delta, coalesce_window_s: 0.0 },
+        Arm { name: "delta_coalesce", knobs: delta,
+              coalesce_window_s: COALESCE_WINDOW_S },
+    ]
+}
+
+struct ArmResult {
+    name: &'static str,
+    replay_wall_s: f64,
+    metrics: OnlineMetrics,
+    coalesced: usize,
+}
+
+fn run_arm(arm: &Arm, trace: &Trace, cluster: &ClusterSpec,
+           rungs: &RungConfig) -> ArmResult {
+    let profiles = profile_trace(trace, cluster);
+    let mut perf = PerfModel::exact(&profiles);
+    let cfg = SimConfig {
+        coalesce_window_s: arm.coalesce_window_s,
+        ..SimConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (result, metrics) = run_trace_knobs(
+        trace, Some(rungs), &mut perf, cluster, "online-saturn",
+        SolverMode::Sharded { cell_size: 64 }, None, &cfg, arm.knobs);
+    let replay_wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(metrics.completed + metrics.early_stopped, trace.jobs.len(),
+               "arm {} lost jobs", arm.name);
+    ArmResult {
+        name: arm.name,
+        replay_wall_s,
+        metrics,
+        coalesced: result.coalesced_events,
+    }
+}
+
+/// Tight-gap parity: seed an [`IncrementalSolver`] from a full solve,
+/// replay a departure as a delta, then compare the state-seeded
+/// column-generation probe against the from-scratch probe. Exactness
+/// comes from the reduced-cost widening pass, so the relative error
+/// must sit inside the 1e-6 convergence gap.
+fn parity_check(trace: &Trace, cluster: &ClusterSpec) -> f64 {
+    let profiles = profile_trace(trace, cluster);
+    let roster: Vec<(usize, u64)> = trace.jobs.iter().take(64)
+        .map(|o| (o.job.id, o.job.total_steps()))
+        .collect();
+    let (plan, _) = solve_joint_budgeted(
+        &roster, &profiles, cluster, SolverMode::Sharded { cell_size: 64 },
+        1.0, None, Objective::Makespan, &[], &Tracer::off(), None,
+        SolveBudget::default());
+    let mut inc = IncrementalSolver::new();
+    inc.note_full(&roster, &plan, Objective::Makespan, None);
+    // one grid departs (6 % churn) and the next event goes delta
+    let after = &roster[..roster.len() - GRID_JOBS];
+    let delta = inc.solve_delta(after, &profiles, cluster, 1.0, None,
+                                Objective::Makespan, &[], &Tracer::off(),
+                                None, SolveBudget::default());
+    assert!(delta.is_some(), "delta re-solve failed on a plain departure");
+    let (seeded, _) = inc.parity_probe(after, &profiles, cluster)
+        .expect("seeded parity probe failed");
+    let (scratch, _) = plan_selection_probe(after, &profiles, cluster,
+                                            MilpEngine::Revised)
+        .expect("from-scratch probe failed");
+    let rel = (seeded - scratch).abs() / scratch.abs().max(1.0);
+    assert!(rel <= 1e-6,
+            "seeded probe {seeded} vs scratch probe {scratch}: rel {rel}");
+    rel
+}
+
+fn main() {
+    let fast = std::env::var("SATURN_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] = if fast { &[256] } else { &[256, 512] };
+    let cluster = ClusterSpec::p4d(4);
+    let rungs = RungConfig::halving();
+
+    print_header("incremental re-solve parity (seeded vs from-scratch)");
+    let parity_rel = parity_check(&burst_trace(64), &cluster);
+    println!("tight-gap relative error: {parity_rel:.3e} (bound 1e-6)");
+
+    let mut size_records = Vec::new();
+    for &n in sizes {
+        let trace = burst_trace(n);
+        print_header(&format!(
+            "burst trace replay ({} jobs, {} multi-jobs, {} siblings/burst, \
+             stagger {STAGGER_S:.0} s)",
+            trace.jobs.len(), trace.groups, BURST_MULTIJOBS * GRID_JOBS));
+        println!("{:<16} {:>10} {:>10} {:>10} {:>10} {:>7} {:>7} {:>9}",
+                 "arm", "dec p50", "dec p99", "solve p50", "solve p99",
+                 "delta", "full", "coalesced");
+        let mut results = Vec::new();
+        for arm in arms() {
+            let r = run_arm(&arm, &trace, &cluster, &rungs);
+            let m = &r.metrics;
+            println!("{:<16} {:>10} {:>10} {:>10} {:>10} {:>7} {:>7} {:>9}",
+                     r.name,
+                     fmt_s(m.decision_p50_s), fmt_s(m.decision_p99_s),
+                     fmt_s(m.solve_p50_s.unwrap_or(0.0)),
+                     fmt_s(m.solve_p99_s.unwrap_or(0.0)),
+                     m.delta_resolves.unwrap_or(0),
+                     m.full_resolves.unwrap_or(0),
+                     r.coalesced);
+            results.push(r);
+        }
+        let full_p99 = results[0].metrics.solve_p99_s.unwrap_or(0.0);
+        let delta_p99 = results[1].metrics.solve_p99_s.unwrap_or(0.0);
+        let co_p99 = results[2].metrics.solve_p99_s.unwrap_or(0.0);
+        let delta_speedup = full_p99 / delta_p99.max(1e-12);
+        let co_speedup = full_p99 / co_p99.max(1e-12);
+        println!("p99 speedup vs full: delta {delta_speedup:.2}x, \
+                  delta+coalesce {co_speedup:.2}x");
+        assert!(results[1].metrics.delta_resolves.unwrap_or(0) > 0,
+                "delta arm never took the delta path at n={n}");
+        assert!(results[2].coalesced > 0,
+                "coalesce arm never folded an event at n={n}");
+        if n >= 256 {
+            assert!(delta_p99 <= full_p99,
+                    "delta p99 {delta_p99} above full p99 {full_p99} at \
+                     n={n}");
+            assert!(co_p99 <= full_p99,
+                    "delta+coalesce p99 {co_p99} above full p99 {full_p99} \
+                     at n={n}");
+        }
+        if !fast && n >= 512 {
+            assert!(co_speedup >= 2.0,
+                    "delta+coalesce p99 speedup {co_speedup:.2}x below the \
+                     2x acceptance bar at n={n}");
+        }
+        size_records.push(Json::obj(vec![
+            ("jobs", Json::num(trace.jobs.len() as f64)),
+            ("multijobs", Json::num(trace.groups as f64)),
+            ("delta_p99_speedup", Json::num(delta_speedup)),
+            ("coalesce_p99_speedup", Json::num(co_speedup)),
+            ("arms", Json::arr(results.iter().map(|r| {
+                let m = &r.metrics;
+                Json::obj(vec![
+                    ("arm", Json::str(r.name)),
+                    ("replay_wall_s", Json::num(r.replay_wall_s)),
+                    ("decision_p50_s", Json::num(m.decision_p50_s)),
+                    ("decision_p99_s", Json::num(m.decision_p99_s)),
+                    ("solve_p50_s",
+                     Json::num(m.solve_p50_s.unwrap_or(0.0))),
+                    ("solve_p99_s",
+                     Json::num(m.solve_p99_s.unwrap_or(0.0))),
+                    ("solves",
+                     Json::num(m.solves.unwrap_or(0) as f64)),
+                    ("delta_resolves",
+                     Json::num(m.delta_resolves.unwrap_or(0) as f64)),
+                    ("full_resolves",
+                     Json::num(m.full_resolves.unwrap_or(0) as f64)),
+                    ("budget_exhausted",
+                     Json::num(m.budget_exhausted.unwrap_or(0) as f64)),
+                    ("coalesced_events", Json::num(r.coalesced as f64)),
+                    ("avg_jct_s", Json::num(m.avg_jct_s)),
+                    ("makespan_s", Json::num(m.makespan_s)),
+                ])
+            }))),
+        ]));
+    }
+
+    let out = std::env::var("SATURN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_incremental.json".to_string());
+    let record = Json::obj(vec![
+        ("bench", Json::str("incremental")),
+        ("seed", Json::num(42.0)),
+        ("burst_siblings", Json::num((BURST_MULTIJOBS * GRID_JOBS) as f64)),
+        ("stagger_s", Json::num(STAGGER_S)),
+        ("coalesce_window_s", Json::num(COALESCE_WINDOW_S)),
+        ("parity_rel_err", Json::num(parity_rel)),
+        ("sizes", Json::arr(size_records.into_iter())),
+    ]);
+    std::fs::write(&out, record.to_string()).expect("writing perf record");
+    println!("\nwrote {out}");
+}

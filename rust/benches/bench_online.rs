@@ -27,6 +27,7 @@ fn main() {
         epochs: 1,
         tenants: 2,
         deadline_slack_s: Some(24.0 * 3600.0),
+        burst_stagger_s: 0.0,
     };
     let trace = generate_trace(&cfg);
     let cluster = ClusterSpec::p4d(1);
@@ -58,6 +59,12 @@ fn main() {
                  m.system, m.avg_jct_s / sat.avg_jct_s,
                  m.p95_jct_s / sat.p95_jct_s);
     }
+    // per-re-solve wall time across the replay (the online decision
+    // latency bench_incremental stresses at scale)
+    println!("online-saturn solve wall: p50 {}, p99 {} over {} re-solve(s)",
+             fmt_s(sat.solve_p50_s.unwrap_or(0.0)),
+             fmt_s(sat.solve_p99_s.unwrap_or(0.0)),
+             sat.solves.unwrap_or(0));
 
     print_header("warm vs cold joint re-solve (same arrival event)");
     // best-of-N wall times: the node counts are deterministic, the wall
@@ -102,6 +109,10 @@ fn main() {
         ("systems", Json::arr(metrics.iter().map(|m| m.to_json()))),
         ("replay_wall_s",
          Json::arr(replay_wall.iter().map(|&w| Json::num(w)))),
+        ("saturn_solve_p50_s",
+         Json::num(metrics[2].solve_p50_s.unwrap_or(0.0))),
+        ("saturn_solve_p99_s",
+         Json::num(metrics[2].solve_p99_s.unwrap_or(0.0))),
         ("warm_cold", Json::obj(vec![
             ("jobs_before", Json::num(probe.jobs_before as f64)),
             ("jobs_after", Json::num(probe.jobs_after as f64)),

@@ -17,8 +17,8 @@ use saturn::faults::FaultConfig;
 use saturn::objective::{JobTerms, Objective};
 use saturn::obs::summary;
 use saturn::obs::trace::{chrome_trace, parse_jsonl, write_jsonl, Tracer};
-use saturn::online::{profile_trace, run_trace_sim, warm_cold_probe,
-                     ONLINE_SYSTEMS};
+use saturn::online::{profile_trace, run_trace_knobs, warm_cold_probe,
+                     OnlineKnobs, ONLINE_SYSTEMS};
 use saturn::parallelism::default_library;
 use saturn::perf::{DriftConfig, PerfModel};
 use saturn::saturn::introspect::DEFAULT_DRIFT_THRESHOLD;
@@ -68,6 +68,9 @@ fn main() -> Result<()> {
             println!("            [--drift-tenant-spread F]");
             println!("            [--faults] [--mtbf H] [--fault-seed N]");
             println!("            [--checkpoint-interval S]");
+            println!("            [--incremental on|off] [--resolve-budget-ms MS]");
+            println!("            [--node-budget N] [--coalesce-window-s S]");
+            println!("            [--burst-stagger-s S]");
             println!("            [--json PATH]");
             println!("            [--trace PATH] [--trace-chrome PATH]");
             println!("            [--trace-system SYSTEM]");
@@ -253,6 +256,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         tenants,
         deadline_slack_s: args.get("deadline-slack-s")
             .and_then(|s| s.parse().ok()),
+        burst_stagger_s: args.f64_or("burst-stagger-s", 0.0).max(0.0),
     };
     let trace = generate_trace(&cfg);
     let fractions: Vec<f64> = args
@@ -304,6 +308,26 @@ fn cmd_online(args: &Args) -> Result<()> {
         FaultConfig::none()
     };
 
+    // incremental re-solve knobs (DESIGN.md §4.9): --incremental on keeps
+    // the column pools / basis warm across events; --resolve-budget-ms /
+    // --node-budget cap each re-solve (best incumbent on expiry);
+    // --coalesce-window-s debounces staggered arrival bursts into one
+    // delta re-solve. All default off -> bit-identical to the historical
+    // event loop.
+    let incremental = match args.str_or("incremental", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("--incremental must be on|off, got '{other}'"),
+    };
+    let resolve_budget_ms = args.get("resolve-budget-ms")
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|v| *v > 0.0);
+    let node_budget = args.get("node-budget")
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|v| *v > 0);
+    let coalesce_window_s = args.f64_or("coalesce-window-s", 0.0).max(0.0);
+    let knobs = OnlineKnobs { incremental, resolve_budget_ms, node_budget };
+
     let cluster = fleet_from_args(args)?;
     println!("=== online: {} multi-jobs / {} jobs over {:.1} h on fleet \
               [{}], seed {seed} ===",
@@ -334,6 +358,19 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("fault injection: per-node MTBF {mtbf_h:.1} h (seed \
                   {fault_seed}), checkpoint every {checkpoint_interval_s:.0} \
                   s");
+    }
+    if incremental || resolve_budget_ms.is_some() || node_budget.is_some()
+        || coalesce_window_s > 0.0
+    {
+        println!("incremental re-solve: {}, budget {} / {}, coalesce \
+                  window {coalesce_window_s:.1} s",
+                 if incremental { "on" } else { "off" },
+                 resolve_budget_ms
+                     .map_or("no deadline".to_string(),
+                             |v| format!("{v:.0} ms")),
+                 node_budget
+                     .map_or("no node cap".to_string(),
+                             |v| format!("{v} nodes")));
     }
     let profiles = profile_trace(&trace, &cluster);
     // tenant class per job (priority k+1 <-> class k) for the
@@ -376,6 +413,7 @@ fn cmd_online(args: &Args) -> Result<()> {
             objective,
             faults: fault_cfg.clone(),
             checkpoint_interval_s,
+            coalesce_window_s,
             trace: if sys == trace_system {
                 tracer.clone()
             } else {
@@ -383,9 +421,9 @@ fn cmd_online(args: &Args) -> Result<()> {
             },
             ..SimConfig::default()
         };
-        let (r, m) = run_trace_sim(&trace, rungs.as_ref(), &mut perf,
-                                   &cluster, sys, mode,
-                                   Some(drift_threshold), &sim_cfg);
+        let (r, m) = run_trace_knobs(&trace, rungs.as_ref(), &mut perf,
+                                     &cluster, sys, mode,
+                                     Some(drift_threshold), &sim_cfg, knobs);
         if sys == "online-saturn" {
             saturn_result = Some(r);
         }
@@ -408,6 +446,19 @@ fn cmd_online(args: &Args) -> Result<()> {
              sat.columns_priced.unwrap_or(0),
              sat.solver_cells.unwrap_or(0),
              100.0 * sat.shard_gap.unwrap_or(0.0));
+    if incremental || resolve_budget_ms.is_some() || node_budget.is_some()
+        || coalesce_window_s > 0.0
+    {
+        println!("incremental layer: {} delta / {} full re-solve(s), {} \
+                  budget-exhausted, {} coalesced event(s), solve wall p50 \
+                  {:.2} ms / p99 {:.2} ms",
+                 sat.delta_resolves.unwrap_or(0),
+                 sat.full_resolves.unwrap_or(0),
+                 sat.budget_exhausted.unwrap_or(0),
+                 sat.coalesced_events,
+                 1e3 * sat.solve_p50_s.unwrap_or(0.0),
+                 1e3 * sat.solve_p99_s.unwrap_or(0.0));
+    }
     if drift_mag > 0.0 {
         println!("estimate layer: {} observation(s), mean |ln(obs/est)| \
                   {:.4}", sat.observations, sat.estimate_mae);
@@ -433,17 +484,26 @@ fn cmd_online(args: &Args) -> Result<()> {
         objective,
         faults: fault_cfg.clone(),
         checkpoint_interval_s,
+        coalesce_window_s,
         ..SimConfig::default()
     };
-    let (b, _) = run_trace_sim(&trace, rungs.as_ref(), &mut perf, &cluster,
-                               "online-saturn", mode,
-                               Some(drift_threshold), &replay_cfg);
-    if a.finish_times != b.finish_times || a.jct_s != b.jct_s
+    let (b, _) = run_trace_knobs(&trace, rungs.as_ref(), &mut perf,
+                                 &cluster, "online-saturn", mode,
+                                 Some(drift_threshold), &replay_cfg, knobs);
+    if resolve_budget_ms.is_some() {
+        // a wall-clock deadline makes each re-solve timing-dependent by
+        // design (best incumbent at expiry), so bit-identity across
+        // replays is not part of the contract; node budgets are.
+        println!("\ndeterminism: skipped (wall-clock --resolve-budget-ms \
+                  makes replays timing-dependent; {} departures)",
+                 a.finish_times.len());
+    } else if a.finish_times != b.finish_times || a.jct_s != b.jct_s
         || a.early_stopped != b.early_stopped || a.launches != b.launches {
         bail!("online replay diverged for seed {seed}");
+    } else {
+        println!("\ndeterminism: OK (two replays produced bit-identical \
+                  schedules, {} departures)", a.finish_times.len());
     }
-    println!("\ndeterminism: OK (two replays produced bit-identical \
-              schedules, {} departures)", a.finish_times.len());
 
     let p = warm_cold_probe(&trace, &profiles, &cluster);
     println!("warm-start probe ({} -> {} jobs): cold {:.2} ms / {} nodes, \
@@ -463,6 +523,12 @@ fn cmd_online(args: &Args) -> Result<()> {
             ("mtbf_hours",
              Json::num(if faults_on { mtbf_h } else { 0.0 })),
             ("checkpoint_interval_s", Json::num(checkpoint_interval_s)),
+            ("incremental", Json::Bool(incremental)),
+            ("resolve_budget_ms",
+             resolve_budget_ms.map_or(Json::Null, Json::num)),
+            ("node_budget",
+             node_budget.map_or(Json::Null, |v| Json::num(v as f64))),
+            ("coalesce_window_s", Json::num(coalesce_window_s)),
             ("systems",
              Json::arr(metrics.iter().map(|m| m.to_json()))),
         ]);

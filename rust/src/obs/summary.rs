@@ -29,8 +29,15 @@ pub struct TraceSummary {
     pub lifecycle: Vec<(String, usize)>,
     /// Plan-call causes (every policy, every `sched/plan` span).
     pub plan_causes: Vec<(String, usize)>,
-    /// Joint re-solve causes (`solver/resolve` spans).
+    /// Joint re-solve causes (`solver/resolve` spans). Journals written
+    /// with the incremental path on carry a `delta` flag on each
+    /// resolve span; those causes split into `cause (delta)` /
+    /// `cause (full)` rows. Older journals (no flag) keep the plain
+    /// cause rows.
     pub resolve_causes: Vec<(String, usize)>,
+    /// `sched/coalesce` instants: events the debounce window folded
+    /// into a later re-solve (0 on journals predating the feature).
+    pub coalesced: usize,
     /// Solver phase spans aggregated by name, sorted by total wall desc.
     pub phases: Vec<PhaseRow>,
     /// Wall duration of `sched/plan` spans (policy decision latency).
@@ -54,6 +61,7 @@ pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
     let mut total_gpus = 0.0;
     let mut horizon_s: f64 = 0.0;
     let mut lifecycle: BTreeMap<String, usize> = BTreeMap::new();
+    let mut coalesced = 0usize;
     let mut queue_depth = Histogram::new();
     let mut busy: Vec<(f64, f64)> = Vec::new();
     for e in events {
@@ -74,6 +82,9 @@ pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
             }
             ("job", name) => {
                 *lifecycle.entry(name.to_string()).or_insert(0) += 1;
+            }
+            ("sched", "coalesce") => {
+                coalesced += 1;
             }
             ("metrics", "busy_gpus") => {
                 if let Some(b) =
@@ -124,9 +135,19 @@ pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
                         .get("cause")
                         .and_then(Json::as_str)
                         .unwrap_or("unknown");
-                    *resolve_causes
-                        .entry(cause.to_string())
-                        .or_insert(0) += 1;
+                    // incremental-era journals tag each re-solve with
+                    // the path taken; older journals have no flag and
+                    // keep the plain cause row
+                    let key = match s
+                        .args
+                        .get("delta")
+                        .and_then(Json::as_bool)
+                    {
+                        Some(true) => format!("{cause} (delta)"),
+                        Some(false) => format!("{cause} (full)"),
+                        None => cause.to_string(),
+                    };
+                    *resolve_causes.entry(key).or_insert(0) += 1;
                     if let Some(d) = s.wall_dur_s() {
                         solve.observe(d.max(0.0));
                     }
@@ -164,6 +185,7 @@ pub fn summarize(events: &[TraceEvent]) -> Result<TraceSummary, String> {
         lifecycle: lifecycle.into_iter().collect(),
         plan_causes: plan_causes.into_iter().collect(),
         resolve_causes: resolve_causes.into_iter().collect(),
+        coalesced,
         phases,
         decision,
         solve,
@@ -253,6 +275,12 @@ pub fn render(s: &TraceSummary) -> String {
     }
     push_causes(&mut out, "plan causes", &s.plan_causes);
     push_causes(&mut out, "re-solve causes", &s.resolve_causes);
+    if s.coalesced > 0 {
+        out.push_str(&format!(
+            "coalesced events: {} (debounced into a later re-solve)\n",
+            s.coalesced
+        ));
+    }
     if !s.phases.is_empty() {
         out.push_str(
             "solver phases (wall):\n  \
@@ -323,6 +351,7 @@ pub fn to_json(s: &TraceSummary) -> Json {
         ("lifecycle", count_map(&s.lifecycle)),
         ("plan_causes", count_map(&s.plan_causes)),
         ("resolve_causes", count_map(&s.resolve_causes)),
+        ("coalesced_events", Json::num(s.coalesced as f64)),
         (
             "phases",
             Json::arr(s.phases.iter().map(|p| {
@@ -396,6 +425,69 @@ mod tests {
         assert!(rendered.contains("plan causes"));
         let j = to_json(&s);
         assert!(j.get("decision_s").unwrap().get("p99").is_some());
+    }
+
+    #[test]
+    fn delta_flag_splits_resolve_causes_and_coalesce_is_counted() {
+        let t = Tracer::on();
+        t.instant(
+            "meta",
+            "run_begin",
+            Json::obj(vec![("gpus", Json::num(8.0))]),
+        );
+        t.begin(
+            "solver",
+            "resolve",
+            Json::obj(vec![
+                ("cause", Json::str("arrival")),
+                ("delta", Json::Bool(true)),
+            ]),
+        );
+        t.end("solver", "resolve", Json::obj(vec![]));
+        t.begin(
+            "solver",
+            "resolve",
+            Json::obj(vec![
+                ("cause", Json::str("arrival")),
+                ("delta", Json::Bool(false)),
+            ]),
+        );
+        t.end("solver", "resolve", Json::obj(vec![]));
+        // a pre-incremental journal record: no delta flag, plain row
+        t.begin(
+            "solver",
+            "resolve",
+            Json::obj(vec![("cause", Json::str("rung"))]),
+        );
+        t.end("solver", "resolve", Json::obj(vec![]));
+        t.instant(
+            "sched",
+            "coalesce",
+            Json::obj(vec![("until", Json::num(30.0))]),
+        );
+        t.instant(
+            "sched",
+            "coalesce",
+            Json::obj(vec![("until", Json::num(31.0))]),
+        );
+        let s = summarize(&t.events()).unwrap();
+        assert_eq!(s.coalesced, 2);
+        assert_eq!(
+            s.resolve_causes,
+            vec![
+                ("arrival (delta)".to_string(), 1),
+                ("arrival (full)".to_string(), 1),
+                ("rung".to_string(), 1),
+            ]
+        );
+        let rendered = render(&s);
+        assert!(rendered.contains("coalesced events: 2"));
+        assert!(rendered.contains("arrival (delta)"));
+        let j = to_json(&s);
+        assert_eq!(
+            j.get("coalesced_events").and_then(Json::as_f64),
+            Some(2.0)
+        );
     }
 
     #[test]

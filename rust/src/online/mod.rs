@@ -106,6 +106,23 @@ pub struct OnlineMetrics {
     /// Worst bound-relative shard optimality gap seen across the run's
     /// sharded solves (Saturn only; 0 = unsharded or no measurable gap).
     pub shard_gap: Option<f64>,
+    /// Re-solves served by the incremental delta path (Saturn only;
+    /// 0 unless `--incremental on`).
+    pub delta_resolves: Option<usize>,
+    /// Re-solves that ran the full from-scratch pipeline (Saturn only;
+    /// equals `solves` when the incremental path is off).
+    pub full_resolves: Option<usize>,
+    /// MILP dispatches truncated by the anytime budget
+    /// (`SolverStats::budget_exhausted`, Saturn only).
+    pub budget_exhausted: Option<usize>,
+    /// Median per-re-solve wall time (seconds; Saturn only) — the
+    /// solver-side complement of the engine's decision latency.
+    pub solve_p50_s: Option<f64>,
+    /// p99 per-re-solve wall time (seconds; Saturn only).
+    pub solve_p99_s: Option<f64>,
+    /// Arrival instants the engine's debounce window folded into a
+    /// later replan (`SimConfig::coalesce_window_s`; 0 when off).
+    pub coalesced_events: usize,
 }
 
 impl OnlineMetrics {
@@ -183,8 +200,44 @@ impl OnlineMetrics {
                 Some(g) => Json::num(g),
                 None => Json::Null,
             }),
+            ("delta_resolves", match self.delta_resolves {
+                Some(d) => Json::num(d as f64),
+                None => Json::Null,
+            }),
+            ("full_resolves", match self.full_resolves {
+                Some(f) => Json::num(f as f64),
+                None => Json::Null,
+            }),
+            ("budget_exhausted", match self.budget_exhausted {
+                Some(b) => Json::num(b as f64),
+                None => Json::Null,
+            }),
+            ("solve_p50_s", match self.solve_p50_s {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            }),
+            ("solve_p99_s", match self.solve_p99_s {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            }),
+            ("coalesced_events",
+             Json::num(self.coalesced_events as f64)),
         ])
     }
+}
+
+/// Online-Saturn hot-path knobs (ISSUE 10): the CLI's `--incremental`,
+/// `--resolve-budget-ms`, and node-budget flags bundled for
+/// [`run_trace_knobs`]. The default (everything off) reproduces
+/// [`run_trace_sim`] bit for bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OnlineKnobs {
+    /// Retain colgen state across events and re-solve as deltas.
+    pub incremental: bool,
+    /// Anytime wall-clock budget per re-solve, milliseconds.
+    pub resolve_budget_ms: Option<f64>,
+    /// Anytime branch-and-bound node budget per re-solve.
+    pub node_budget: Option<usize>,
 }
 
 /// Profile every job of a trace against the cluster (arrival metadata
@@ -246,6 +299,21 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
                      drift_threshold: Option<Option<f64>>,
                      cfg: &SimConfig)
     -> (OnlineSimResult, OnlineMetrics) {
+    run_trace_knobs(trace, rungs, perf, cluster, system, mode,
+                    drift_threshold, cfg, OnlineKnobs::default())
+}
+
+/// As [`run_trace_sim`], with the online-Saturn hot-path [`OnlineKnobs`]
+/// applied (incremental re-solves, anytime budgets). Non-Saturn systems
+/// ignore the knobs; the default knobs reproduce [`run_trace_sim`] bit
+/// for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_knobs(trace: &Trace, rungs: Option<&RungConfig>,
+                       perf: &mut PerfModel, cluster: &ClusterSpec,
+                       system: &str, mode: SolverMode,
+                       drift_threshold: Option<Option<f64>>,
+                       cfg: &SimConfig, knobs: OnlineKnobs)
+    -> (OnlineSimResult, OnlineMetrics) {
     let (result, sys, solver_probe) = match system {
         "online-current-practice" => {
             let mut p = OnlineCurrentPractice;
@@ -264,6 +332,9 @@ pub fn run_trace_sim(trace: &Trace, rungs: Option<&RungConfig>,
             if let Some(th) = drift_threshold {
                 p.drift_threshold = th;
             }
+            p.incremental = knobs.incremental;
+            p.resolve_budget_ms = knobs.resolve_budget_ms;
+            p.node_budget = knobs.node_budget;
             let r = simulate_online_perf(&trace.jobs, rungs, perf, cluster,
                                          &mut p, cfg);
             let probe = saturn_probe(&p);
@@ -312,9 +383,15 @@ struct SaturnProbe {
     refactorizations: usize,
     cells: usize,
     shard_gap: f64,
+    delta_resolves: usize,
+    full_resolves: usize,
+    budget_exhausted: usize,
+    solve_p50_s: f64,
+    solve_p99_s: f64,
 }
 
 fn saturn_probe(p: &OnlineSaturn) -> SaturnProbe {
+    let finite = |x: f64| if x.is_nan() { 0.0 } else { x };
     SaturnProbe {
         solves: p.solves(),
         warm_solves: p.warm_solves(),
@@ -327,6 +404,11 @@ fn saturn_probe(p: &OnlineSaturn) -> SaturnProbe {
         refactorizations: p.total_stats.refactorizations,
         cells: p.total_stats.cells,
         shard_gap: p.total_stats.shard_gap,
+        delta_resolves: p.delta_resolves(),
+        full_resolves: p.full_resolves(),
+        budget_exhausted: p.total_stats.budget_exhausted,
+        solve_p50_s: finite(p.solve_wall().percentile(0.50)),
+        solve_p99_s: finite(p.solve_wall().percentile(0.99)),
     }
 }
 
@@ -381,6 +463,12 @@ fn assemble_metrics(trace: &Trace, result: &OnlineSimResult,
         refactorizations: solver_probe.map(|p| p.refactorizations),
         solver_cells: solver_probe.map(|p| p.cells),
         shard_gap: solver_probe.map(|p| p.shard_gap),
+        delta_resolves: solver_probe.map(|p| p.delta_resolves),
+        full_resolves: solver_probe.map(|p| p.full_resolves),
+        budget_exhausted: solver_probe.map(|p| p.budget_exhausted),
+        solve_p50_s: solver_probe.map(|p| p.solve_p50_s),
+        solve_p99_s: solver_probe.map(|p| p.solve_p99_s),
+        coalesced_events: result.coalesced_events,
     }
 }
 
@@ -539,6 +627,44 @@ mod tests {
             assert!(parsed.get("weighted_tardiness_s").unwrap().as_f64()
                         .is_some());
         }
+    }
+
+    #[test]
+    fn incremental_knobs_run_completes_and_reports_new_metrics() {
+        let (t, profiles, cluster) = trace();
+        let rungs = RungConfig::halving();
+        let mut perf = PerfModel::exact(&profiles);
+        let knobs = OnlineKnobs { incremental: true,
+                                  ..OnlineKnobs::default() };
+        let (r, m) = run_trace_knobs(&t, Some(&rungs), &mut perf, &cluster,
+                                     "online-saturn", SolverMode::Joint,
+                                     None, &SimConfig::default(), knobs);
+        assert_eq!(r.finish_times.len(), t.jobs.len());
+        assert_eq!(m.delta_resolves.unwrap() + m.full_resolves.unwrap(),
+                   m.solves.unwrap());
+        assert!(m.solve_p99_s.unwrap() >= m.solve_p50_s.unwrap());
+        assert_eq!(m.coalesced_events, 0, "no window configured");
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        for key in ["delta_resolves", "full_resolves", "budget_exhausted",
+                    "solve_p50_s", "solve_p99_s", "coalesced_events"] {
+            assert!(parsed.get(key).unwrap().as_f64().is_some(), "{key}");
+        }
+    }
+
+    #[test]
+    fn default_knobs_reproduce_run_trace_sim_bitwise() {
+        let (t, profiles, cluster) = trace();
+        let mut perf_a = PerfModel::exact(&profiles);
+        let (a, _) = run_trace_sim(&t, None, &mut perf_a, &cluster,
+                                   "online-saturn", SolverMode::Joint,
+                                   None, &SimConfig::default());
+        let mut perf_b = PerfModel::exact(&profiles);
+        let (b, _) = run_trace_knobs(&t, None, &mut perf_b, &cluster,
+                                     "online-saturn", SolverMode::Joint,
+                                     None, &SimConfig::default(),
+                                     OnlineKnobs::default());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.jct_s, b.jct_s);
     }
 
     #[test]

@@ -16,8 +16,11 @@ use crate::saturn::introspect::{apply_migration_hysteresis,
                                 degraded_capacities, drift_resolve_due,
                                 launch_from_plan, objective_terms,
                                 DEFAULT_DRIFT_THRESHOLD};
+use crate::obs::metrics::Histogram;
+use crate::saturn::incremental::IncrementalSolver;
 use crate::saturn::plan::SaturnPlan;
-use crate::saturn::solver::{solve_joint_live, SolverMode, SolverStats};
+use crate::saturn::solver::{solve_joint_budgeted, SolveBudget, SolverMode,
+                            SolverStats};
 use crate::sim::engine::{Launch, PlanContext, Policy, ReplanCause};
 use crate::util::json::Json;
 
@@ -49,6 +52,20 @@ pub struct OnlineSaturn {
     /// static capacity rows, as if the scheduler never heard of the
     /// outage.
     pub failure_aware: bool,
+    /// Incremental re-optimization (DESIGN.md §4.9): retain the last
+    /// re-solve's column-generation state and replay events as deltas
+    /// when the dirty-set heuristic allows. `false` (the default)
+    /// preserves the historical from-scratch path bit for bit.
+    pub incremental: bool,
+    /// Anytime budget applied to EVERY re-solve's MILP dispatches:
+    /// wall-clock deadline in milliseconds (`--resolve-budget-ms`).
+    pub resolve_budget_ms: Option<f64>,
+    /// Anytime budget: branch-and-bound node allowance per re-solve.
+    pub node_budget: Option<usize>,
+    inc: IncrementalSolver,
+    /// Per-re-solve wall time (seconds) across the run — the p50/p99
+    /// the benches report alongside decision latency.
+    solve_wall: Histogram,
     last_obs_seen: usize,
     cached: Option<SaturnPlan>,
     last_solve_t: f64,
@@ -72,6 +89,11 @@ impl OnlineSaturn {
             drift_threshold: Some(DEFAULT_DRIFT_THRESHOLD),
             drift_resolves: 0,
             failure_aware: true,
+            incremental: false,
+            resolve_budget_ms: None,
+            node_budget: None,
+            inc: IncrementalSolver::new(),
+            solve_wall: Histogram::new(),
             last_obs_seen: 0,
             cached: None,
             last_solve_t: f64::NEG_INFINITY,
@@ -96,6 +118,26 @@ impl OnlineSaturn {
     /// How many of those re-solves were seeded from the previous plan.
     pub fn warm_solves(&self) -> usize {
         self.warm_solves
+    }
+
+    /// Re-solves served by the incremental delta path.
+    pub fn delta_resolves(&self) -> usize {
+        self.inc.delta_resolves
+    }
+
+    /// Re-solves that went through the full pipeline (always all of
+    /// them when `incremental` is off).
+    pub fn full_resolves(&self) -> usize {
+        if self.incremental {
+            self.inc.full_resolves
+        } else {
+            self.solves
+        }
+    }
+
+    /// Per-re-solve wall-time distribution (seconds).
+    pub fn solve_wall(&self) -> &Histogram {
+        &self.solve_wall
     }
 
     /// Fraction of branch-and-bound node LPs served from a parent basis
@@ -186,6 +228,21 @@ impl Policy for OnlineSaturn {
             self.mode
         };
         let terms = objective_terms(ctx, &remaining);
+        let live = if self.failure_aware {
+            degraded_capacities(ctx)
+        } else {
+            None
+        };
+        let budget = SolveBudget {
+            deadline_ms: self.resolve_budget_ms,
+            node_budget: self.node_budget,
+        };
+        // the dirty-set heuristic decides delta-vs-full BEFORE the span
+        // opens so trace-summarize can break the cause histogram down
+        let try_delta = self.incremental
+            && self.inc.wants_delta(&remaining, ctx.objective,
+                                    ctx.cause == ReplanCause::Failure,
+                                    live.as_deref());
         if ctx.trace.is_enabled() {
             // refine the engine-attributed cause: a re-solve forced by
             // the drift alarm alone (the cache still covers everything
@@ -203,18 +260,31 @@ impl Policy for OnlineSaturn {
                     ("cause", Json::str(cause)),
                     ("jobs", Json::num(remaining.len() as f64)),
                     ("warm", Json::Bool(warm.is_some())),
+                    ("delta", Json::Bool(try_delta)),
                 ]),
             );
         }
-        let live = if self.failure_aware {
-            degraded_capacities(ctx)
+        let delta_out = if try_delta {
+            self.inc.solve_delta(&remaining, ctx.profiles, ctx.cluster,
+                                 1.0, warm, ctx.objective, &terms,
+                                 ctx.trace, live.as_deref(), budget)
         } else {
             None
         };
-        let (mut plan, stats) =
-            solve_joint_live(&remaining, ctx.profiles, ctx.cluster, mode,
-                             1.0, warm, ctx.objective, &terms, ctx.trace,
-                             live.as_deref());
+        let went_delta = delta_out.is_some();
+        let (mut plan, stats) = match delta_out {
+            Some(out) => out,
+            None => solve_joint_budgeted(&remaining, ctx.profiles,
+                                         ctx.cluster, mode, 1.0, warm,
+                                         ctx.objective, &terms, ctx.trace,
+                                         live.as_deref(), budget),
+        };
+        if self.incremental && !went_delta {
+            // reseed the retained state from the full solve so the NEXT
+            // event can go delta
+            self.inc.note_full(&remaining, &plan, ctx.objective,
+                               live.as_deref());
+        }
         if ctx.trace.is_enabled() {
             ctx.trace.end(
                 "solver",
@@ -243,10 +313,12 @@ impl Policy for OnlineSaturn {
         self.total_stats.columns_priced += stats.columns_priced;
         self.total_stats.eta_updates += stats.eta_updates;
         self.total_stats.refactorizations += stats.refactorizations;
+        self.total_stats.budget_exhausted += stats.budget_exhausted;
         // partition width and gap describe ONE solve, not a running sum
         self.total_stats.cells = stats.cells;
         self.total_stats.shard_gap =
             self.total_stats.shard_gap.max(stats.shard_gap);
+        self.solve_wall.observe(stats.wall_s);
         self.last_stats = stats;
         self.solves += 1;
         self.last_solve_t = ctx.now;
@@ -352,6 +424,44 @@ mod tests {
                         || r.makespan_s < r2.makespan_s,
                     "departures neither re-solved nor shortened the run");
         }
+    }
+
+    #[test]
+    fn incremental_stream_completes_and_uses_delta_resolves() {
+        let (trace, profiles, cluster) = setup(6, 4);
+        let mut policy = OnlineSaturn::paper_default();
+        policy.incremental = true;
+        let r = simulate_online(&trace.jobs, Some(&RungConfig::halving()),
+                                &profiles, &cluster, &mut policy,
+                                &SimConfig::default());
+        assert_eq!(r.finish_times.len(), trace.jobs.len());
+        assert!(r.peak_gpus <= cluster.total_gpus());
+        // every re-solve is accounted to exactly one path
+        assert_eq!(policy.delta_resolves() + policy.full_resolves(),
+                   policy.solves());
+        // rung-kills are single-job departures: the delta path must
+        // have served at least one of them
+        assert!(policy.delta_resolves() > 0,
+                "no event went through the delta path (full={} solves={})",
+                policy.full_resolves(), policy.solves());
+        assert_eq!(policy.solve_wall().count(), policy.solves() as f64);
+    }
+
+    #[test]
+    fn incremental_replay_is_bit_identical() {
+        let (trace, profiles, cluster) = setup(11, 3);
+        let rungs = RungConfig::halving();
+        let run = || {
+            let mut p = OnlineSaturn::paper_default();
+            p.incremental = true;
+            simulate_online(&trace.jobs, Some(&rungs), &profiles, &cluster,
+                            &mut p, &SimConfig::default())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.finish_times, b.finish_times);
+        assert_eq!(a.jct_s, b.jct_s);
+        assert_eq!(a.early_stopped, b.early_stopped);
+        assert_eq!(a.migrations, b.migrations);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! [`IncrementalSolver`]: persistent event-delta re-optimization for
+//! the online scheduler (DESIGN.md §4.9).
+//!
+//! `OnlineSaturn` historically re-solved the joint problem from scratch
+//! at every arrival/departure/rung-kill, even though consecutive events
+//! share almost all of their structure. This module retains the
+//! column-generation artifacts of the last re-solve — admitted column
+//! pools, converged duals, and the master simplex basis with its row
+//! layout ([`ColgenState`]) — and replays the NEXT event as a delta:
+//! an arrival appends the new job's seed columns and assign/critical-
+//! path rows (entering slack-basic, so the retained basis stays dual
+//! feasible), a departure deletes that job's rows and columns and lets
+//! the dual simplex repair the basis, and pricing restarts from the
+//! retained duals instead of from zero.
+//!
+//! Correctness never depends on the retained state: the reduced-cost
+//! widening pass makes column generation exact from ANY starting pool,
+//! and a stale or singular basis only costs pivots (the warm solve
+//! falls back to a cold factorization). A **dirty-set heuristic**
+//! declines the delta path outright when the event is too big for the
+//! state to help — more than 25 % of the roster changed, the live fleet
+//! capacities moved, the objective changed or is not pure makespan, a
+//! failure fired, or no state exists yet — and the caller runs the
+//! existing full solve, which stays bit-identical when the feature is
+//! off.
+
+use crate::cluster::ClusterSpec;
+use crate::objective::{JobTerms, Objective};
+use crate::obs::trace::Tracer;
+use crate::saturn::plan::SaturnPlan;
+use crate::saturn::solver::{plan_selection_colgen_from, solve_joint_delta,
+                            ColgenState, SolveBudget, SolverStats,
+                            SHARD_THREADS};
+use crate::trials::ProfileTable;
+
+/// Retained re-solve state plus the fingerprints the dirty-set
+/// heuristic compares against. Owned by `OnlineSaturn`; one instance
+/// lives for the whole streaming run.
+#[derive(Debug, Default)]
+pub struct IncrementalSolver {
+    state: ColgenState,
+    /// Roster (job ids) of the last retained solve.
+    last_jobs: Vec<usize>,
+    /// Live per-class capacities the last solve planned against
+    /// (`None` = static fleet).
+    last_live: Option<Vec<f64>>,
+    last_objective: Option<Objective>,
+    /// Re-solves served by the delta path.
+    pub delta_resolves: usize,
+    /// Re-solves that went through the full pipeline (declined by the
+    /// heuristic, or the delta attempt failed and fell back).
+    pub full_resolves: usize,
+}
+
+impl IncrementalSolver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The dirty-set heuristic: `true` when the retained state is fresh
+    /// enough that a delta re-solve should pay off. Conservative by
+    /// design — declining only costs a full solve, accepting a hopeless
+    /// delta costs a failed attempt AND the full solve.
+    pub fn wants_delta(
+        &self,
+        jobs: &[(usize, u64)],
+        objective: Objective,
+        failure: bool,
+        live_gpus: Option<&[f64]>,
+    ) -> bool {
+        // no state yet (first solve of the run, or just reset)
+        if self.state.pools.is_empty() || self.last_jobs.is_empty() {
+            return false;
+        }
+        // failures invalidate the fleet the state was priced against
+        if failure {
+            return false;
+        }
+        // objective changed, or not pure makespan: the delta masters
+        // price the makespan formulation only (degenerate makespan-like
+        // blends go through the full path rather than guessing terms)
+        if !objective.is_makespan()
+            || self.last_objective != Some(objective)
+        {
+            return false;
+        }
+        // fleet changed: retained duals price against dead capacities
+        if self.last_live.as_deref() != live_gpus {
+            return false;
+        }
+        // churn: >25 % of the previous roster touched (arrivals +
+        // departures, symmetric difference) → the state is mostly noise
+        let cur: std::collections::HashSet<usize> =
+            jobs.iter().map(|&(id, _)| id).collect();
+        let prev: std::collections::HashSet<usize> =
+            self.last_jobs.iter().copied().collect();
+        let touched = cur.symmetric_difference(&prev).count();
+        touched * 4 <= self.last_jobs.len()
+    }
+
+    /// Run the event as a delta over the retained state. `None` means
+    /// the delta failed (infeasible master, non-makespan terms) — the
+    /// state keeps its pruned-but-valid artifacts and the caller must
+    /// run the full solve and [`Self::note_full`]. On success the state
+    /// is refreshed in place and the fingerprints advance.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_delta(
+        &mut self,
+        jobs: &[(usize, u64)],
+        profiles: &ProfileTable,
+        cluster: &ClusterSpec,
+        lookahead: f64,
+        warm: Option<&SaturnPlan>,
+        objective: Objective,
+        terms: &[JobTerms],
+        trace: &Tracer,
+        live_gpus: Option<&[f64]>,
+        budget: SolveBudget,
+    ) -> Option<(SaturnPlan, SolverStats)> {
+        let out = solve_joint_delta(jobs, profiles, cluster, lookahead,
+                                    warm, objective, terms, trace,
+                                    live_gpus, budget, SHARD_THREADS,
+                                    &mut self.state);
+        if out.is_some() {
+            self.delta_resolves += 1;
+            self.remember(jobs, objective, live_gpus);
+        }
+        out
+    }
+
+    /// Record a FULL re-solve: reseed the pools from the chosen plan
+    /// (each job's winning key is the best imaginable seed column for
+    /// the next event) and clear duals/basis, which described a master
+    /// the full pipeline never built. Advances the fingerprints so the
+    /// next event can go delta.
+    pub fn note_full(
+        &mut self,
+        jobs: &[(usize, u64)],
+        plan: &SaturnPlan,
+        objective: Objective,
+        live_gpus: Option<&[f64]>,
+    ) {
+        self.full_resolves += 1;
+        self.state = ColgenState::default();
+        for jp in &plan.choices {
+            self.state
+                .pools
+                .insert(jp.job_id, vec![(jp.tech, jp.gpus, jp.class)]);
+        }
+        self.remember(jobs, objective, live_gpus);
+    }
+
+    /// Tight-gap column-generation probe seeded from the retained state
+    /// — the 1e-6 parity oracle `tests/prop_incremental.rs` compares
+    /// against [`crate::saturn::solver::plan_selection_probe`].
+    /// Read-only on the state.
+    pub fn parity_probe(
+        &self,
+        jobs: &[(usize, u64)],
+        profiles: &ProfileTable,
+        cluster: &ClusterSpec,
+    ) -> Option<(f64, SolverStats)> {
+        plan_selection_colgen_from(&self.state, jobs, profiles, cluster)
+    }
+
+    /// Whether any retained state exists (post-first-solve).
+    pub fn has_state(&self) -> bool {
+        !self.state.pools.is_empty()
+    }
+
+    fn remember(
+        &mut self,
+        jobs: &[(usize, u64)],
+        objective: Objective,
+        live_gpus: Option<&[f64]>,
+    ) {
+        self.last_jobs = jobs.iter().map(|&(id, _)| id).collect();
+        self.last_objective = Some(objective);
+        self.last_live = live_gpus.map(|l| l.to_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::parallelism::default_library;
+    use crate::saturn::solver::{plan_selection_probe, solve_joint_budgeted,
+                                SolverMode};
+    use crate::solver::milp::MilpEngine;
+    use crate::trials::profile_analytic;
+    use crate::workload::toy_workload;
+
+    fn setup(n: usize) -> (Vec<(usize, u64)>, ProfileTable, ClusterSpec) {
+        let jobs = toy_workload(n);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        (rem, profiles, cluster)
+    }
+
+    fn full(
+        rem: &[(usize, u64)],
+        profiles: &ProfileTable,
+        cluster: &ClusterSpec,
+    ) -> SaturnPlan {
+        solve_joint_budgeted(rem, profiles, cluster, SolverMode::Joint,
+                             1.0, None, Objective::Makespan, &[],
+                             &Tracer::off(), None, SolveBudget::default())
+            .0
+    }
+
+    #[test]
+    fn cold_solver_declines_then_accepts_after_note_full() {
+        let (rem, profiles, cluster) = setup(8);
+        let mut inc = IncrementalSolver::new();
+        assert!(!inc.wants_delta(&rem, Objective::Makespan, false, None),
+                "no retained state must decline the delta path");
+        let plan = full(&rem, &profiles, &cluster);
+        inc.note_full(&rem, &plan, Objective::Makespan, None);
+        assert!(inc.has_state());
+        assert_eq!(inc.full_resolves, 1);
+        assert!(inc.wants_delta(&rem, Objective::Makespan, false, None));
+    }
+
+    #[test]
+    fn heuristic_declines_failure_objective_fleet_and_churn() {
+        let (rem, profiles, cluster) = setup(8);
+        let mut inc = IncrementalSolver::new();
+        let plan = full(&rem, &profiles, &cluster);
+        inc.note_full(&rem, &plan, Objective::Makespan, None);
+        // failure cause
+        assert!(!inc.wants_delta(&rem, Objective::Makespan, true, None));
+        // objective changed / non-makespan
+        assert!(!inc.wants_delta(
+            &rem, Objective::WeightedJct { alpha: 0.5 }, false, None));
+        // fleet changed (static -> degraded live row)
+        let live = vec![4.0; cluster.n_classes()];
+        assert!(!inc.wants_delta(&rem, Objective::Makespan, false,
+                                 Some(&live)));
+        // churn: 3 of 8 jobs departed = 37.5 % > 25 %
+        assert!(!inc.wants_delta(&rem[..5], Objective::Makespan, false,
+                                 None));
+        // 2 of 8 = 25 % is still within budget
+        assert!(inc.wants_delta(&rem[..6], Objective::Makespan, false,
+                                None));
+    }
+
+    #[test]
+    fn delta_after_departure_matches_full_probe() {
+        let (rem, profiles, cluster) = setup(10);
+        let mut inc = IncrementalSolver::new();
+        let plan = full(&rem, &profiles, &cluster);
+        inc.note_full(&rem, &plan, Objective::Makespan, None);
+        // two jobs depart (20 % churn) -> delta path accepts
+        let after: Vec<_> = rem[..8].to_vec();
+        assert!(inc.wants_delta(&after, Objective::Makespan, false, None));
+        let got = inc.solve_delta(&after, &profiles, &cluster, 1.0, None,
+                                  Objective::Makespan, &[], &Tracer::off(),
+                                  None, SolveBudget::default());
+        assert!(got.is_some(), "delta re-solve failed on a plain departure");
+        assert_eq!(inc.delta_resolves, 1);
+        let (probe, _) = inc
+            .parity_probe(&after, &profiles, &cluster)
+            .expect("seeded parity probe failed");
+        let (reference, _) =
+            plan_selection_probe(&after, &profiles, &cluster,
+                                 MilpEngine::Revised)
+                .expect("full-grid probe failed");
+        assert!((probe - reference).abs() <= 1e-6 * reference.abs().max(1.0),
+                "seeded probe {probe} != full probe {reference}");
+    }
+}

@@ -1,10 +1,13 @@
 //! Saturn's contribution: the joint (parallelism, allocation, schedule)
 //! solver and its introspection loop (paper §2, "Solver").
 
+pub mod incremental;
 pub mod introspect;
 pub mod plan;
 pub mod solver;
 
+pub use incremental::IncrementalSolver;
 pub use introspect::SaturnPolicy;
 pub use plan::{JobPlan, SaturnPlan};
-pub use solver::{solve_joint, solve_joint_obj, SolverMode, SolverStats};
+pub use solver::{solve_joint, solve_joint_obj, SolveBudget, SolverMode,
+                 SolverStats};

@@ -51,7 +51,7 @@ use crate::objective::{JobTerms, Objective};
 use crate::obs::trace::Tracer;
 use crate::saturn::plan::{JobPlan, SaturnPlan};
 use crate::sim::placement::FreeState;
-use crate::solver::lp::{Cmp, Lp, Simplex};
+use crate::solver::lp::{Basis, Cmp, Lp, Simplex};
 use crate::solver::milp::{solve as milp_solve, solve_with_stats,
                           MilpEngine, MilpOptions, MilpResult};
 use crate::trials::ProfileTable;
@@ -160,6 +160,11 @@ pub struct SolverStats {
     /// min-area / fleet GPUs). An upper bound on the true gap vs the
     /// monolithic solve; 0.0 when unsharded.
     pub shard_gap: f64,
+    /// MILP solves truncated by an EXPLICIT anytime budget
+    /// ([`SolveBudget`] routed into `MilpOptions::{deadline_ms,
+    /// node_budget}`) — distinct from `limit_reached`, which also counts
+    /// the default node/time safety limits.
+    pub budget_exhausted: usize,
 }
 
 impl SolverStats {
@@ -182,6 +187,7 @@ impl SolverStats {
         self.lp_capped += st.capped_lps;
         self.eta_updates += st.eta_updates;
         self.refactorizations += st.refactorizations;
+        self.budget_exhausted += st.budget_hit as usize;
     }
 
     /// Fold a per-cell solve's counters into the merged sharded stats.
@@ -196,7 +202,31 @@ impl SolverStats {
         self.eta_updates += st.eta_updates;
         self.refactorizations += st.refactorizations;
         self.greedy_fallbacks += st.greedy_fallbacks;
+        self.budget_exhausted += st.budget_exhausted;
         self.proved_optimal &= st.proved_optimal;
+    }
+}
+
+/// Anytime re-solve budget for the online hot path (DESIGN.md §4.9):
+/// every MILP a budgeted solve dispatches is handed the REMAINING
+/// wall-clock/node allowance (`MilpOptions::{deadline_ms, node_budget}`),
+/// so one slow window cannot starve the event loop — the search stops at
+/// the budget and returns the best incumbent with its bound. The default
+/// (both `None`) is no budget: [`solve_joint_live`] and everything above
+/// it stay bit-identical. `node_budget` is deterministic; `deadline_ms`
+/// depends on the host clock and is for production latency floors, not
+/// replays.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SolveBudget {
+    /// Wall-clock allowance for the WHOLE solve, milliseconds.
+    pub deadline_ms: Option<f64>,
+    /// Branch-and-bound node allowance for the whole solve.
+    pub node_budget: Option<usize>,
+}
+
+impl SolveBudget {
+    pub fn is_set(&self) -> bool {
+        self.deadline_ms.is_some() || self.node_budget.is_some()
     }
 }
 
@@ -346,6 +376,32 @@ pub fn solve_joint_live(
     trace: &Tracer,
     live_gpus: Option<&[f64]>,
 ) -> (SaturnPlan, SolverStats) {
+    solve_joint_budgeted(jobs, profiles, cluster, mode, lookahead, warm,
+                         objective, terms, trace, live_gpus,
+                         SolveBudget::default())
+}
+
+/// [`solve_joint_live`] under an anytime [`SolveBudget`]: the remaining
+/// allowance is recomputed before every MILP dispatch, a truncated
+/// search returns its best incumbent (counted in
+/// [`SolverStats::budget_exhausted`]), and the final plan is FLOORED at
+/// the greedy ladder's — a budgeted solve never returns a worse plan
+/// than [`SolverMode::Heuristic`] would have. With the default budget
+/// this IS `solve_joint_live`, bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_joint_budgeted(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    mode: SolverMode,
+    lookahead: f64,
+    warm: Option<&SaturnPlan>,
+    objective: Objective,
+    terms: &[JobTerms],
+    trace: &Tracer,
+    live_gpus: Option<&[f64]>,
+    budget: SolveBudget,
+) -> (SaturnPlan, SolverStats) {
     let start = Instant::now();
     let traced = trace.is_enabled();
     if traced {
@@ -391,7 +447,7 @@ pub fn solve_joint_live(
         Some(live) if live.len() == cluster.n_classes() => live.to_vec(),
         _ => class_capacities(cluster),
     };
-    let obj = ObjSpec::new(objective, terms);
+    let obj = ObjSpec::new(objective, terms).with_budget(budget, start);
     if traced {
         let cands: usize = plans.iter().map(|(_, ps)| ps.len()).sum();
         trace.end(
@@ -509,6 +565,8 @@ pub fn solve_joint_live(
             );
         }
     }
+    apply_greedy_floor(&mut plan, &plans, &g_class, kappa, &obj, cluster,
+                       &mut stats);
     stats.wall_s = start.elapsed().as_secs_f64();
     if traced {
         trace.end(
@@ -520,6 +578,119 @@ pub fn solve_joint_live(
     (plan, stats)
 }
 
+/// Above this many jobs the delta path solves seeded CELLS (the sharded
+/// partition) instead of one seeded master — the same crossover at
+/// which the online scheduler leaves single-shot Joint solves.
+pub(crate) const DELTA_UNSHARDED_MAX: usize = 64;
+
+/// Event-delta joint solve over RETAINED column-generation state — the
+/// online incremental hot path (DESIGN.md §4.9). Seeds every restricted
+/// master from `state` (pools, duals, remapped basis), updates `state`
+/// in place on success, and returns `None` whenever any level fails so
+/// the caller ([`crate::saturn::incremental::IncrementalSolver`]) can
+/// fall back to the full solve. Makespan-like objectives only: the
+/// colgen masters price the makespan formulation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_joint_delta(
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+    lookahead: f64,
+    warm: Option<&SaturnPlan>,
+    objective: Objective,
+    terms: &[JobTerms],
+    trace: &Tracer,
+    live_gpus: Option<&[f64]>,
+    budget: SolveBudget,
+    threads: usize,
+    state: &mut ColgenState,
+) -> Option<(SaturnPlan, SolverStats)> {
+    let start = Instant::now();
+    let kappa = lookahead.max(1.0);
+    let mut stats = SolverStats::default();
+    let feasible_jobs: Vec<(usize, u64)>;
+    let jobs = match check_fleet_feasibility(jobs, profiles, cluster) {
+        Ok(()) => jobs,
+        Err(e) => {
+            feasible_jobs = jobs
+                .iter()
+                .copied()
+                .filter(|&(id, _)| profiles.feasible_anywhere(id))
+                .collect();
+            stats.shed_jobs = jobs.len() - feasible_jobs.len();
+            log::warn!(
+                "{e}; shedding {} job(s) and planning the rest",
+                stats.shed_jobs);
+            &feasible_jobs
+        }
+    };
+    let obj = ObjSpec::new(objective, terms).with_budget(budget, start);
+    if !obj.makespan_like() {
+        return None;
+    }
+    // departures: drop the departed jobs' retained artifacts up front
+    // (the basis layout tolerates missing jobs through the remap)
+    let roster: std::collections::HashSet<usize> =
+        jobs.iter().map(|&(id, _)| id).collect();
+    state.pools.retain(|id, _| roster.contains(id));
+    state.job_duals.retain(|id, _| roster.contains(id));
+    let plans = expand_plans(jobs, profiles);
+    let g_class = match live_gpus {
+        Some(live) if live.len() == cluster.n_classes() => live.to_vec(),
+        _ => class_capacities(cluster),
+    };
+    let zeros = vec![0.0; g_class.len()];
+    let seed = state.clone();
+    let traced = trace.is_enabled();
+    if traced {
+        trace.begin(
+            "solver",
+            "solve",
+            Json::obj(vec![
+                ("jobs", Json::num(plans.len() as f64)),
+                ("mode", Json::str("delta")),
+            ]),
+        );
+    }
+    let choices = if plans.len() <= DELTA_UNSHARDED_MAX {
+        colgen_choice_seeded(&plans, &g_class, kappa, 0.0, &zeros, warm,
+                             20_000, 10.0, 0.01, &obj, trace, &mut stats,
+                             Some(&seed), Some(state))
+    } else {
+        sharded_choice_seeded(&plans, &g_class, kappa, warm,
+                              DELTA_UNSHARDED_MAX, threads, &obj, trace,
+                              &mut stats, Some(&seed), Some(state))
+    };
+    let Some(choices) = choices else {
+        if traced {
+            trace.end(
+                "solver",
+                "solve",
+                Json::obj(vec![("failed", Json::Bool(true))]),
+            );
+        }
+        return None;
+    };
+    let mut plan = build_schedule(choices, cluster);
+    if kappa <= 1.0 + 1e-9
+        && plan.choices.len() <= LOCAL_SEARCH_MAX_JOBS
+        && obj.makespan_like()
+    {
+        local_search(&mut plan, &plans, cluster);
+    }
+    apply_greedy_floor(&mut plan, &plans, &g_class, kappa, &obj, cluster,
+                       &mut stats);
+    stats.wall_s = start.elapsed().as_secs_f64();
+    if traced {
+        trace.end(
+            "solver",
+            "solve",
+            Json::obj(vec![("wall_s", Json::num(stats.wall_s))]),
+        );
+    }
+    Some((plan, stats))
+}
+
 /// Objective payload threaded through the plan-selection levels.
 struct ObjSpec<'a> {
     objective: Objective,
@@ -529,6 +700,11 @@ struct ObjSpec<'a> {
     /// job id -> index into `terms`: rolling windows and the LP builder
     /// look terms up per (job, row), so lookups must not scan the slice.
     by_id: std::collections::HashMap<usize, usize>,
+    /// Anytime budget shared by EVERY MILP this solve dispatches; the
+    /// default (unset) keeps the historical limits bit for bit.
+    budget: SolveBudget,
+    /// Instant the budget's deadline is measured from (solve entry).
+    t0: Instant,
 }
 
 impl ObjSpec<'_> {
@@ -538,7 +714,30 @@ impl ObjSpec<'_> {
             .enumerate()
             .map(|(i, t)| (t.job_id, i))
             .collect();
-        ObjSpec { objective, terms, by_id }
+        ObjSpec { objective, terms, by_id, budget: SolveBudget::default(),
+                  t0: Instant::now() }
+    }
+
+    fn with_budget(mut self, budget: SolveBudget, t0: Instant) -> Self {
+        self.budget = budget;
+        self.t0 = t0;
+        self
+    }
+
+    /// The budget allowance still unspent at this dispatch: wall clock
+    /// measured from the solve's entry, nodes from the running total in
+    /// `stats`. Clamped at zero so an overrun dispatch still returns
+    /// its warm incumbent immediately instead of underflowing.
+    fn remaining_budget(&self, stats: &SolverStats)
+        -> (Option<f64>, Option<usize>) {
+        let deadline_ms = self.budget.deadline_ms.map(|d| {
+            (d - self.t0.elapsed().as_secs_f64() * 1e3).max(0.0)
+        });
+        let node_budget = self
+            .budget
+            .node_budget
+            .map(|b| b.saturating_sub(stats.milp_nodes));
+        (deadline_ms, node_budget)
     }
 
     /// The historical objective: pure makespan, neutral terms.
@@ -565,6 +764,35 @@ fn class_capacities(cluster: &ClusterSpec) -> Vec<f64> {
     (0..cluster.n_classes())
         .map(|ci| cluster.class_gpus(ci) as f64)
         .collect()
+}
+
+/// Anytime floor for budgeted solves: whatever the (possibly truncated)
+/// MILP produced, the returned plan may never be worse than the greedy
+/// ladder pushed through the SAME schedule/repair pipeline — this makes
+/// "budget-on never loses to the greedy fallback" a structural property
+/// of [`solve_joint_budgeted`], not a tendency. No-op without a budget
+/// and on non-makespan objectives (greedy optimizes makespan only).
+fn apply_greedy_floor(
+    plan: &mut SaturnPlan,
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
+    kappa: f64,
+    obj: &ObjSpec,
+    cluster: &ClusterSpec,
+    stats: &mut SolverStats,
+) {
+    if !obj.budget.is_set() || !obj.makespan_like() {
+        return;
+    }
+    let mut g =
+        build_schedule(greedy_choice(plans, g_class, kappa), cluster);
+    if kappa <= 1.0 + 1e-9 && g.choices.len() <= LOCAL_SEARCH_MAX_JOBS {
+        local_search(&mut g, plans, cluster);
+    }
+    if g.predicted_makespan_s + 1e-9 < plan.predicted_makespan_s {
+        stats.greedy_fallbacks += 1;
+        *plan = g;
+    }
 }
 
 /// Per-job candidate plans (tech, gpus, class, total runtime) over the
@@ -752,6 +980,123 @@ pub fn sharded_probe(
     Some((probe_objective(&choices, &g_class), stats))
 }
 
+/// Column-generation artifacts RETAINED across online events — what the
+/// incremental re-solve path (`saturn::incremental`, DESIGN.md §4.9)
+/// persists instead of rebuilding the master from scratch. Everything
+/// here is a warm-start hint, never a correctness input: pools re-admit
+/// previously-priced columns, duals drive a pricing pre-pass, and the
+/// basis re-enters the first master via [`Basis::remap`] + dual-simplex
+/// repair — a stale or singular artifact only costs pivots.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ColgenState {
+    /// job id -> admitted candidate KEYS (tech, gpus, class). Runtimes
+    /// are re-derived from the live ladders every event, so a key whose
+    /// remaining-steps runtime changed stays valid.
+    pub pools: std::collections::HashMap<usize, Vec<(usize, u32, usize)>>,
+    /// job id -> (assignment dual, critical-path dual) from the last
+    /// converged master that priced the job.
+    pub job_duals: std::collections::HashMap<usize, (f64, f64)>,
+    /// Per-class area duals from the last converged master.
+    pub area_duals: Vec<f64>,
+    /// Master simplex basis from the last UNSHARDED converged pricing
+    /// loop, with the layout it refers to: rows 2*ji / 2*ji+1 per job in
+    /// `job_order` then one area row per class; structural columns in
+    /// `col_keys` order with the makespan variable M last.
+    pub basis: Option<Basis>,
+    pub job_order: Vec<usize>,
+    pub col_keys: Vec<(usize, (usize, u32, usize))>,
+}
+
+/// Carry a retained master basis onto THIS event's restricted master:
+/// arrivals become brand-new rows (slack-basic, dual-feasible),
+/// departures delete their rows/columns, and surviving rows keep their
+/// basic columns translated through the key maps ([`Basis::remap`]).
+/// `None` when the retained layout is unusable — the caller cold-solves.
+fn remap_master_basis(
+    state: &ColgenState,
+    plans: &[(usize, Vec<Cand>)],
+    sel: &[Vec<usize>],
+    n_classes: usize,
+) -> Option<Basis> {
+    let basis = state.basis.as_ref()?;
+    let old_nj = state.job_order.len();
+    let old_n = state.col_keys.len() + 1; // structural columns + M
+    let old_m = 2 * old_nj + n_classes;
+    if basis.basic.len() != old_m || basis.at_upper.len() != old_n + old_m
+    {
+        return None;
+    }
+    let old_ji: std::collections::HashMap<usize, usize> = state
+        .job_order
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| (id, i))
+        .collect();
+    // new structural index per (job, key), in master column order
+    let mut new_col: std::collections::HashMap<
+        (usize, (usize, u32, usize)),
+        usize,
+    > = std::collections::HashMap::new();
+    let mut var = 0usize;
+    for (ji, s) in sel.iter().enumerate() {
+        let (id, ps) = &plans[ji];
+        for &c in s {
+            new_col.insert((*id, (ps[c].0, ps[c].1, ps[c].2)), var);
+            var += 1;
+        }
+    }
+    let m_var = var;
+    let col_to: Vec<Option<usize>> = state
+        .col_keys
+        .iter()
+        .map(|&(id, key)| new_col.get(&(id, key)).copied())
+        .chain(std::iter::once(Some(m_var)))
+        .collect();
+    let mut row_from: Vec<Option<usize>> =
+        Vec::with_capacity(2 * plans.len() + n_classes);
+    for (id, _) in plans {
+        match old_ji.get(id) {
+            Some(&o) => {
+                row_from.push(Some(2 * o));
+                row_from.push(Some(2 * o + 1));
+            }
+            None => {
+                row_from.push(None);
+                row_from.push(None);
+            }
+        }
+    }
+    for ci in 0..n_classes {
+        row_from.push(Some(2 * old_nj + ci));
+    }
+    Some(basis.remap(&row_from, &col_to, old_n, m_var + 1))
+}
+
+/// Tight-gap seeded column-generation probe: the parity oracle for the
+/// incremental path. Starting the pricing loop from `state`'s pools,
+/// duals, and basis must land on the SAME objective as the full-grid
+/// probe — the reduced-cost widening pass makes colgen exact from ANY
+/// starting pool, so `tests/prop_incremental.rs` holds this to 1e-6.
+/// Read-only on `state`.
+pub(crate) fn plan_selection_colgen_from(
+    state: &ColgenState,
+    jobs: &[(usize, u64)],
+    profiles: &ProfileTable,
+    cluster: &ClusterSpec,
+) -> Option<(f64, SolverStats)> {
+    let start = Instant::now();
+    let mut stats = SolverStats::default();
+    let plans = expand_plans(jobs, profiles);
+    let g_class = class_capacities(cluster);
+    let zeros = vec![0.0; g_class.len()];
+    let choices = colgen_choice_seeded(
+        &plans, &g_class, 1.0, 0.0, &zeros, None, 200_000, 120.0, 1e-6,
+        &ObjSpec::makespan(), &Tracer::off(), &mut stats, Some(state),
+        None)?;
+    stats.wall_s = start.elapsed().as_secs_f64();
+    Some((probe_objective(&choices, &g_class), stats))
+}
+
 /// The makespan restricted master over `sel`ected candidate subsets
 /// (`sel[ji]` indexes into `plans[ji].1`). Row layout is what the
 /// pricing step scores against: per job `ji` an assignment row `2*ji`
@@ -845,6 +1190,36 @@ fn colgen_choice(
     trace: &Tracer,
     stats: &mut SolverStats,
 ) -> Option<Vec<JobPlan>> {
+    colgen_choice_seeded(plans, g_class, kappa, m_floor, fixed_area, warm,
+                         max_nodes, time_limit_s, gap, obj, trace, stats,
+                         None, None)
+}
+
+/// [`colgen_choice`] with RETAINED state on both ends (the incremental
+/// hot path): `seed` re-admits the previous event's column pool, runs a
+/// pricing pre-pass against the retained duals, and warm-starts the
+/// first master from the remapped basis; `out_state` receives the
+/// converged pool/duals/basis for the next event. Both `None` IS the
+/// unseeded solve. Seeding only changes which columns the restricted
+/// masters start from — never the pricing rule or the widening pass —
+/// so the tight-gap objective is unchanged from any seed.
+#[allow(clippy::too_many_arguments)]
+fn colgen_choice_seeded(
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
+    kappa: f64,
+    m_floor: f64,
+    fixed_area: &[f64],
+    warm: Option<&SaturnPlan>,
+    max_nodes: usize,
+    time_limit_s: f64,
+    gap: f64,
+    obj: &ObjSpec,
+    trace: &Tracer,
+    stats: &mut SolverStats,
+    seed: Option<&ColgenState>,
+    out_state: Option<&mut ColgenState>,
+) -> Option<Vec<JobPlan>> {
     if !obj.makespan_like() {
         return plan_selection_with_engine(
             plans, g_class, kappa, m_floor, fixed_area, warm, max_nodes,
@@ -876,6 +1251,54 @@ fn colgen_choice(
     for (ji, s) in sel.iter().enumerate() {
         in_sel[ji][s[0]] = true;
     }
+    if let Some(state) = seed {
+        // re-admit the retained pool (seed columns, not "priced")
+        for (ji, (id, ps)) in plans.iter().enumerate() {
+            if let Some(keys) = state.pools.get(id) {
+                for (c, p) in ps.iter().enumerate() {
+                    if !in_sel[ji][c] && keys.contains(&(p.0, p.1, p.2)) {
+                        sel[ji].push(c);
+                        in_sel[ji][c] = true;
+                    }
+                }
+            }
+        }
+        // pricing pre-pass from the RETAINED duals: one event later they
+        // are stale, but still a strong predictor — negative-rc columns
+        // enter before the first master ever solves
+        if state.area_duals.len() == g_class.len() {
+            for (ji, (id, ps)) in plans.iter().enumerate() {
+                let Some(&(ya, yc)) = state.job_duals.get(id) else {
+                    continue;
+                };
+                for (c, p) in ps.iter().enumerate() {
+                    if in_sel[ji][c] {
+                        continue;
+                    }
+                    let rc = -(ya
+                        + yc * (p.3 / kappa)
+                        + state.area_duals[p.2] * (p.1 as f64 * p.3));
+                    if rc < -COLGEN_RC_TOL {
+                        sel[ji].push(c);
+                        in_sel[ji][c] = true;
+                        stats.columns_priced += 1;
+                    }
+                }
+            }
+        }
+    }
+    let want_state = out_state.is_some();
+    // basis layout snapshot of the master column order (job by job, sel
+    // order) — what ColgenState::col_keys must mirror
+    let snapshot = |sel: &[Vec<usize>]| {
+        plans
+            .iter()
+            .zip(sel)
+            .flat_map(|((id, ps), s)| {
+                s.iter().map(move |&c| (*id, (ps[c].0, ps[c].1, ps[c].2)))
+            })
+            .collect::<Vec<_>>()
+    };
     // each round adds at most one column per job, so the longest ladder
     // bounds the rounds to converge (then every column is in)
     let max_rounds =
@@ -883,11 +1306,23 @@ fn colgen_choice(
     let mut z_lp = f64::NAN;
     let mut duals: Option<Vec<f64>> = None;
     let mut converged = false;
+    let mut entry_basis: Option<Basis> =
+        seed.and_then(|s| remap_master_basis(s, plans, &sel,
+                                             g_class.len()));
+    let mut last_round: Option<(Basis, Vec<(usize, (usize, u32, usize))>)> =
+        None;
     for _ in 0..max_rounds {
         let lp = build_restricted_master(plans, &sel, g_class, kappa,
                                          m_floor, fixed_area);
         let sx = Simplex::new(&lp);
-        let solved = sx.solve_cold(&lp.lower, &lp.upper);
+        let solved = match entry_basis.take() {
+            // arrival/departure repair: the retained basis re-enters via
+            // the dual simplex; a singular remap falls back to cold
+            Some(b) => sx
+                .solve_warm(&lp.lower, &lp.upper, &b)
+                .unwrap_or_else(|| sx.solve_cold(&lp.lower, &lp.upper)),
+            None => sx.solve_cold(&lp.lower, &lp.upper),
+        };
         stats.lp_pivots += solved.info.pivots;
         stats.eta_updates += solved.info.eta_updates;
         stats.refactorizations += solved.info.refactorizations;
@@ -899,6 +1334,9 @@ fn colgen_choice(
         };
         let Some(basis) = solved.basis else { break };
         let Some(y) = sx.duals_for(&basis) else { break };
+        if want_state {
+            last_round = Some((basis, snapshot(&sel)));
+        }
         z_lp = objective;
         let mut added = false;
         for (ji, (_, ps)) in plans.iter().enumerate() {
@@ -934,50 +1372,85 @@ fn colgen_choice(
             .map(|((id, ps), s)| (*id, s.iter().map(|&c| ps[c]).collect()))
             .collect()
     };
-    let choices = plan_selection_with_engine(
-        &restrict(&sel), g_class, kappa, m_floor, fixed_area, warm,
-        max_nodes, time_limit_s, gap, MilpEngine::Revised, obj, 0.0,
-        trace, stats)?;
-    let y = match (&duals, converged && z_lp.is_finite()) {
-        (Some(y), true) => y,
-        _ => return Some(choices),
-    };
-    // integer objective of the incumbent in this formulation's currency
-    let z_r = {
-        let longest = choices
-            .iter()
-            .map(|p| p.runtime_s / kappa)
-            .fold(m_floor, f64::max);
-        let mut areas = fixed_area.to_vec();
-        for p in &choices {
-            areas[p.class] += p.gpus as f64 * p.runtime_s;
+    let choices = 'solve: {
+        let Some(choices) = plan_selection_with_engine(
+            &restrict(&sel), g_class, kappa, m_floor, fixed_area, warm,
+            max_nodes, time_limit_s, gap, MilpEngine::Revised, obj, 0.0,
+            trace, stats)
+        else {
+            break 'solve None;
+        };
+        let y = match (&duals, converged && z_lp.is_finite()) {
+            (Some(y), true) => y,
+            _ => break 'solve Some(choices),
+        };
+        // integer objective of the incumbent in this formulation's
+        // currency
+        let z_r = {
+            let longest = choices
+                .iter()
+                .map(|p| p.runtime_s / kappa)
+                .fold(m_floor, f64::max);
+            let mut areas = fixed_area.to_vec();
+            for p in &choices {
+                areas[p.class] += p.gpus as f64 * p.runtime_s;
+            }
+            areas
+                .iter()
+                .zip(g_class)
+                .map(|(a, g)| a / g.max(1e-9))
+                .fold(longest, f64::max)
+        };
+        let slack = (z_r - z_lp).max(0.0) + COLGEN_RC_TOL;
+        let mut widened = false;
+        for (ji, (_, ps)) in plans.iter().enumerate() {
+            for (c, p) in ps.iter().enumerate() {
+                if !in_sel[ji][c]
+                    && reduced_cost(y, nj, ji, p, kappa) <= slack
+                {
+                    sel[ji].push(c);
+                    in_sel[ji][c] = true;
+                    stats.columns_priced += 1;
+                    widened = true;
+                }
+            }
         }
-        areas
-            .iter()
-            .zip(g_class)
-            .map(|(a, g)| a / g.max(1e-9))
-            .fold(longest, f64::max)
+        if !widened {
+            break 'solve Some(choices);
+        }
+        plan_selection_with_engine(
+            &restrict(&sel), g_class, kappa, m_floor, fixed_area, warm,
+            max_nodes, time_limit_s, gap, MilpEngine::Revised, obj, 0.0,
+            trace, stats)
     };
-    let slack = (z_r - z_lp).max(0.0) + COLGEN_RC_TOL;
-    let mut widened = false;
-    for (ji, (_, ps)) in plans.iter().enumerate() {
-        for (c, p) in ps.iter().enumerate() {
-            if !in_sel[ji][c] && reduced_cost(y, nj, ji, p, kappa) <= slack
-            {
-                sel[ji].push(c);
-                in_sel[ji][c] = true;
-                stats.columns_priced += 1;
-                widened = true;
+    if let Some(state) = out_state {
+        if choices.is_some() {
+            for ((id, ps), s) in plans.iter().zip(&sel) {
+                state.pools.insert(
+                    *id,
+                    s.iter()
+                        .map(|&c| (ps[c].0, ps[c].1, ps[c].2))
+                        .collect());
+            }
+            if let Some(y) = &duals {
+                if y.len() == 2 * nj + g_class.len() {
+                    for (ji, (id, _)) in plans.iter().enumerate() {
+                        state
+                            .job_duals
+                            .insert(*id, (y[2 * ji], y[2 * ji + 1]));
+                    }
+                    state.area_duals = y[2 * nj..].to_vec();
+                }
+            }
+            if let Some((b, keys)) = last_round {
+                state.basis = Some(b);
+                state.col_keys = keys;
+                state.job_order =
+                    plans.iter().map(|(id, _)| *id).collect();
             }
         }
     }
-    if !widened {
-        return Some(choices);
-    }
-    plan_selection_with_engine(
-        &restrict(&sel), g_class, kappa, m_floor, fixed_area, warm,
-        max_nodes, time_limit_s, gap, MilpEngine::Revised, obj, 0.0,
-        trace, stats)
+    choices
 }
 
 // ---------------------------------------------------------------------------
@@ -987,7 +1460,7 @@ fn colgen_choice(
 /// Worker threads the sharded mode fans per-cell solves across. The
 /// merge is order-preserving, so the count only changes wall time —
 /// `sharded_probe` lets the props pin that down.
-const SHARD_THREADS: usize = 4;
+pub(crate) const SHARD_THREADS: usize = 4;
 
 /// Per-cell MILP budgets: many small interactive solves, like rolling
 /// windows but concurrent (same budgets — a cell is at most twice a
@@ -1015,6 +1488,29 @@ fn sharded_choice(
     obj: &ObjSpec,
     trace: &Tracer,
     stats: &mut SolverStats,
+) -> Option<Vec<JobPlan>> {
+    sharded_choice_seeded(plans, g_class, kappa, warm, cell_size, threads,
+                          obj, trace, stats, None, None)
+}
+
+/// [`sharded_choice`] with retained column-generation state: every cell
+/// seeds its colgen from the SHARED `seed` (pools and duals are keyed by
+/// job id, so any partition can consume them) and the per-cell converged
+/// states merge back into `out_state` in cell order — deterministic for
+/// any worker count, exactly like the pick merge.
+#[allow(clippy::too_many_arguments)]
+fn sharded_choice_seeded(
+    plans: &[(usize, Vec<Cand>)],
+    g_class: &[f64],
+    kappa: f64,
+    warm: Option<&SaturnPlan>,
+    cell_size: usize,
+    threads: usize,
+    obj: &ObjSpec,
+    trace: &Tracer,
+    stats: &mut SolverStats,
+    seed: Option<&ColgenState>,
+    out_state: Option<&mut ColgenState>,
 ) -> Option<Vec<JobPlan>> {
     if plans.is_empty() {
         return Some(Vec::new());
@@ -1078,7 +1574,10 @@ fn sharded_choice(
     let share: Vec<f64> =
         g_class.iter().map(|g| g / n_cells as f64).collect();
     let zeros = vec![0.0; g_class.len()];
-    let solved: Vec<Option<(Vec<JobPlan>, SolverStats)>> = scope_map(
+    let want_state = out_state.is_some();
+    let solved: Vec<
+        Option<(Vec<JobPlan>, SolverStats, Option<ColgenState>)>,
+    > = scope_map(
         threads,
         (0..n_cells).collect(),
         |ci: usize| {
@@ -1087,19 +1586,23 @@ fn sharded_choice(
                 .map(|&ji| plans[ji].clone())
                 .collect();
             let mut cstats = SolverStats::default();
-            colgen_choice(&sub, &share, kappa, 0.0, &zeros, warm,
-                          CELL_MAX_NODES, CELL_TIME_LIMIT_S, 0.01, obj,
-                          &Tracer::off(), &mut cstats)
-                .map(|c| (c, cstats))
+            let mut cell_state = want_state.then(ColgenState::default);
+            colgen_choice_seeded(&sub, &share, kappa, 0.0, &zeros, warm,
+                                 CELL_MAX_NODES, CELL_TIME_LIMIT_S, 0.01,
+                                 obj, &Tracer::off(), &mut cstats, seed,
+                                 cell_state.as_mut())
+                .map(|c| (c, cstats, cell_state))
         },
     );
     let mut all_proved = true;
     let mut merged: Vec<Option<JobPlan>> = vec![None; plans.len()];
+    let mut cell_states: Vec<ColgenState> = Vec::new();
     for (ci, res) in solved.into_iter().enumerate() {
         let picks = match res {
-            Some((picks, cstats)) => {
+            Some((picks, cstats, cstate)) => {
                 all_proved &= cstats.proved_optimal;
                 stats.merge_cell(&cstats);
+                cell_states.extend(cstate);
                 picks
             }
             None => {
@@ -1114,6 +1617,23 @@ fn sharded_choice(
         };
         for (k, &ji) in cells[ci].iter().enumerate() {
             merged[ji] = Some(picks[k]);
+        }
+    }
+    if let Some(state) = out_state {
+        // cell-order merge: pools/duals are job-keyed (disjoint across
+        // cells); the basis snapshot keeps the LAST cell's — any cell's
+        // basis is only a warm-start hint for the next event
+        for cs in cell_states {
+            state.pools.extend(cs.pools);
+            state.job_duals.extend(cs.job_duals);
+            if !cs.area_duals.is_empty() {
+                state.area_duals = cs.area_duals;
+            }
+            if cs.basis.is_some() {
+                state.basis = cs.basis;
+                state.job_order = cs.job_order;
+                state.col_keys = cs.col_keys;
+            }
         }
     }
     let choices: Vec<JobPlan> = merged
@@ -1408,6 +1928,7 @@ fn plan_selection_with_engine(
     // Rolling windows (<= ~230 vars, microsecond warm re-solves) would
     // lose more to spawn/join than they gain — keep them serial.
     let threads = if n >= 256 { 4 } else { 1 };
+    let (deadline_ms, node_budget) = obj.remaining_budget(stats);
     let opts = MilpOptions {
         gap,
         max_nodes,
@@ -1415,6 +1936,10 @@ fn plan_selection_with_engine(
         warm_start: warm_x,
         threads,
         engine,
+        // anytime budgets: the REMAINING allowance at this dispatch
+        // (None without a budget — the historical limits, bit for bit)
+        deadline_ms,
+        node_budget,
         // root strong branching stays off here: warm-started event-rate
         // re-solves already prune from a seeded incumbent, and k > 0
         // would perturb the bit-exact makespan replays the benches pin
@@ -2465,6 +2990,118 @@ mod tests {
                         <= cluster.class_gpus(ci) as f64
                             * plan.predicted_makespan_s + 1e-6);
         }
+    }
+
+    #[test]
+    fn budgeted_solve_with_no_budget_is_bit_identical() {
+        let (jobs, profiles, cluster) = setup(1);
+        let rem = remaining(&jobs);
+        let (a, _) = solve_joint(&rem, &profiles, &cluster,
+                                 SolverMode::Joint);
+        let (b, sb) = solve_joint_budgeted(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::Makespan, &[], &Tracer::off(), None,
+            SolveBudget::default());
+        assert_eq!(a.choices, b.choices);
+        assert_eq!(a.predicted_makespan_s.to_bits(),
+                   b.predicted_makespan_s.to_bits());
+        assert_eq!(sb.budget_exhausted, 0);
+    }
+
+    #[test]
+    fn exhausted_node_budget_still_beats_or_matches_greedy() {
+        // node_budget 0: every MILP returns its seed incumbent at once,
+        // and the greedy floor guarantees the plan never loses to the
+        // Heuristic mode on the same inputs
+        let (jobs, profiles, cluster) = setup(1);
+        let rem = remaining(&jobs);
+        let budget = SolveBudget { deadline_ms: None,
+                                   node_budget: Some(0) };
+        let (plan, stats) = solve_joint_budgeted(
+            &rem, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::Makespan, &[], &Tracer::off(), None, budget);
+        assert!(stats.budget_exhausted > 0,
+                "a zero node budget never fired");
+        let (greedy, _) = solve_joint(&rem, &profiles, &cluster,
+                                      SolverMode::Heuristic);
+        assert!(plan.predicted_makespan_s
+                    <= greedy.predicted_makespan_s + 1e-9,
+                "budgeted {} vs greedy {}", plan.predicted_makespan_s,
+                greedy.predicted_makespan_s);
+        assert_eq!(plan.choices.len(), rem.len());
+    }
+
+    #[test]
+    fn delta_solve_matches_full_probe_across_events() {
+        // arrival -> departure -> arrival event mix: after every event
+        // the seeded tight-gap probe must equal the full-grid probe
+        // (colgen is exact from ANY pool), and the retained state must
+        // track the roster
+        let jobs = toy_workload(12);
+        let cluster = ClusterSpec::p4d(1);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let mut state = ColgenState::default();
+        let events: Vec<Vec<(usize, u64)>> = vec![
+            rem[..8].to_vec(),           // initial cohort
+            rem[..10].to_vec(),          // arrival of 2
+            rem[2..10].to_vec(),         // departure of 2
+            rem[2..].to_vec(),           // arrival of 2 more
+        ];
+        for (ei, ev) in events.iter().enumerate() {
+            let got = solve_joint_delta(
+                ev, &profiles, &cluster, 1.0, None, Objective::Makespan,
+                &[], &Tracer::off(), None, SolveBudget::default(),
+                SHARD_THREADS, &mut state);
+            let (plan, _) = got.expect("delta solve");
+            assert_eq!(plan.choices.len(), ev.len(), "event {ei}");
+            let (seeded, _) = plan_selection_colgen_from(
+                &state, ev, &profiles, &cluster)
+                .expect("seeded probe");
+            let (full, _) = plan_selection_probe(
+                ev, &profiles, &cluster, MilpEngine::Revised)
+                .expect("full probe");
+            assert!((seeded - full).abs() <= 1e-6 * full.abs().max(1.0),
+                    "event {ei}: seeded {seeded} vs full {full}");
+            // retained state covers exactly the live roster
+            assert_eq!(state.pools.len(), ev.len());
+            assert!(state.basis.is_some(),
+                    "event {ei} retained no master basis");
+        }
+    }
+
+    #[test]
+    fn delta_solve_is_thread_count_invariant_when_sharded() {
+        // 80 jobs > DELTA_UNSHARDED_MAX forces the seeded-cell path;
+        // the merge is order-preserving, so worker count changes wall
+        // time only
+        let jobs = toy_workload(80);
+        let cluster = ClusterSpec::p4d(2);
+        let lib = default_library();
+        let profiles = profile_analytic(&jobs, &lib, &cluster);
+        let rem: Vec<(usize, u64)> =
+            jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+        let run = |threads: usize| {
+            let mut state = ColgenState::default();
+            // one event to build state, a second to consume it
+            solve_joint_delta(&rem[..70], &profiles, &cluster, 1.0, None,
+                              Objective::Makespan, &[], &Tracer::off(),
+                              None, SolveBudget::default(), threads,
+                              &mut state)
+                .expect("warmup");
+            solve_joint_delta(&rem, &profiles, &cluster, 1.0, None,
+                              Objective::Makespan, &[], &Tracer::off(),
+                              None, SolveBudget::default(), threads,
+                              &mut state)
+                .expect("delta")
+                .0
+        };
+        let (a, b) = (run(1), run(4));
+        assert_eq!(a.choices, b.choices);
+        assert_eq!(a.predicted_makespan_s.to_bits(),
+                   b.predicted_makespan_s.to_bits());
     }
 
     #[test]

@@ -245,6 +245,14 @@ pub struct SimConfig {
     /// checkpointing — fault kills lose nothing. Planned preemptions
     /// (introspection/replan) still checkpoint exactly, as before.
     pub checkpoint_interval_s: f64,
+    /// Event-coalescing debounce window, virtual seconds
+    /// (`--coalesce-window-s`). When an instant carries ONLY arrivals
+    /// and another arrival lands within this window — before any other
+    /// event — the replan is deferred so an HPO cohort's burst of
+    /// sibling arrivals folds into ONE re-solve. `0` (the default)
+    /// replans at every arrival instant, bit-identical to the
+    /// historical engine.
+    pub coalesce_window_s: f64,
 }
 
 impl Default for SimConfig {
@@ -256,6 +264,7 @@ impl Default for SimConfig {
             trace: Tracer::off(),
             faults: FaultConfig::none(),
             checkpoint_interval_s: 1800.0,
+            coalesce_window_s: 0.0,
         }
     }
 }
@@ -356,6 +365,9 @@ pub struct OnlineSimResult {
     /// counting only work that stuck. Equals `gpu_utilization` bit for
     /// bit when faults are off.
     pub goodput: f64,
+    /// Arrival instants whose replan was deferred into a later one by
+    /// the coalescing window (0 when `coalesce_window_s` is 0).
+    pub coalesced_events: usize,
 }
 
 impl OnlineSimResult {
@@ -450,6 +462,7 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
     let mut preemptions = 0usize;
     let mut migrations = 0usize;
     let mut launches = 0usize;
+    let mut coalesced = 0usize;
     let mut busy_gpu_seconds = 0.0f64;
     let mut peak_gpus = 0u32;
     let interval = policy.introspection_interval();
@@ -785,6 +798,73 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
             }
         }
 
+        // (3.6) event coalescing: when this instant carries ONLY
+        // arrivals and another arrival lands within the debounce window
+        // — no sooner than which any other event fires — defer the
+        // replan to that later instant. A staggered HPO burst then
+        // folds into one re-solve over the whole cohort. Deferred
+        // arrivals are already marked `arrived`, so they are planned
+        // (as one batch) at the instant that ends the burst.
+        if cfg.coalesce_window_s > 0.0
+            && arrived_now
+            && !departed_now
+            && !fault_now
+            && next_introspect != Some(now)
+        {
+            let pending_arrival = state
+                .iter()
+                .filter(|s| !s.arrived)
+                .map(|s| s.arrival_s)
+                .fold(f64::INFINITY, f64::min);
+            let next_finish = state
+                .iter()
+                .filter_map(|s| s.running.as_ref().map(|r| r.planned_finish))
+                .fold(f64::INFINITY, f64::min);
+            let next_rung = match rungs {
+                Some(rc) => state
+                    .iter()
+                    .filter_map(|s| rung_crossing(s, rc, now))
+                    .fold(f64::INFINITY, f64::min),
+                None => f64::INFINITY,
+            };
+            let next_fault = match &faults {
+                Some(fm) => {
+                    let node_ev = fm
+                        .next_node_event_after(now)
+                        .unwrap_or(f64::INFINITY);
+                    state
+                        .iter()
+                        .filter(|s| s.running.is_some())
+                        .filter_map(|s| fm.next_crash_after(s.job.id, now))
+                        .fold(node_ev, f64::min)
+                }
+                None => f64::INFINITY,
+            };
+            let others = next_finish
+                .min(next_rung)
+                .min(next_fault)
+                .min(next_introspect.unwrap_or(f64::INFINITY));
+            if pending_arrival <= now + cfg.coalesce_window_s + 1e-9
+                && pending_arrival <= others
+            {
+                coalesced += 1;
+                if trace.is_enabled() {
+                    trace.instant(
+                        "sched",
+                        "coalesce",
+                        Json::obj(vec![
+                            ("until", Json::num(pending_arrival)),
+                            (
+                                "window_s",
+                                Json::num(cfg.coalesce_window_s),
+                            ),
+                        ]),
+                    );
+                }
+                continue;
+            }
+        }
+
         // (4) replan: periodic introspection always preempts everything;
         // arrival/departure events do so only when the policy opts in;
         // fault events count as set changes (victims went pending,
@@ -939,6 +1019,7 @@ pub fn simulate_online_perf(jobs: &[OnlineJob], rungs: Option<&RungConfig>,
         },
         goodput: (busy_gpu_seconds - fb.lost_work_gpu_s).max(0.0)
             / (cluster.total_gpus() as f64 * makespan.max(1e-9)),
+        coalesced_events: coalesced,
     }
 }
 
@@ -1323,6 +1404,44 @@ mod tests {
             let fin = r.finish_times[id].1;
             assert!((jct - (fin - jobs[id].arrival_s)).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn coalescing_folds_staggered_arrivals_into_one_replan() {
+        let (_, profiles, cluster) = setup(4);
+        // arrivals at 0/10/20/30 s; runtimes are hours, so nothing else
+        // fires inside the burst
+        let jobs = online_jobs(4, 10.0);
+        let base = simulate_online(&jobs, None, &profiles, &cluster,
+                                   &mut Fifo, &SimConfig::default());
+        assert_eq!(base.coalesced_events, 0,
+                   "window 0 must never coalesce");
+        let cfg = SimConfig { coalesce_window_s: 60.0,
+                              ..SimConfig::default() };
+        let r = simulate_online(&jobs, None, &profiles, &cluster,
+                                &mut Fifo, &cfg);
+        assert_eq!(r.completed.len(), 4);
+        assert!(r.peak_gpus <= cluster.total_gpus());
+        assert_eq!(r.coalesced_events, 2,
+                   "arrival instants 10 s and 20 s must defer into 30 s");
+        // deferral is deterministic
+        let r2 = simulate_online(&jobs, None, &profiles, &cluster,
+                                 &mut Fifo, &cfg);
+        assert_eq!(r.finish_times, r2.finish_times);
+        assert_eq!(r.coalesced_events, r2.coalesced_events);
+    }
+
+    #[test]
+    fn coalescing_window_shorter_than_the_gap_is_inert() {
+        let (_, profiles, cluster) = setup(4);
+        let jobs = online_jobs(4, 10.0);
+        let cfg = SimConfig { coalesce_window_s: 5.0,
+                              ..SimConfig::default() };
+        let r = simulate_online(&jobs, None, &profiles, &cluster,
+                                &mut Fifo, &cfg);
+        assert_eq!(r.coalesced_events, 0,
+                   "no sibling lands within 5 s of any arrival");
+        assert_eq!(r.completed.len(), 4);
     }
 
     #[test]

@@ -142,6 +142,79 @@ pub struct Basis {
     pub at_upper: Vec<bool>,
 }
 
+impl Basis {
+    /// Carry this basis onto a RESIZED problem — the persistence API an
+    /// incremental master maintains across row/column edits (arrivals
+    /// append rows/columns, departures delete them; see
+    /// `saturn::incremental`).
+    ///
+    /// `row_from[r]` names the OLD row each new row `r` descends from
+    /// (`None` = brand-new row); `col_to[j]` names the NEW structural
+    /// index of each old structural column `j` (`None` = deleted).
+    /// `old_n`/`new_n` are the structural counts. Rules, per new row:
+    ///
+    ///  * a brand-new row starts with its own slack basic (dual-feasible
+    ///    start for the dual-simplex repair pass);
+    ///  * a surviving row keeps its old basic column, translated —
+    ///    structural via `col_to`, slack via the surviving-row map; a
+    ///    basic column that did not survive degrades to the row's own
+    ///    slack.
+    ///
+    /// `at_upper` states are carried for every surviving column and
+    /// default to the lower bound elsewhere. The result is a VALID
+    /// shape for the new matrix but not necessarily a nonsingular or
+    /// primal-feasible basis — [`Simplex::solve_warm`] already returns
+    /// `None` on singular refactorization, so callers fall back to a
+    /// cold solve and correctness never depends on the mapping.
+    pub fn remap(&self, row_from: &[Option<usize>], col_to: &[Option<usize>],
+                 old_n: usize, new_n: usize) -> Basis {
+        debug_assert_eq!(col_to.len(), old_n);
+        debug_assert_eq!(self.at_upper.len(), old_n + self.basic.len());
+        let old_m = self.basic.len();
+        let new_m = row_from.len();
+        // surviving old row -> new row
+        let mut new_of_old_row = vec![None; old_m];
+        for (nr, of) in row_from.iter().enumerate() {
+            if let Some(or) = *of {
+                if or < old_m {
+                    new_of_old_row[or] = Some(nr);
+                }
+            }
+        }
+        let mut basic = Vec::with_capacity(new_m);
+        for (nr, of) in row_from.iter().enumerate() {
+            let own_slack = new_n + nr;
+            let b = match *of {
+                Some(or) if or < old_m => {
+                    let ob = self.basic[or];
+                    if ob < old_n {
+                        col_to[ob].unwrap_or(own_slack)
+                    } else {
+                        match new_of_old_row[ob - old_n] {
+                            Some(nr2) => new_n + nr2,
+                            None => own_slack,
+                        }
+                    }
+                }
+                _ => own_slack,
+            };
+            basic.push(b);
+        }
+        let mut at_upper = vec![false; new_n + new_m];
+        for (j, to) in col_to.iter().enumerate() {
+            if let Some(nc) = *to {
+                at_upper[nc] = self.at_upper[j];
+            }
+        }
+        for (or, to) in new_of_old_row.iter().enumerate() {
+            if let Some(nr) = *to {
+                at_upper[new_n + nr] = self.at_upper[old_n + or];
+            }
+        }
+        Basis { basic, at_upper }
+    }
+}
+
 /// Per-solve diagnostics.
 #[derive(Debug, Clone, Default)]
 pub struct LpInfo {
@@ -1279,5 +1352,110 @@ mod tests {
         assert_eq!(warm.info.refactorizations, 1);
         assert_eq!(warm.info.eta_updates, warm.info.pivots);
         assert!(warm.result.optimal().is_some());
+    }
+
+    #[test]
+    fn identity_remap_round_trips_through_solve_warm() {
+        let mut lp = Lp::new(2);
+        lp.set_obj(0, -3.0);
+        lp.set_obj(1, -5.0);
+        lp.bound_le(0, 4.0);
+        lp.bound_le(1, 6.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let sx = Simplex::new(&lp);
+        let cold = sx.solve_cold(&lp.lower, &lp.upper);
+        let basis = cold.basis.expect("basis");
+        let row_from: Vec<Option<usize>> = (0..1).map(Some).collect();
+        let col_to: Vec<Option<usize>> = (0..2).map(Some).collect();
+        let mapped = basis.remap(&row_from, &col_to, 2, 2);
+        assert_eq!(mapped, basis);
+        let warm = sx
+            .solve_warm(&lp.lower, &lp.upper, &mapped)
+            .expect("identity remap reusable");
+        let (_, wobj) = warm.result.optimal().expect("optimal");
+        let (_, cobj) = cold.result.optimal().expect("optimal");
+        assert_close(wobj, cobj);
+    }
+
+    #[test]
+    fn row_and_column_append_remap_warm_solve_matches_cold() {
+        // solve a 2-var/1-row problem, then grow it by one column and
+        // one row (the arrival shape: new job = new column + new assign
+        // row) and warm-start the bigger problem from the mapped basis
+        let mut small = Lp::new(2);
+        small.set_obj(0, -3.0);
+        small.set_obj(1, -5.0);
+        small.bound_le(0, 4.0);
+        small.bound_le(1, 6.0);
+        small.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let sxs = Simplex::new(&small);
+        let root = sxs.solve_cold(&small.lower, &small.upper);
+        let basis = root.basis.expect("basis");
+
+        let mut big = Lp::new(3);
+        big.set_obj(0, -3.0);
+        big.set_obj(1, -5.0);
+        big.set_obj(2, -4.0);
+        big.bound_le(0, 4.0);
+        big.bound_le(1, 6.0);
+        big.bound_le(2, 3.0);
+        big.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        big.add(vec![(2, 2.0)], Cmp::Le, 4.0);
+        let sxb = Simplex::new(&big);
+
+        let row_from = vec![Some(0), None];
+        let col_to = vec![Some(0), Some(1)];
+        let mapped = basis.remap(&row_from, &col_to, 2, 3);
+        assert_eq!(mapped.basic.len(), 2);
+        assert_eq!(mapped.at_upper.len(), 5);
+        // the fresh row starts on its own slack
+        assert_eq!(mapped.basic[1], 3 + 1);
+        let warm = sxb
+            .solve_warm(&big.lower, &big.upper, &mapped)
+            .expect("mapped basis reusable");
+        let cold = sxb.solve_cold(&big.lower, &big.upper);
+        let (_, wobj) = warm.result.optimal().expect("optimal");
+        let (_, cobj) = cold.result.optimal().expect("optimal");
+        assert_close(wobj, cobj);
+    }
+
+    #[test]
+    fn deletion_remap_degrades_to_own_slack_and_stays_usable() {
+        // departure shape: drop a column and its row; whatever was
+        // basic there must fall back to the surviving rows' own slacks
+        let mut big = Lp::new(3);
+        for (j, v) in [3.0, 5.0, 4.0].iter().enumerate() {
+            big.set_obj(j, -v);
+            big.bound_le(j, 4.0);
+        }
+        big.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        big.add(vec![(2, 2.0)], Cmp::Le, 4.0);
+        let sxb = Simplex::new(&big);
+        let root = sxb.solve_cold(&big.lower, &big.upper);
+        let basis = root.basis.expect("basis");
+
+        let mut small = Lp::new(2);
+        small.set_obj(0, -3.0);
+        small.set_obj(1, -5.0);
+        small.bound_le(0, 4.0);
+        small.bound_le(1, 4.0);
+        small.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let sxs = Simplex::new(&small);
+
+        // keep row 0 / cols 0-1; drop col 2 and row 1
+        let mapped = basis.remap(&[Some(0)], &[Some(0), Some(1), None], 3, 2);
+        assert_eq!(mapped.basic.len(), 1);
+        assert_eq!(mapped.at_upper.len(), 3);
+        // every basic entry indexes into the new problem
+        assert!(mapped.basic.iter().all(|&b| b < 3));
+        let cold = sxs.solve_cold(&small.lower, &small.upper);
+        let (_, cobj) = cold.result.optimal().expect("optimal");
+        // a mapped basis is allowed to be rejected (cold fallback), but
+        // when accepted it must reach the same optimum
+        if let Some(warm) = sxs.solve_warm(&small.lower, &small.upper, &mapped)
+        {
+            let (_, wobj) = warm.result.optimal().expect("optimal");
+            assert_close(wobj, cobj);
+        }
     }
 }

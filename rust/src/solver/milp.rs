@@ -72,6 +72,16 @@ pub struct MilpOptions {
     /// on the product rule's 1.0 defaults, i.e. most-fractional.
     /// Revised engine only; the seed reference ignores it.
     pub strong_branch_k: usize,
+    /// Anytime wall-clock budget, milliseconds: when set, the search
+    /// stops at `min(deadline_ms/1e3, time_limit_s)` and returns the
+    /// best incumbent with its bound (`MilpStats::budget_hit` records
+    /// that the EXPLICIT budget — not the default safety limit — is
+    /// what fired). `None` (the default) keeps the historical limits.
+    pub deadline_ms: Option<f64>,
+    /// Anytime node budget: caps branch-and-bound nodes at
+    /// `min(node_budget, max_nodes)`. Deterministic (unlike the wall
+    /// deadline), so tests pin budget semantics with it. `None` off.
+    pub node_budget: Option<usize>,
     /// Flight-recorder handle (`obs::trace`). Off by default; when
     /// enabled the revised engine emits `solver/lp_root` and
     /// `solver/bnb` spans. Never affects the search itself.
@@ -88,6 +98,8 @@ impl Default for MilpOptions {
             threads: 1,
             engine: MilpEngine::Revised,
             strong_branch_k: 0,
+            deadline_ms: None,
+            node_budget: None,
             trace: Tracer::default(),
         }
     }
@@ -115,6 +127,11 @@ pub struct MilpStats {
     pub best_bound: f64,
     /// Relative incumbent/bound gap at termination (0 when proved).
     pub gap: f64,
+    /// An EXPLICIT anytime budget (`MilpOptions::deadline_ms` /
+    /// `node_budget`) stopped the search — distinct from the default
+    /// `max_nodes`/`time_limit_s` safety valves, so callers can count
+    /// budget-truncated solves separately.
+    pub budget_hit: bool,
 }
 
 impl MilpStats {
@@ -330,10 +347,13 @@ fn solve_revised(
     if traced {
         opts.trace.begin("solver", "bnb", Json::obj(vec![]));
     }
+    let (node_cap, time_cap) = effective_caps(opts);
     loop {
-        if stats.nodes >= opts.max_nodes
-            || start.elapsed().as_secs_f64() > opts.time_limit_s
+        if stats.nodes >= node_cap
+            || start.elapsed().as_secs_f64() > time_cap
         {
+            stats.budget_hit =
+                budget_fired(opts, stats.nodes, start.elapsed().as_secs_f64());
             break;
         }
         // assemble a fixed-size batch of still-interesting nodes
@@ -714,10 +734,13 @@ fn solve_reference(
             feasible_objective(lp, &x).map(|obj| (x, obj))
         });
 
+    let (node_cap, time_cap) = effective_caps(opts);
     while let Some(node) = heap.pop() {
-        if stats.nodes >= opts.max_nodes
-            || start.elapsed().as_secs_f64() > opts.time_limit_s
+        if stats.nodes >= node_cap
+            || start.elapsed().as_secs_f64() > time_cap
         {
+            stats.budget_hit =
+                budget_fired(opts, stats.nodes, start.elapsed().as_secs_f64());
             // push it back so the frontier bound survives for reporting
             heap.push(node);
             break;
@@ -824,6 +847,23 @@ fn solve_reference(
 // ---------------------------------------------------------------------------
 // Shared helpers
 // ---------------------------------------------------------------------------
+
+/// Node/time caps with the anytime budgets folded in: the search stops
+/// at whichever of (budget, default limit) is tighter.
+fn effective_caps(opts: &MilpOptions) -> (usize, f64) {
+    let node_cap = opts.max_nodes.min(opts.node_budget.unwrap_or(usize::MAX));
+    let time_cap = opts
+        .time_limit_s
+        .min(opts.deadline_ms.map(|d| d / 1e3).unwrap_or(f64::INFINITY));
+    (node_cap, time_cap)
+}
+
+/// Whether the stop that just fired is attributable to an EXPLICIT
+/// anytime budget (vs the default `max_nodes`/`time_limit_s` valves).
+fn budget_fired(opts: &MilpOptions, nodes: usize, elapsed_s: f64) -> bool {
+    opts.node_budget.map(|b| nodes >= b).unwrap_or(false)
+        || opts.deadline_ms.map(|d| elapsed_s > d / 1e3).unwrap_or(false)
+}
 
 /// Objective value of `x` if it satisfies every constraint AND bound of
 /// `lp` (the integer restriction is the caller's concern — `x` arrives
@@ -1154,6 +1194,75 @@ mod tests {
         assert!(stats.warm_hits > 0, "no warm-basis node solves");
         assert!(stats.warm_hit_rate() > 0.0);
         assert!(stats.lp_pivots > 0);
+    }
+
+    #[test]
+    fn node_budget_truncates_and_reports_budget_hit() {
+        let lp = knapsack_lp();
+        let ints = [0usize, 1, 2];
+        let (res, stats) = solve_with_stats(&lp, &ints, &MilpOptions {
+            node_budget: Some(0),
+            ..Default::default()
+        });
+        assert!(stats.budget_hit, "explicit node budget did not register");
+        match res {
+            MilpResult::LimitReached { nodes, .. } => assert_eq!(nodes, 0),
+            other => panic!("expected LimitReached, got {other:?}"),
+        }
+        // the default limits alone never set the budget flag
+        let (_, s2) = solve_with_stats(&lp, &ints, &MilpOptions {
+            max_nodes: 0,
+            ..Default::default()
+        });
+        assert!(!s2.budget_hit, "default max_nodes flagged as budget");
+    }
+
+    #[test]
+    fn exhausted_budget_keeps_the_warm_incumbent() {
+        // anytime contract: with a vetted warm start, a zero budget
+        // still returns that incumbent (never worse than the seed)
+        let lp = knapsack_lp();
+        let (res, stats) = solve_with_stats(&lp, &[0, 1, 2], &MilpOptions {
+            node_budget: Some(0),
+            warm_start: Some(vec![1.0, 0.0, 1.0]), // feasible, value 17
+            ..Default::default()
+        });
+        assert!(stats.budget_hit);
+        let MilpResult::Solved { objective, proved_optimal, best_bound, .. } =
+            res
+        else {
+            panic!("warm incumbent lost under a zero budget");
+        };
+        assert!(!proved_optimal);
+        assert_close(objective, -17.0);
+        assert!(best_bound <= objective + 1e-9);
+    }
+
+    #[test]
+    fn generous_budget_changes_nothing() {
+        let lp = knapsack_lp();
+        let ints = [0usize, 1, 2];
+        let base = solve_with_stats(&lp, &ints, &MilpOptions::default());
+        let budgeted = solve_with_stats(&lp, &ints, &MilpOptions {
+            node_budget: Some(1_000_000),
+            deadline_ms: Some(3600.0 * 1e3),
+            ..Default::default()
+        });
+        assert_eq!(base.0, budgeted.0);
+        assert_eq!(base.1.nodes, budgeted.1.nodes);
+        assert!(!budgeted.1.budget_hit);
+    }
+
+    #[test]
+    fn reference_engine_honors_the_node_budget() {
+        let lp = knapsack_lp();
+        let (res, stats) = solve_with_stats(&lp, &[0, 1, 2], &MilpOptions {
+            engine: MilpEngine::DenseReference,
+            node_budget: Some(0),
+            ..Default::default()
+        });
+        assert!(stats.budget_hit);
+        assert!(matches!(res, MilpResult::LimitReached { .. }));
     }
 
     #[test]

@@ -69,6 +69,14 @@ pub struct TraceConfig {
     pub tenants: usize,
     /// Completion deadline granted to every job, seconds after arrival.
     pub deadline_slack_s: Option<f64>,
+    /// Within a [`ArrivalProcess::Burst`], the k-th multi-job of a
+    /// burst arrives `k * burst_stagger_s` seconds after the burst
+    /// instant instead of exactly on it — 64 siblings submitted over a
+    /// few seconds rather than one coincident tick. This is the shape
+    /// the event-coalescing window (`SimConfig::coalesce_window_s`)
+    /// folds back into one re-solve. `0` (the default) keeps bursts
+    /// coincident, bit-identical to the historical generator.
+    pub burst_stagger_s: f64,
 }
 
 impl Default for TraceConfig {
@@ -82,6 +90,7 @@ impl Default for TraceConfig {
             epochs: 1,
             tenants: 2,
             deadline_slack_s: None,
+            burst_stagger_s: 0.0,
         }
     }
 }
@@ -122,13 +131,17 @@ pub fn generate_trace(cfg: &TraceConfig) -> Trace {
         ArrivalProcess::Burst { rate_per_hour, burst_size } => {
             let rate = (rate_per_hour / 3600.0).max(1e-9);
             let burst = burst_size.max(1);
+            let stagger = cfg.burst_stagger_s.max(0.0);
             while arrivals.len() < cfg.multijobs {
                 t += rng.exp(rate);
-                for _ in 0..burst {
+                for k in 0..burst {
                     if arrivals.len() < cfg.multijobs {
-                        arrivals.push(t);
+                        arrivals.push(t + k as f64 * stagger);
                     }
                 }
+                // keep arrival instants (and thus job ids) monotone
+                // even when the staggered burst outlasts the next gap
+                t = arrivals.last().copied().unwrap_or(t);
             }
         }
     }
@@ -159,7 +172,8 @@ pub fn generate_trace(cfg: &TraceConfig) -> Trace {
             });
         }
     }
-    Trace { jobs, groups: arrivals.len(), horizon_s: t }
+    let horizon_s = arrivals.iter().copied().fold(t, f64::max);
+    Trace { jobs, groups: arrivals.len(), horizon_s }
 }
 
 #[cfg(test)]
@@ -224,6 +238,41 @@ mod tests {
             t.jobs.iter().map(|j| j.arrival_s).collect();
         instants.dedup();
         assert_eq!(instants.len(), 2, "{instants:?}");
+    }
+
+    #[test]
+    fn burst_stagger_spreads_siblings_and_extends_horizon() {
+        let cfg = TraceConfig {
+            seed: 3,
+            multijobs: 6,
+            process: ArrivalProcess::Burst { rate_per_hour: 1.0,
+                                             burst_size: 3 },
+            burst_stagger_s: 2.0,
+            ..Default::default()
+        };
+        let t = generate_trace(&cfg);
+        // every multi-job now lands on its own instant, in order
+        let instants: Vec<f64> =
+            t.jobs.iter().map(|j| j.arrival_s).collect();
+        let mut uniq = instants.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6, "{instants:?}");
+        let mut last = 0.0f64;
+        for &a in &instants {
+            assert!(a >= last - 1e-12, "staggered arrivals not monotone");
+            last = last.max(a);
+        }
+        assert!(t.horizon_s >= last - 1e-9,
+                "horizon {} < last staggered arrival {last}", t.horizon_s);
+        // zero stagger reproduces the historical coincident bursts
+        let t0 = generate_trace(&TraceConfig {
+            burst_stagger_s: 0.0,
+            ..cfg
+        });
+        let mut i0: Vec<f64> =
+            t0.jobs.iter().map(|j| j.arrival_s).collect();
+        i0.dedup();
+        assert_eq!(i0.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Property-based invariants for the incremental re-solve path
+//! (DESIGN.md §4.9), via the in-repo `util::prop` framework:
+//!
+//!  * with budgets off, a delta re-solve is objective-identical
+//!    (<= 1e-6 relative) to a from-scratch solve across random
+//!    arrival/departure mixes — in both threading regimes (the
+//!    single-threaded colgen master at <= 64 jobs and the 4-thread
+//!    sharded cells above it);
+//!  * a budget-capped solve is never worse than the greedy fallback
+//!    (the anytime floor);
+//!  * incremental online runs conserve jobs, stay within capacity, and
+//!    replay deterministically; with the knobs off they are
+//!    bit-identical to the plain replay;
+//!  * a staggered burst under a coalescing window folds events without
+//!    losing jobs.
+
+use saturn::cluster::ClusterSpec;
+use saturn::objective::Objective;
+use saturn::obs::trace::Tracer;
+use saturn::online::{profile_trace, run_trace, run_trace_knobs,
+                     OnlineKnobs};
+use saturn::parallelism::default_library;
+use saturn::perf::PerfModel;
+use saturn::saturn::solver::{plan_selection_probe, solve_joint,
+                             solve_joint_budgeted, SolveBudget,
+                             SolverMode};
+use saturn::saturn::IncrementalSolver;
+use saturn::sim::engine::{RungConfig, SimConfig};
+use saturn::solver::milp::MilpEngine;
+use saturn::trials::{profile_analytic, ProfileTable};
+use saturn::util::prop::{forall, Strategy};
+use saturn::util::rng::Rng;
+use saturn::workload::{generate_trace, toy_workload, ArrivalProcess,
+                       TraceConfig};
+
+fn profile_n(n: usize, cluster: &ClusterSpec)
+    -> (Vec<(usize, u64)>, ProfileTable) {
+    let jobs = toy_workload(n);
+    let lib = default_library();
+    let profiles = profile_analytic(&jobs, &lib, cluster);
+    let roster: Vec<(usize, u64)> =
+        jobs.iter().map(|j| (j.id, j.total_steps())).collect();
+    (roster, profiles)
+}
+
+/// Seed an incremental solver from a full solve of `before`, replay the
+/// event to `after` as a delta, and check the tight-gap parity of the
+/// state-seeded probe against the from-scratch probe.
+fn check_delta_parity(before: &[(usize, u64)], after: &[(usize, u64)],
+                      profiles: &ProfileTable, cluster: &ClusterSpec,
+                      mode: SolverMode) -> Result<(), String> {
+    let (plan, _) = solve_joint_budgeted(
+        before, profiles, cluster, mode, 1.0, None, Objective::Makespan,
+        &[], &Tracer::off(), None, SolveBudget::default());
+    let mut inc = IncrementalSolver::new();
+    inc.note_full(before, &plan, Objective::Makespan, None);
+    if !inc.wants_delta(after, Objective::Makespan, false, None) {
+        return Err(format!(
+            "heuristic declined a {}->{} job event", before.len(),
+            after.len()));
+    }
+    // a failure cause must always route through the full path
+    if inc.wants_delta(after, Objective::Makespan, true, None) {
+        return Err("heuristic accepted a failure-cause event".into());
+    }
+    let delta = inc.solve_delta(after, profiles, cluster, 1.0, None,
+                                Objective::Makespan, &[], &Tracer::off(),
+                                None, SolveBudget::default());
+    if delta.is_none() {
+        return Err("delta re-solve failed on a plain event".into());
+    }
+    let (seeded, _) = inc
+        .parity_probe(after, profiles, cluster)
+        .ok_or("seeded parity probe failed")?;
+    let (scratch, _) =
+        plan_selection_probe(after, profiles, cluster, MilpEngine::Revised)
+            .ok_or("from-scratch probe failed")?;
+    let rel = (seeded - scratch).abs() / scratch.abs().max(1.0);
+    if rel > 1e-6 {
+        return Err(format!(
+            "seeded probe {seeded} vs scratch {scratch}: rel {rel}"));
+    }
+    Ok(())
+}
+
+/// Random event mixes: (n jobs total, departures k, arrivals a, nodes),
+/// constrained so the churn heuristic accepts (4 * (k + a) <= before).
+struct RandomEvent;
+
+impl Strategy for RandomEvent {
+    type Value = (i64, i64, i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.range(9, 15); // before-roster size
+        let k = rng.range(0, 3); // departures
+        let a = rng.range(0, 3); // arrivals
+        (n, k, a, rng.range(1, 3))
+    }
+}
+
+#[test]
+fn prop_delta_resolve_matches_full_probe_across_event_mixes() {
+    forall(57, 8, &RandomEvent, |&(n, k, a, nodes)| {
+        let (n, k, a) = (n as usize, k as usize, a as usize);
+        if 4 * (k + a) > n {
+            return Ok(()); // churn above the heuristic's budget
+        }
+        let cluster = ClusterSpec::p4d(nodes as u32);
+        let (roster, profiles) = profile_n(n + a, &cluster);
+        // before: the first n jobs; after: k of them departed plus the
+        // a new arrivals appended at the end of the id space
+        let before = &roster[..n];
+        let after: Vec<(usize, u64)> = roster[k..].to_vec();
+        check_delta_parity(before, &after, &profiles, &cluster,
+                           SolverMode::Joint)
+    });
+}
+
+#[test]
+fn delta_parity_holds_in_the_sharded_regime() {
+    // 72 jobs sits above DELTA_UNSHARDED_MAX (64): the delta path runs
+    // the 4-thread sharded cells instead of the single colgen master
+    let cluster = ClusterSpec::p4d(2);
+    let (roster, profiles) = profile_n(72, &cluster);
+    let before = &roster[..68];
+    let after: Vec<(usize, u64)> = roster[2..].to_vec();
+    check_delta_parity(before, &after, &profiles, &cluster,
+                       SolverMode::Sharded { cell_size: 64 })
+        .expect("sharded-regime delta parity");
+}
+
+/// Random plain instances: (n jobs, nodes).
+struct RandomInstance;
+
+impl Strategy for RandomInstance {
+    type Value = (i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (rng.range(2, 12), rng.range(1, 3))
+    }
+}
+
+#[test]
+fn prop_budgeted_solve_is_never_worse_than_greedy() {
+    forall(58, 10, &RandomInstance, |&(n, nodes)| {
+        let cluster = ClusterSpec::p4d(nodes as u32);
+        let (roster, profiles) = profile_n(n as usize, &cluster);
+        let (greedy, _) = solve_joint(&roster, &profiles, &cluster,
+                                      SolverMode::Heuristic);
+        // the tightest possible node budget: the anytime floor must
+        // still return at least the greedy incumbent
+        let budget = SolveBudget { deadline_ms: None, node_budget: Some(1) };
+        let (capped, _) = solve_joint_budgeted(
+            &roster, &profiles, &cluster, SolverMode::Joint, 1.0, None,
+            Objective::Makespan, &[], &Tracer::off(), None, budget);
+        let bound = greedy.predicted_makespan_s;
+        if capped.predicted_makespan_s > bound * (1.0 + 1e-9) {
+            return Err(format!(
+                "budgeted makespan {} above greedy floor {bound}",
+                capped.predicted_makespan_s));
+        }
+        Ok(())
+    });
+}
+
+/// Random streaming scenarios: (seed, multijobs, incremental flag).
+struct RandomStream;
+
+impl Strategy for RandomStream {
+    type Value = (i64, i64, i64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (rng.range(0, 1000), rng.range(2, 4), rng.range(0, 2))
+    }
+}
+
+fn stream_trace(seed: i64, multijobs: i64, stagger_s: f64)
+    -> saturn::workload::Trace {
+    generate_trace(&TraceConfig {
+        seed: seed as u64,
+        multijobs: multijobs as usize,
+        process: ArrivalProcess::Burst { rate_per_hour: 1.5, burst_size: 2 },
+        grid_lrs: 2,
+        grid_batches: 1,
+        epochs: 1,
+        tenants: 2,
+        deadline_slack_s: None,
+        burst_stagger_s: stagger_s,
+    })
+}
+
+#[test]
+fn prop_incremental_runs_conserve_jobs_and_replay_deterministically() {
+    forall(59, 5, &RandomStream, |&(seed, mj, inc_flag)| {
+        let trace = stream_trace(seed, mj, 0.0);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        let knobs = OnlineKnobs {
+            incremental: inc_flag == 1,
+            ..OnlineKnobs::default()
+        };
+        let run = || {
+            let mut perf = PerfModel::exact(&profiles);
+            run_trace_knobs(&trace, Some(&rungs), &mut perf, &cluster,
+                            "online-saturn", SolverMode::Joint, None,
+                            &SimConfig::default(), knobs)
+        };
+        let (a, am) = run();
+        let (b, _) = run();
+        if am.completed + am.early_stopped != trace.jobs.len() {
+            return Err("job conservation violated".into());
+        }
+        if a.peak_gpus > cluster.total_gpus() {
+            return Err(format!("peak {} > fleet", a.peak_gpus));
+        }
+        if a.finish_times != b.finish_times || a.jct_s != b.jct_s
+            || a.launches != b.launches {
+            return Err("incremental replay diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knobs_off_is_bit_identical_to_plain_replay() {
+    forall(60, 5, &RandomStream, |&(seed, mj, _)| {
+        let trace = stream_trace(seed, mj, 0.0);
+        let cluster = ClusterSpec::p4d(1);
+        let profiles = profile_trace(&trace, &cluster);
+        let rungs = RungConfig::halving();
+        let (plain, _) = run_trace(&trace, Some(&rungs), &profiles,
+                                   &cluster, "online-saturn",
+                                   SolverMode::Joint);
+        let mut perf = PerfModel::exact(&profiles);
+        let (off, _) = run_trace_knobs(&trace, Some(&rungs), &mut perf,
+                                       &cluster, "online-saturn",
+                                       SolverMode::Joint, None,
+                                       &SimConfig::default(),
+                                       OnlineKnobs::default());
+        if plain.finish_times != off.finish_times
+            || plain.jct_s != off.jct_s
+            || plain.launches != off.launches
+            || off.coalesced_events != 0 {
+            return Err("knobs-off replay differs from plain replay".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn staggered_burst_under_a_window_coalesces_without_losing_jobs() {
+    let trace = stream_trace(7, 4, 2.0);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    let mut perf = PerfModel::exact(&profiles);
+    let cfg = SimConfig { coalesce_window_s: 30.0, ..SimConfig::default() };
+    let knobs = OnlineKnobs { incremental: true, ..OnlineKnobs::default() };
+    let (r, m) = run_trace_knobs(&trace, Some(&rungs), &mut perf, &cluster,
+                                 "online-saturn", SolverMode::Joint, None,
+                                 &cfg, knobs);
+    assert!(r.coalesced_events > 0,
+            "staggered siblings 2 s apart must fold under a 30 s window");
+    assert_eq!(m.coalesced_events, r.coalesced_events);
+    assert_eq!(m.completed + m.early_stopped, trace.jobs.len());
+    assert!(r.peak_gpus <= cluster.total_gpus());
+}
+
+#[test]
+fn budget_capped_online_run_still_completes_every_job() {
+    let trace = stream_trace(11, 3, 0.0);
+    let cluster = ClusterSpec::p4d(1);
+    let profiles = profile_trace(&trace, &cluster);
+    let rungs = RungConfig::halving();
+    let mut perf = PerfModel::exact(&profiles);
+    let knobs = OnlineKnobs {
+        incremental: true,
+        resolve_budget_ms: None, // wall budgets are timing-dependent
+        node_budget: Some(1),
+    };
+    let (_, m) = run_trace_knobs(&trace, Some(&rungs), &mut perf, &cluster,
+                                 "online-saturn", SolverMode::Joint, None,
+                                 &SimConfig::default(), knobs);
+    assert_eq!(m.completed + m.early_stopped, trace.jobs.len(),
+               "a node-budget cap must degrade quality, not liveness");
+}

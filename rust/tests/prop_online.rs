@@ -172,6 +172,7 @@ fn build_trace(seed: i64, multijobs: i64, bursty: i64)
         epochs: 1,
         tenants: 2,
         deadline_slack_s: None,
+        burst_stagger_s: 0.0,
     })
 }
 
